@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md §Roofline markdown table from the sweep JSONs.
+
+  PYTHONPATH=src python -m benchmarks.report [--append]
+"""
+import argparse
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load_all():
+    recs = {}
+    for f in ("results/dryrun.json", "results/dryrun_lm.json"):
+        p = os.path.join(ROOT, f)
+        if os.path.exists(p):
+            for r in json.load(open(p)):
+                key = (r["arch"], r["shape"], r["multi_pod"], r.get("variant"))
+                recs[key] = r  # later files win
+    return recs
+
+
+def fmt(x):
+    return f"{x:.2e}" if isinstance(x, float) else str(x)
+
+
+def table(recs, *, variant=None):
+    lines = ["| arch | shape | mesh | kind | fit | compute s | memory s | "
+             "collective s | dominant | roofline frac | useful FLOPs |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    order = sorted(recs.values(), key=lambda r: (r["arch"], r["shape"],
+                                                 r["multi_pod"]))
+    for r in order:
+        if r.get("variant") != variant:
+            continue
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — |"
+                         f" — | — | skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | ERROR |"
+                         f" — | — | — | — | {r.get('error','')[:40]} | — | — |")
+            continue
+        roof = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['kind']} |"
+            f" {'Y' if r['per_device']['fits_16gb'] else 'N'} |"
+            f" {roof['compute_s']:.2e} | {roof['memory_s']:.2e} |"
+            f" {roof['collective_s']:.2e} | {roof['dominant']} |"
+            f" {roof['roofline_fraction']:.2f} |"
+            f" {('%.2f' % uf) if uf else '—'} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--append", action="store_true",
+                    help="append the table to EXPERIMENTS.md")
+    args = ap.parse_args()
+    recs = load_all()
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    md = (f"\n## §Roofline — full baseline table ({n_ok} compiled cells)\n\n"
+          + table(recs) + "\n")
+    print(md)
+    if args.append:
+        with open(os.path.join(ROOT, "EXPERIMENTS.md"), "a") as f:
+            f.write(md)
+
+
+if __name__ == "__main__":
+    main()

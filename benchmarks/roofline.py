@@ -1,0 +1,32 @@
+"""Roofline report: reads the dry-run sweep JSON and prints per-cell terms.
+
+This is the §Roofline deliverable: compute/memory/collective terms (seconds),
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and HBM fit.
+"""
+import json
+import os
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+
+
+def run(path=DEFAULT):
+    rows = []
+    if not os.path.exists(path):
+        return [{"name": "roofline/missing", "us_per_call": float("nan"),
+                 "derived": f"run launch.dryrun --sweep first ({path})"}]
+    for r in json.load(open(path)):
+        if r.get("status") != "ok":
+            continue
+        roof = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/pods{1 + int(r['multi_pod'])}",
+            "us_per_call": round(roof["bound_s"] * 1e6, 1),
+            "derived": (f"dom={roof['dominant']}"
+                        f";cT={roof['compute_s']:.2e};mT={roof['memory_s']:.2e}"
+                        f";nT={roof['collective_s']:.2e}"
+                        f";roofline_frac={roof['roofline_fraction']:.2f}"
+                        f";useful_flops={'%.2f' % ratio if ratio else 'n/a'}"
+                        f";fits={r['per_device']['fits_16gb']}"),
+        })
+    return rows

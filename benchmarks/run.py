@@ -1,0 +1,15 @@
+"""Benchmark harness — one module per paper table. CSV: name,us_per_call,derived."""
+import sys
+
+
+def main() -> None:
+    from . import table1_spmv, table2_apps, roofline, bench_kernels
+    print("name,us_per_call,derived")
+    for mod in (table1_spmv, table2_apps, bench_kernels, roofline):
+        for row in mod.run():
+            print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

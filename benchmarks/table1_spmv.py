@@ -1,0 +1,68 @@
+"""Table I reproduction: staged SpMV speedups (base / +selective caching /
++DMA gather), paper: 10.0x / 19.8x / 29.2x vs a 4-socket Xeon.
+
+Two components:
+  (a) measured — wall time of the actual implementations on this host
+      (CPU; relative ordering + bandwidth discipline, not absolute TPU perf);
+  (b) modeled  — core/traffic.py machine model (paper-spec constants), whose
+      EMERGENT ratios are compared against the paper's Table I, including the
+      cache-everything pathology the paper reports as "slower than base".
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rmat, to_bbcsr, to_padded_ell
+from repro.core.algorithms import spmv, spmv_ell
+from repro.core.traffic import SPMV_PROFILES, XEON, PIUMA_NODE, speedup, time_per_elem
+from repro.kernels import ops
+
+PAPER = {"piuma_base": 10.0, "piuma_selective": 19.8, "piuma_dma": 29.2}
+
+
+def _bench(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(scale=13):
+    g = rmat(scale, 16, seed=0)
+    x = jnp.asarray(np.random.default_rng(0).random(g.n_cols, np.float32))
+    rows = []
+
+    f_base = jax.jit(lambda xx: spmv(g, xx))
+    t_base = _bench(f_base, x)
+    cols, vals, mask = to_padded_ell(g, 64)
+    f_ell = jax.jit(lambda xx: spmv_ell(cols, vals, mask, xx))
+    t_ell = _bench(f_ell, x)
+    bb = to_bbcsr(g, block_rows=512, block_cols=512, tile_nnz=512)
+    f_bb = jax.jit(lambda xx: ops.spmv_dma(bb, xx))
+    t_bb = _bench(f_bb, x, reps=2)
+
+    measured = {"piuma_base": t_base, "piuma_selective": t_ell, "piuma_dma": t_bb}
+    base_model = speedup(SPMV_PROFILES["piuma_base"])
+    for name in ["piuma_base", "piuma_cache_all", "piuma_selective", "piuma_dma"]:
+        s = speedup(SPMV_PROFILES[name])
+        rows.append({
+            "name": f"table1/{name}",
+            "us_per_call": round(measured.get(name, float("nan")), 1),
+            "derived": (f"modeled_speedup_vs_xeon={s:.1f}x"
+                        f";vs_base={s / base_model:.2f}x"
+                        + (f";paper={PAPER[name]}x" if name in PAPER else
+                           ";paper=slower_than_base")),
+        })
+    # bandwidth-utilization claim (paper: DMA version >95% of DRAM bw)
+    p = SPMV_PROFILES["piuma_dma"]
+    mem_bound = p.dram_bytes / (PIUMA_NODE.dram_bw * PIUMA_NODE.bw_efficiency)
+    util = mem_bound / time_per_elem(PIUMA_NODE, p)
+    rows.append({"name": "table1/dma_bw_utilization",
+                 "us_per_call": float("nan"),
+                 "derived": f"modeled_fraction_of_achievable_bw={util:.2f};paper=>0.95"})
+    return rows

@@ -1,0 +1,49 @@
+"""The paper's Table II workloads end-to-end on one RMAT graph.
+
+  PYTHONPATH=src python examples/graph_analytics.py [--scale 12]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rmat
+from repro.core.algorithms import (spmv, spmspv, pagerank, bfs, random_walks,
+                                   label_propagation, modularity, ties_sample)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--scale", type=int, default=12)
+args = ap.parse_args()
+
+g = rmat(args.scale, 16, seed=7)
+print(f"RMAT-{args.scale}: {g.n_rows} vertices, {g.nnz} edges")
+x = jnp.asarray(np.random.default_rng(0).random(g.n_cols, np.float32))
+key = jax.random.PRNGKey(0)
+
+
+def timed(name, fn):
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn())
+    print(f"  {name:24s} {1e3 * (time.perf_counter() - t0):8.1f} ms")
+    return out
+
+
+y = timed("SpMV", jax.jit(lambda: spmv(g, x)))
+ys = timed("SpMSpV (32 active)", jax.jit(lambda: spmspv(
+    g, jnp.arange(32, dtype=jnp.int32), jnp.ones(32), max_deg=256)))
+pr = timed("PageRank (20 it)", jax.jit(lambda: pagerank(g, iters=20)))
+lv = timed("BFS", jax.jit(lambda: bfs(g, 0, max_levels=48)))
+wk = timed("Random walks (4096x16)", jax.jit(lambda: random_walks(
+    g, jnp.arange(4096) % g.n_rows, 16, key)))
+lab = timed("Louvain (LPA, 8 it)", jax.jit(lambda: label_propagation(
+    g, iters=8, max_deg=64)))
+nodes, n_nodes, mask = timed("TIES sampler", jax.jit(lambda: ties_sample(
+    g, 512, 1024, key)))
+
+print(f"\n  pagerank mass          {float(pr.sum()):.4f}")
+print(f"  bfs reached            {int((lv >= 0).sum())}/{g.n_rows}")
+print(f"  communities            {len(np.unique(np.asarray(lab)))}")
+print(f"  modularity             {float(modularity(g, lab)):.4f}")
+print(f"  TIES nodes/edges       {int(n_nodes)}/{int(mask.sum())}")

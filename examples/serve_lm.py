@@ -1,0 +1,14 @@
+"""Batched LM serving (deliverable (b)): prefill + greedy decode against the
+mixtral smoke config (MoE + sliding-window attention + ring KV cache).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+import os
+
+os.environ.setdefault("PYTHONPATH", "src")
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "mixtral-8x7b",
+     "--smoke", "--batch", "4", "--prompt-len", "48", "--gen", "24"],
+    env={**os.environ}))

@@ -1,0 +1,2 @@
+"""repro: PIUMA (Programmable Integrated Unified Memory Architecture) on JAX/TPU."""
+__version__ = "0.1.0"

@@ -1,0 +1,28 @@
+"""Architecture registry: --arch <id> resolves here."""
+from . import (mistral_large_123b, qwen3_14b, minicpm3_4b,
+               llama4_maverick_400b, mixtral_8x7b, equiformer_v2, dimenet,
+               gatedgcn, gin_tu, fm, piuma_graph)
+from .common import (ArchConfig, SpecBundle, input_specs, shape_names,
+                     make_step, state_shapes, state_logical_axes,
+                     param_logical_axes, init_params)
+
+_REGISTRY = {
+    "mistral-large-123b": mistral_large_123b.config,
+    "qwen3-14b": qwen3_14b.config,
+    "minicpm3-4b": minicpm3_4b.config,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b.config,
+    "mixtral-8x7b": mixtral_8x7b.config,
+    "equiformer-v2": equiformer_v2.config,
+    "dimenet": dimenet.config,
+    "gatedgcn": gatedgcn.config,
+    "gin-tu": gin_tu.config,
+    "fm": fm.config,
+}
+
+ARCH_NAMES = list(_REGISTRY)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return _REGISTRY[name]()

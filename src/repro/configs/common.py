@@ -1,0 +1,320 @@
+"""ArchConfig + per-family shape tables + input_specs + step builders.
+
+Every assigned (architecture x input-shape) cell resolves here to:
+  * a model config (possibly shape-adapted, e.g. edge-chunk sizes),
+  * a batch of ShapeDtypeStructs + logical sharding axes,
+  * a step function (train / prefill / decode / serve / retrieval),
+  * state structure + logical axes (for FSDP/TP in_shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as TF
+from ..models import gnn as GNN
+from ..models import recsys as RS
+from ..optim import adamw
+from ..distributed.sharding import MeshRules, make_rules
+
+S = jax.ShapeDtypeStruct
+
+__all__ = ["ArchConfig", "SpecBundle", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES",
+           "shape_names", "input_specs", "param_logical_axes", "init_params",
+           "make_step", "state_shapes", "state_logical_axes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # lm | gnn | recsys
+    model: Any
+    smoke: Any
+    moment_dtype: Any = jnp.float32
+    skips: Dict[str, str] = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+
+@dataclasses.dataclass
+class SpecBundle:
+    kind: str                        # train | prefill | decode | serve | retrieval
+    model: Any                       # possibly shape-adapted model config
+    batch: Dict[str, Any]            # name -> ShapeDtypeStruct
+    batch_axes: Dict[str, tuple]     # name -> logical axes
+    cache: Optional[Dict[str, Any]] = None
+    cache_axes: Optional[Dict[str, tuple]] = None
+
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n=2708, e=10556, d_feat=1433, classes=7),
+    "minibatch_lg": dict(kind="train", n=169984, e=168960, d_feat=602,
+                         classes=41, masked=True),
+    "ogb_products": dict(kind="train", n=2449029, e=61859140, d_feat=100,
+                         classes=47),
+    "molecule": dict(kind="train", n=3840, e=8192, d_feat=11, graphs=128,
+                     task="regression"),
+}
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_cand=1_000_000),
+}
+
+_FAMILY_SHAPES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}
+
+
+def shape_names(ac: ArchConfig):
+    return list(_FAMILY_SHAPES[ac.family].keys())
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _lm_specs(ac: ArchConfig, shape_name: str) -> SpecBundle:
+    sh = LM_SHAPES[shape_name]
+    cfg: TF.LMConfig = ac.model
+    B, L = sh["batch"], sh["seq"]
+    if sh["kind"] == "train":
+        batch = {"tokens": S((B, L), jnp.int32)}
+        axes = {"tokens": ("batch", None)}
+        return SpecBundle("train", cfg, batch, axes)
+    if sh["kind"] == "prefill":
+        batch = {"tokens": S((B, L), jnp.int32)}
+        return SpecBundle("prefill", cfg, batch, {"tokens": ("batch", None)})
+    # decode: cache of seq_len (ring = window for SWA long-context)
+    max_len = L
+    if shape_name == "long_500k":
+        assert cfg.window is not None, "long_500k requires sub-quadratic attention"
+        max_len = cfg.window
+    cache_tree = jax.eval_shape(lambda: TF.init_cache(cfg, B, max_len))
+    G, P = cfg.n_groups, cfg.moe_period
+    if cfg.mla is not None:
+        cache_axes = {"ckv": (None, None, "batch", "seq_kv", None),
+                      "krope": (None, None, "batch", "seq_kv", None),
+                      "len": ()}
+    else:
+        cache_axes = {"k": (None, None, "batch", "seq_kv", None, None),
+                      "v": (None, None, "batch", "seq_kv", None, None),
+                      "len": ()}
+    batch = {"tokens": S((B, 1), jnp.int32)}
+    return SpecBundle("decode", cfg, batch, {"tokens": ("batch", None)},
+                      cache={k: v for k, v in cache_tree.items()},
+                      cache_axes=cache_axes)
+
+
+def _pad512(x: int) -> int:
+    """Pad graph dims to a multiple of 512 so both production meshes divide
+    them (padding edges carry src=dst=-1, padding nodes are masked)."""
+    return -(-x // 512) * 512
+
+
+def _gnn_specs(ac: ArchConfig, shape_name: str) -> SpecBundle:
+    sh = GNN_SHAPES[shape_name]
+    cfg: GNN.GNNConfig = ac.model
+    n, e, f = _pad512(sh["n"]), _pad512(sh["e"]), sh["d_feat"]
+    task = sh.get("task", "node")
+    cfg = dataclasses.replace(
+        cfg, d_feat=f, n_classes=sh.get("classes", 2), task=task,
+        # memory blocking for the big shapes
+        edge_chunk=(262144 if e > 1_000_000 else None),
+        triplet_chunk=(1_048_576 if e > 1_000_000 else None),
+    )
+    batch = {
+        "x": S((n, f), jnp.float32),
+        "src": S((e,), jnp.int32),
+        "dst": S((e,), jnp.int32),
+    }
+    axes = {"x": ("nodes", None), "src": ("edges",), "dst": ("edges",)}
+    if task == "regression":
+        batch["labels"] = S((sh["graphs"],), jnp.float32)
+        axes["labels"] = (None,)
+    else:
+        batch["labels"] = S((n,), jnp.int32)
+        axes["labels"] = ("nodes",)
+        # padded nodes are always masked out of the loss
+        batch["label_mask"] = S((n,), jnp.bool_)
+        axes["label_mask"] = ("nodes",)
+    if sh.get("graphs"):
+        batch["graph_id"] = S((n,), jnp.int32)
+        axes["graph_id"] = ("nodes",)
+        batch["node_mask"] = S((n,), jnp.bool_)
+        axes["node_mask"] = ("nodes",)
+    if cfg.arch in ("dimenet", "equiformer_v2"):
+        batch["pos"] = S((n, 3), jnp.float32)
+        axes["pos"] = ("nodes", None)
+    if cfg.arch == "dimenet":
+        t = min(4 * e, 256_000_000)
+        batch["triplet_kj"] = S((t,), jnp.int32)
+        batch["triplet_ji"] = S((t,), jnp.int32)
+        batch["angle"] = S((t,), jnp.float32)
+        axes.update(triplet_kj=("edges",), triplet_ji=("edges",), angle=("edges",))
+    if cfg.arch == "equiformer_v2":
+        nc = cfg.n_coef
+        batch["wigner"] = S((e, nc, nc), jnp.float32)
+        axes["wigner"] = ("edges", None, None)
+    return SpecBundle("train", cfg, batch, axes)
+
+
+def _recsys_specs(ac: ArchConfig, shape_name: str) -> SpecBundle:
+    sh = RECSYS_SHAPES[shape_name]
+    cfg: RS.FMConfig = ac.model
+    B = sh["batch"]
+    if sh["kind"] == "retrieval":
+        ncand = _pad512(sh["n_cand"])
+        batch = {"ids": S((1, cfg.n_fields), jnp.int32),
+                 "cand": S((ncand, cfg.embed_dim), jnp.float32),
+                 "cand_bias": S((ncand,), jnp.float32)}
+        axes = {"ids": (None, None), "cand": ("rows", None), "cand_bias": ("rows",)}
+        return SpecBundle("retrieval", cfg, batch, axes)
+    batch = {"ids": S((B, cfg.n_fields), jnp.int32)}
+    axes = {"ids": ("batch", None)}
+    if sh["kind"] == "train":
+        batch["labels"] = S((B,), jnp.float32)
+        axes["labels"] = ("batch",)
+        return SpecBundle("train", cfg, batch, axes)
+    return SpecBundle("serve", cfg, batch, axes)
+
+
+def input_specs(ac: ArchConfig, shape_name: str) -> SpecBundle:
+    if shape_name in ac.skips:
+        raise ValueError(f"{ac.name} skips {shape_name}: {ac.skips[shape_name]}")
+    return {"lm": _lm_specs, "gnn": _gnn_specs, "recsys": _recsys_specs}[ac.family](
+        ac, shape_name)
+
+
+# Named model-config transforms for perf hillclimbing (dryrun --variant X):
+# each is hypothesis -> change; results land in EXPERIMENTS.md §Perf.
+VARIANTS = {
+    # PIUMA fine-grained embedding exchange instead of GSPMD gather
+    "fm_dgas": lambda m: dataclasses.replace(m, use_dgas=True),
+    # halve DGAS all_to_all buffer capacity (graph models)
+    "dgas_cap2": lambda m: dataclasses.replace(m, dgas_cap_factor=2),
+    # larger / smaller edge streaming chunks (graph models)
+    "chunk_512k": lambda m: dataclasses.replace(m, edge_chunk=524288),
+    "chunk_128k": lambda m: dataclasses.replace(m, edge_chunk=131072),
+    # Megatron-style fused QKV + fused gate matmuls (LM)
+    "fused_qkv": lambda m: dataclasses.replace(m, fused_qkv=True),
+    # no sequence-parallel residuals (ablation; LM)
+}
+
+
+def apply_variant(bundle: SpecBundle, variant: Optional[str]) -> SpecBundle:
+    if not variant:
+        return bundle
+    bundle.model = VARIANTS[variant](bundle.model)
+    return bundle
+
+
+# ---------------------------------------------------------------------------
+# params / state
+# ---------------------------------------------------------------------------
+
+def init_params(ac: ArchConfig, model_cfg, key):
+    if ac.family == "lm":
+        return TF.init_params(model_cfg, key)
+    if ac.family == "gnn":
+        return GNN.init_params(model_cfg, key)
+    return RS.init_params(model_cfg, key)
+
+
+def param_logical_axes(ac: ArchConfig, model_cfg, params_shape):
+    if ac.family == "lm":
+        return TF.param_logical_axes(model_cfg)
+    if ac.family == "recsys":
+        return {"table": ("rows", None), "w0": ()}
+    # gnn params are small: replicate
+    return jax.tree.map(lambda x: (None,) * len(x.shape), params_shape)
+
+
+def state_shapes(ac: ArchConfig, model_cfg, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda: init_params(ac, model_cfg, key))
+    st = jax.eval_shape(
+        lambda: adamw.init_state_with_dtype(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_shape),
+            ac.moment_dtype))
+    return params_shape, st
+
+
+def state_logical_axes(ac: ArchConfig, model_cfg, params_shape):
+    pax = param_logical_axes(ac, model_cfg, params_shape)
+    return adamw.TrainState(params=pax, m=pax, v=pax, step=())
+
+
+def zip_with_axes(shape_tree, axes_tree, fn):
+    """tree.map substitute that treats the tuples in an axes tree as leaves."""
+    if isinstance(shape_tree, dict):
+        return {k: zip_with_axes(shape_tree[k], axes_tree[k], fn)
+                for k in shape_tree}
+    if isinstance(shape_tree, (list, tuple)) and not hasattr(shape_tree, "shape"):
+        return [zip_with_axes(s, a, fn) for s, a in zip(shape_tree, axes_tree)]
+    return fn(shape_tree, axes_tree)
+
+
+def param_shardings(rules: MeshRules, params_shape, pax):
+    """NamedShardings for a parameter pytree from its logical-axes pytree."""
+    return zip_with_axes(
+        params_shape, pax,
+        lambda s, ax: rules.input_sharding(s.shape, *(ax or ())))
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_step(ac: ArchConfig, bundle: SpecBundle, rules: MeshRules,
+              opt: Optional[adamw.AdamWConfig] = None) -> Callable:
+    """Returns the jittable step for this cell.
+
+    train:      step(state, batch) -> (state, metrics)
+    prefill:    step(params, batch) -> (logits, cache)
+    decode:     step(params, cache, batch) -> (logits, cache)
+    serve:      step(params, batch) -> scores
+    retrieval:  step(params, batch) -> scores
+    """
+    cfg = bundle.model
+    opt = opt or adamw.AdamWConfig()
+
+    if bundle.kind == "train":
+        def loss(params, batch):
+            if ac.family == "lm":
+                return TF.loss_fn(cfg, params, batch, rules)
+            if ac.family == "gnn":
+                return GNN.loss_fn(cfg, params, batch, rules)
+            return RS.loss_fn(cfg, params, batch, rules)
+
+        def step(state, batch):
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                state.params, batch)
+            new_state = adamw.apply_update(opt, state, grads)
+            return new_state, metrics
+        return step
+
+    if bundle.kind == "prefill":
+        return lambda params, batch: TF.prefill(cfg, params, batch["tokens"], rules)
+
+    if bundle.kind == "decode":
+        return lambda params, cache, batch: TF.decode_step(
+            cfg, params, cache, batch["tokens"], rules)
+
+    if bundle.kind == "serve":
+        return lambda params, batch: RS.fm_scores(cfg, params, batch["ids"], rules)
+
+    if bundle.kind == "retrieval":
+        return lambda params, batch: RS.retrieval_scores(
+            cfg, params, batch["ids"], batch["cand"], batch["cand_bias"], rules)
+
+    raise ValueError(bundle.kind)

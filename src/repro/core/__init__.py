@@ -1,0 +1,4 @@
+"""PIUMA core: DGAS + ATT, offload engines, graph substrate, algorithms."""
+from . import dgas, graph, offload, traffic
+from .dgas import ATT, interleave_rule, block_rule, degree_balanced_rule
+from .graph import CSR, BBCSR, rmat, uniform_random_graph, to_padded_ell, to_bbcsr

@@ -1,0 +1,17 @@
+from .spmv import spmv, spmv_ell, spmv_bbcsr, spmv_distributed
+from .spmspv import spmspv, spmspv_ell
+from .pagerank import pagerank, pagerank_distributed
+from .bfs import bfs, bfs_distributed
+from .random_walks import random_walks, random_walks_distributed
+from .louvain import label_propagation, modularity
+from .sampling import ties_sample, neighbor_sample
+
+__all__ = [
+    "spmv", "spmv_ell", "spmv_bbcsr", "spmv_distributed",
+    "spmspv", "spmspv_ell",
+    "pagerank", "pagerank_distributed",
+    "bfs", "bfs_distributed",
+    "random_walks", "random_walks_distributed",
+    "label_propagation", "modularity",
+    "ties_sample", "neighbor_sample",
+]

@@ -1,0 +1,92 @@
+"""Graph sampling: TIES (paper Table II) and layered neighbor sampling (GNN).
+
+TIES = Totally Induced Edge Sampling (Ahmed et al.): sample edges uniformly,
+keep the induced subgraph on their endpoints.
+
+`neighbor_sample` is the GraphSAGE-style layered fanout sampler required by
+the `minibatch_lg` GNN shape — with-replacement sampling straight out of CSR
+(each draw is the random-walk double-gather, a PIUMA fine-grained pattern).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import CSR
+from .. import offload
+
+__all__ = ["ties_sample", "neighbor_sample", "neighbor_sample_np"]
+
+
+def ties_sample(csr: CSR, n_edges_sample: int, max_nodes: int, key: jax.Array):
+    """Returns (node_set (max_nodes,) padded with -1, n_nodes, induced_edge_mask (nnz,))."""
+    nnz = int(csr.indices.shape[0])
+    rows = csr.row_ids()
+    eids = jax.random.randint(key, (n_edges_sample,), 0, nnz)
+    srcs = offload.dma_gather(rows, eids)
+    dsts = offload.dma_gather(csr.indices, eids)
+    cand = jnp.concatenate([srcs, dsts]).astype(jnp.int32)
+    cand = jnp.sort(cand)
+    keep = jnp.concatenate([jnp.array([True]), cand[1:] != cand[:-1]])
+    # compact unique ids to a prefix, pad with -1
+    order = jnp.argsort(~keep, stable=True)
+    uniq = jnp.where(jnp.arange(cand.shape[0]) < keep.sum(),
+                     jnp.take(cand, order), -1)
+    n_nodes = keep.sum()
+    node_set = uniq[:max_nodes]
+    # induced edges: both endpoints in the (sorted-prefix) node set
+    sorted_set = jnp.sort(jnp.where(node_set >= 0, node_set, jnp.int32(2**30)))
+
+    def member(v):
+        pos = jnp.searchsorted(sorted_set, v)
+        pos = jnp.clip(pos, 0, max_nodes - 1)
+        return jnp.take(sorted_set, pos) == v
+
+    mask = member(rows) & member(csr.indices)
+    return node_set, jnp.minimum(n_nodes, max_nodes), mask
+
+
+def neighbor_sample(csr: CSR, seeds: jnp.ndarray, fanouts: Sequence[int],
+                    key: jax.Array):
+    """Layered with-replacement fanout sampling.
+
+    Returns a list of node-id arrays: [seeds (B,), (B,f1), (B,f1,f2), ...].
+    Sink nodes self-sample (id repeated), keeping shapes static.
+    """
+    layers = [seeds.astype(jnp.int32)]
+    cur = seeds.astype(jnp.int32)
+    for i, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        flat = cur.reshape(-1)
+        start = offload.dma_gather(csr.indptr, flat)
+        deg = offload.dma_gather(csr.indptr, flat + 1) - start
+        r = jax.random.randint(sub, (flat.shape[0], f), 0, 1 << 30)
+        off = start[:, None] + r % jnp.maximum(deg, 1)[:, None]
+        nbr = offload.dma_gather(csr.indices, off)
+        nbr = jnp.where(deg[:, None] > 0, nbr, flat[:, None])
+        nxt = nbr.reshape(cur.shape + (f,))
+        layers.append(nxt)
+        cur = nxt
+    return layers
+
+
+def neighbor_sample_np(indptr: np.ndarray, indices: np.ndarray, seeds: np.ndarray,
+                       fanouts: Sequence[int], rng: np.random.Generator):
+    """Host-side (data pipeline) version of neighbor_sample."""
+    layers = [seeds.astype(np.int32)]
+    cur = seeds.astype(np.int64)
+    for f in fanouts:
+        flat = cur.reshape(-1)
+        start = indptr[flat]
+        deg = indptr[flat + 1] - start
+        r = rng.integers(0, 1 << 30, (flat.shape[0], f))
+        off = start[:, None] + r % np.maximum(deg, 1)[:, None]
+        nbr = indices[np.minimum(off, indices.shape[0] - 1)]
+        nbr = np.where(deg[:, None] > 0, nbr, flat[:, None])
+        nxt = nbr.reshape(cur.shape + (f,)).astype(np.int32)
+        layers.append(nxt)
+        cur = nxt
+    return layers

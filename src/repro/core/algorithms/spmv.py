@@ -1,0 +1,89 @@
+"""SpMV — the paper's §V.A case study, in every PIUMA flavor.
+
+Local versions:
+  spmv        — fine-grained gather + owner-side reduction (paper's base loop)
+  spmv_ell    — padded-row vectorized variant
+  spmv_bbcsr  — the Pallas DMA-gather kernel (selective caching + SPAD), see
+                kernels/spmv_dma.py
+
+Distributed version (shard_map):
+  spmv_distributed(mode="dgas")      — PIUMA: fine-grained remote gather of
+                                       exactly the needed vector elements
+  spmv_distributed(mode="allgather") — conventional baseline: replicate x
+                                       (the "move whole cache lines" analogue)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..dgas import ATT, block_rule
+from ..graph import CSR, BBCSR
+from .. import offload
+from .distgraph import ShardedGraph
+
+__all__ = ["spmv", "spmv_ell", "spmv_bbcsr", "spmv_distributed"]
+
+
+def spmv(csr: CSR, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x via fine-grained gather + segment reduction."""
+    vals = csr.values if csr.values is not None else jnp.ones_like(csr.indices, x.dtype)
+    gathered = offload.dma_gather(x, csr.indices)
+    contrib = vals * gathered
+    return jax.ops.segment_sum(contrib, csr.row_ids(), num_segments=csr.n_rows)
+
+
+def spmv_ell(cols: jnp.ndarray, vals: jnp.ndarray, mask: jnp.ndarray,
+             x: jnp.ndarray) -> jnp.ndarray:
+    """Padded-ELL SpMV: (n_rows, k) layout, one masked gather + row reduce."""
+    gathered = offload.dma_gather(x, cols)
+    return jnp.sum(jnp.where(mask, vals * gathered, 0.0), axis=1)
+
+
+def spmv_bbcsr(bb: BBCSR, x: jnp.ndarray, *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    from ...kernels import ops as kops
+    return kops.spmv_dma(bb, x, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Distributed
+# ---------------------------------------------------------------------------
+
+def _spmv_shard_dgas(src, dst, val, x_local, *, x_att: ATT, row_att: ATT, axis):
+    src, dst, val, x_local = src[0], dst[0], val[0], x_local[0]
+    xg = offload.dgas_gather(x_local, jnp.where(dst >= 0, dst, -1), x_att, axis,
+                             capacity=dst.shape[0])
+    contrib = jnp.where(src >= 0, val * xg, 0.0)
+    local_rows = jnp.where(src >= 0, row_att.local(jnp.maximum(src, 0)), -1)
+    y = jnp.zeros((row_att.per_shard,), x_local.dtype)
+    return offload.dma_scatter_add(y, local_rows, contrib)[None]
+
+
+def _spmv_shard_allgather(src, dst, val, x_local, *, x_att: ATT, row_att: ATT, axis):
+    src, dst, val, x_local = src[0], dst[0], val[0], x_local[0]
+    xg = offload.all_gather_gather(x_local, jnp.where(dst >= 0, dst, -1), x_att, axis)
+    contrib = jnp.where(src >= 0, val * xg, 0.0)
+    local_rows = jnp.where(src >= 0, row_att.local(jnp.maximum(src, 0)), -1)
+    y = jnp.zeros((row_att.per_shard,), x_local.dtype)
+    return offload.dma_scatter_add(y, local_rows, contrib)[None]
+
+
+def spmv_distributed(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,
+                     row_att: ATT, mesh: Mesh, *, axis=None,
+                     mode: str = "dgas") -> jnp.ndarray:
+    """y = A @ x with rows owned per `row_att` and x distributed per `x_att`.
+
+    Returns y stacked (S, per_shard) under `row_att` layout.
+    """
+    axis = axis if axis is not None else mesh.axis_names[0]
+    fn = {"dgas": _spmv_shard_dgas, "allgather": _spmv_shard_allgather}[mode]
+    fn = partial(fn, x_att=x_att, row_att=row_att, axis=axis)
+    spec = P(axis) if isinstance(axis, str) else P(tuple(axis))
+    mapped = shard_map(fn, mesh=mesh,
+                       in_specs=(spec, spec, spec, spec), out_specs=spec)
+    return mapped(g.src, g.dst, g.val, x_sharded)

@@ -1,0 +1,265 @@
+"""Graph substrate: CSR storage, RMAT synthesis, partitioning, kernel formats.
+
+PIUMA "directly operates on sparse data (e.g., CSR)"; this module is the CSR
+layer plus the two derived formats the TPU kernels need:
+
+* padded-ELL row blocks (per-row fixed budget) for vectorized per-row work, and
+* BBCSR — *block-bucketed* COO, nonzeros sorted by (column block, row), so a
+  Pallas kernel can DMA one dense-vector block into VMEM and service every
+  nonzero that touches it (the TPU-native re-expression of PIUMA's 8-byte
+  gather; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CSR", "rmat", "uniform_random_graph", "to_padded_ell", "to_bbcsr", "BBCSR"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row matrix / adjacency.
+
+    indptr:  (n_rows+1,) int32
+    indices: (nnz,) int32 column ids
+    values:  (nnz,) float — edge weights (None -> implicit 1.0 handled by callers)
+    """
+
+    indptr: jnp.ndarray
+    indices: jnp.ndarray
+    values: Optional[jnp.ndarray]
+    n_rows: int
+    n_cols: int
+
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.values), (self.n_rows, self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0], aux[1])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def degrees(self) -> jnp.ndarray:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def row_ids(self) -> jnp.ndarray:
+        """Expand indptr to a (nnz,) row id per nonzero (sorted)."""
+        return jnp.searchsorted(
+            self.indptr, jnp.arange(self.indices.shape[0], dtype=self.indptr.dtype), side="right"
+        ) - 1
+
+    def to_dense(self) -> jnp.ndarray:
+        vals = self.values if self.values is not None else jnp.ones_like(self.indices, jnp.float32)
+        out = jnp.zeros((self.n_rows, self.n_cols), vals.dtype)
+        return out.at[self.row_ids(), self.indices].add(vals)
+
+    @staticmethod
+    def from_coo(rows, cols, vals, n_rows, n_cols, *, sum_duplicates: bool = False) -> "CSR":
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        vals = None if vals is None else np.asarray(vals)
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order], cols[order]
+        if vals is not None:
+            vals = vals[order]
+        if sum_duplicates:
+            keep = np.ones(rows.shape[0], bool)
+            keep[1:] = (rows[1:] != rows[:-1]) | (cols[1:] != cols[:-1])
+            if vals is not None:
+                seg = np.cumsum(keep) - 1
+                vals = np.bincount(seg, weights=vals, minlength=int(keep.sum()))
+            rows, cols = rows[keep], cols[keep]
+        indptr = np.zeros(n_rows + 1, np.int64)
+        np.add.at(indptr, rows + 1, 1)
+        indptr = np.cumsum(indptr)
+        return CSR(
+            jnp.asarray(indptr, jnp.int32),
+            jnp.asarray(cols, jnp.int32),
+            None if vals is None else jnp.asarray(vals, jnp.float32),
+            int(n_rows),
+            int(n_cols),
+        )
+
+
+def rmat(scale: int, edge_factor: int = 16, *, a=0.57, b=0.19, c=0.19, seed: int = 0,
+         weighted: bool = True, dedup: bool = True) -> CSR:
+    """RMAT generator (Graph500 parameters by default). n = 2**scale vertices.
+
+    Matches the paper's evaluation input class ("RMAT-30 synthetic matrix",
+    scaled down for CPU validation).  Pure numpy; deterministic per seed.
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edge_factor
+    rows = np.zeros(m, np.int64)
+    cols = np.zeros(m, np.int64)
+    # per-bit quadrant choice
+    pa, pb, pc = a, b, c
+    for bit in range(scale):
+        r = rng.random(m)
+        go_right = (r >= pa + pc) & (r < pa + pc + pb) | (r >= pa + pb + pc)
+        go_down = (r >= pa) & (r < pa + pc) | (r >= pa + pb + pc)
+        rows |= go_down.astype(np.int64) << bit
+        cols |= go_right.astype(np.int64) << bit
+    vals = rng.random(m).astype(np.float32) if weighted else None
+    return CSR.from_coo(rows, cols, vals, n, n, sum_duplicates=dedup)
+
+
+def uniform_random_graph(n: int, avg_degree: int, *, seed: int = 0, weighted: bool = True) -> CSR:
+    rng = np.random.default_rng(seed)
+    m = n * avg_degree
+    rows = rng.integers(0, n, m)
+    cols = rng.integers(0, n, m)
+    vals = rng.random(m).astype(np.float32) if weighted else None
+    return CSR.from_coo(rows, cols, vals, n, n, sum_duplicates=True)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-facing formats
+# ---------------------------------------------------------------------------
+
+def to_padded_ell(csr: CSR, max_nnz_per_row: Optional[int] = None):
+    """Pad each row to a fixed nonzero budget.
+
+    Returns (cols (n_rows, k) int32, vals (n_rows, k) f32, mask (n_rows, k) bool).
+    Padding entries have col=0, val=0.
+    """
+    indptr = np.asarray(csr.indptr)
+    cols = np.asarray(csr.indices)
+    vals = np.asarray(csr.values) if csr.values is not None else np.ones_like(cols, np.float32)
+    deg = indptr[1:] - indptr[:-1]
+    k = int(max_nnz_per_row or deg.max())
+    out_c = np.zeros((csr.n_rows, k), np.int32)
+    out_v = np.zeros((csr.n_rows, k), np.float32)
+    mask = np.zeros((csr.n_rows, k), bool)
+    for r in range(csr.n_rows):  # host-side preprocessing; fine offline
+        d = min(int(deg[r]), k)
+        s = indptr[r]
+        out_c[r, :d] = cols[s:s + d]
+        out_v[r, :d] = vals[s:s + d]
+        mask[r, :d] = True
+    return jnp.asarray(out_c), jnp.asarray(out_v), jnp.asarray(mask)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BBCSR:
+    """Block-bucketed sparse format for the Pallas SpMV kernel.
+
+    Nonzeros are bucketed by (row block, column block) and sorted by
+    (row_block, col_block, row); each bucket is padded to a multiple of
+    ``tile_nnz``.  The kernel grid walks tiles in that order: the output row
+    block is revisited only *consecutively* (legal Pallas accumulation), and
+    for each (rb, cb) pair the dense-vector block is DMA'd into VMEM once
+    (PIUMA: "DMA gather into SPAD") and gathered/scattered with one-hot MXU
+    matmuls.  Every row block gets at least one (possibly all-padding) tile so
+    the output is fully initialized.
+
+    rows_local / cols_local : (n_tiles, tile_nnz) int32, local to the block
+    vals                    : (n_tiles, tile_nnz) f32 (0 on padding)
+    tile_rb / tile_cb       : (n_tiles,) int32 — owning row/col block
+    tile_init               : (n_tiles,) int32 — 1 on first tile of a row block
+    """
+
+    rows_local: jnp.ndarray
+    cols_local: jnp.ndarray
+    vals: jnp.ndarray
+    tile_rb: jnp.ndarray
+    tile_cb: jnp.ndarray
+    tile_init: jnp.ndarray
+    n_rows: int
+    n_cols: int
+    block_rows: int
+    block_cols: int
+    tile_nnz: int
+
+    def tree_flatten(self):
+        return (self.rows_local, self.cols_local, self.vals, self.tile_rb,
+                self.tile_cb, self.tile_init), (
+            self.n_rows, self.n_cols, self.block_rows, self.block_cols, self.tile_nnz)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_rb.shape[0])
+
+    @property
+    def n_row_blocks(self) -> int:
+        return -(-self.n_rows // self.block_rows)
+
+    @property
+    def n_col_blocks(self) -> int:
+        return -(-self.n_cols // self.block_cols)
+
+
+def to_bbcsr(csr: CSR, *, block_rows: int = 256, block_cols: int = 512,
+             tile_nnz: int = 512) -> BBCSR:
+    """Host-side conversion CSR -> BBCSR (see BBCSR docstring)."""
+    cols = np.asarray(csr.indices, np.int64)
+    vals = np.asarray(csr.values) if csr.values is not None else np.ones_like(cols, np.float32)
+    rows = np.asarray(csr.row_ids(), np.int64)
+    rb = rows // block_rows
+    cb = cols // block_cols
+    order = np.lexsort((rows, cb, rb))
+    rows, cols, vals, rb, cb = rows[order], cols[order], vals[order], rb[order], cb[order]
+
+    n_rb = -(-csr.n_rows // block_rows)
+    tiles_r, tiles_c, tiles_v, tiles_rb, tiles_cb = [], [], [], [], []
+    key = rb * (1 << 32) + cb
+    if rows.size:
+        starts = np.concatenate([[0], np.nonzero(key[1:] != key[:-1])[0] + 1,
+                                 [rows.shape[0]]])
+    else:
+        starts = np.array([0, 0])
+    seen_rb = set()
+    for gi in range(starts.shape[0] - 1):
+        s, e = int(starts[gi]), int(starts[gi + 1])
+        if e <= s:
+            continue
+        g_rb, g_cb = int(rb[s]), int(cb[s])
+        seen_rb.add(g_rb)
+        cnt = e - s
+        n_t = -(-cnt // tile_nnz)
+        pad = n_t * tile_nnz - cnt
+        r = np.concatenate([rows[s:e] - g_rb * block_rows, np.zeros(pad, np.int64)])
+        c = np.concatenate([cols[s:e] - g_cb * block_cols, np.zeros(pad, np.int64)])
+        v = np.concatenate([vals[s:e], np.zeros(pad, np.float32)])
+        tiles_r.append(r.reshape(n_t, tile_nnz))
+        tiles_c.append(c.reshape(n_t, tile_nnz))
+        tiles_v.append(v.reshape(n_t, tile_nnz))
+        tiles_rb.append(np.full(n_t, g_rb, np.int64))
+        tiles_cb.append(np.full(n_t, g_cb, np.int64))
+    for b in range(n_rb):
+        if b not in seen_rb:  # all-padding tile so the output block gets zeroed
+            tiles_r.append(np.zeros((1, tile_nnz), np.int64))
+            tiles_c.append(np.zeros((1, tile_nnz), np.int64))
+            tiles_v.append(np.zeros((1, tile_nnz), np.float32))
+            tiles_rb.append(np.full(1, b, np.int64))
+            tiles_cb.append(np.zeros(1, np.int64))
+    t_r = np.concatenate(tiles_r)
+    t_c = np.concatenate(tiles_c)
+    t_v = np.concatenate(tiles_v)
+    t_rb = np.concatenate(tiles_rb)
+    t_cb = np.concatenate(tiles_cb)
+    order = np.argsort(t_rb, kind="stable")
+    t_r, t_c, t_v, t_rb, t_cb = (a[order] for a in (t_r, t_c, t_v, t_rb, t_cb))
+    init = np.ones(t_rb.shape[0], np.int64)
+    init[1:] = t_rb[1:] != t_rb[:-1]
+    return BBCSR(
+        jnp.asarray(t_r, jnp.int32), jnp.asarray(t_c, jnp.int32),
+        jnp.asarray(t_v, jnp.float32), jnp.asarray(t_rb, jnp.int32),
+        jnp.asarray(t_cb, jnp.int32), jnp.asarray(init, jnp.int32),
+        csr.n_rows, csr.n_cols, block_rows, block_cols, tile_nnz,
+    )

@@ -1,0 +1,299 @@
+"""Offload engines: DMA gather/scatter, remote atomics, queues, collectives.
+
+PIUMA blocks contain engines that execute memory operations *in the background,
+where the data lives*:
+
+* DMA engine      — (strided) copy / gather / scatter between memory and SPAD
+* remote atomics  — atomic update at the owning memory controller
+* queue engine    — shared work queues (work stealing / dynamic partitioning)
+* collective eng. — system-wide barriers and reductions
+
+On a TPU mesh the analogues are (a) local fused gathers/segment-reductions for
+the in-node case and (b) `shard_map` + `all_to_all` *owner-routed* exchanges
+for the remote case: requests travel to the owner shard, the owner performs the
+gather or the commutative update locally, and only the requested/accepted words
+cross the network.  This is the paper's fine-grained-access model; the
+conventional-architecture baseline ("fetch the whole cache line") is an
+`all_gather` of the full remote array, kept for comparison in the algorithms
+and benchmarks.
+
+All remote primitives consult an ATT (see `core.dgas`) so distribution rules
+stay programmable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .dgas import ATT
+
+AxisName = Union[str, Sequence[str]]
+
+__all__ = [
+    "dma_gather", "dma_scatter_add", "dma_strided_copy",
+    "axis_size", "my_shard",
+    "dgas_gather", "remote_scatter_add", "all_gather_gather",
+    "QueueState", "queue_make", "queue_balance",
+    "hierarchical_psum", "barrier", "prefix_scan",
+]
+
+
+# ---------------------------------------------------------------------------
+# Local (in-node) DMA engine ops
+# ---------------------------------------------------------------------------
+
+def dma_gather(table: jnp.ndarray, idx: jnp.ndarray, *, fill: float = 0.0) -> jnp.ndarray:
+    """Gather rows/elements; out-of-range indices return `fill` (padding-safe)."""
+    valid = (idx >= 0) & (idx < table.shape[0])
+    safe = jnp.where(valid, idx, 0)
+    out = jnp.take(table, safe, axis=0)
+    mask = valid.reshape(valid.shape + (1,) * (out.ndim - valid.ndim))
+    return jnp.where(mask, out, jnp.asarray(fill, out.dtype))
+
+
+def dma_scatter_add(dest: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """Scatter-add with padding indices (<0 or >=n) dropped."""
+    valid = (idx >= 0) & (idx < dest.shape[0])
+    safe = jnp.where(valid, idx, 0)
+    mask = valid.reshape(valid.shape + (1,) * (vals.ndim - valid.ndim))
+    return dest.at[safe].add(jnp.where(mask, vals, 0).astype(dest.dtype))
+
+
+def dma_strided_copy(src: jnp.ndarray, start: int, stride: int, count: int) -> jnp.ndarray:
+    return lax.dynamic_slice_in_dim(src, start, 1 + (count - 1) * stride)[::stride]
+
+
+# ---------------------------------------------------------------------------
+# Axis helpers (work with a single axis name or a tuple of axis names)
+# ---------------------------------------------------------------------------
+
+def axis_size(axis_name: AxisName) -> int:
+    if isinstance(axis_name, (tuple, list)):
+        s = 1
+        for a in axis_name:
+            s *= lax.axis_size(a)
+        return s
+    return lax.axis_size(axis_name)
+
+
+def my_shard(axis_name: AxisName) -> jnp.ndarray:
+    """Flattened linear shard index across (possibly) multiple mesh axes."""
+    if isinstance(axis_name, (tuple, list)):
+        idx = jnp.int32(0)
+        for a in axis_name:
+            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        return idx
+    return lax.axis_index(axis_name)
+
+
+def _all_to_all(x: jnp.ndarray, axis_name: AxisName) -> jnp.ndarray:
+    """all_to_all over leading axis of size = axis size (possibly tuple axes)."""
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=False)
+
+
+# ---------------------------------------------------------------------------
+# Owner routing (shared by dgas_gather / remote_scatter_add / queues)
+# ---------------------------------------------------------------------------
+
+def _owner_slots(dest: jnp.ndarray, n_shards: int, capacity: int):
+    """Assign each item a slot in its destination bucket.
+
+    Returns (flat, valid): flat = dest*capacity + slot for valid items, and
+    valid = slot < capacity.  Deterministic (stable sort order).
+    """
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sorted_dest = jnp.take(dest, order)
+    starts = jnp.searchsorted(sorted_dest, jnp.arange(n_shards, dtype=dest.dtype))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - jnp.take(starts, sorted_dest).astype(jnp.int32)
+    slot = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    valid = (slot < capacity) & (dest >= 0) & (dest < n_shards)
+    flat = jnp.where(valid, dest.astype(jnp.int32) * capacity + slot, 0)
+    return flat, valid
+
+
+def _route(payload, dest: jnp.ndarray, axis_name: AxisName, capacity: int):
+    """Send each payload row to shard `dest[i]` (fixed per-peer capacity).
+
+    payload: pytree of arrays with leading dim n.
+    Returns (recv_payload, recv_valid, flat, valid):
+      recv_payload: pytree with leading dims (S*capacity,) — grouped by source peer
+      recv_valid:   (S*capacity,) bool
+      flat, valid:  sender-side slot bookkeeping (for reply unscatter).
+    """
+    S = axis_size(axis_name)
+    flat, valid = _owner_slots(dest, S, capacity)
+
+    def scatter_one(x):
+        buf = jnp.zeros((S * capacity,) + x.shape[1:], x.dtype)
+        vmask = valid.reshape((-1,) + (1,) * (x.ndim - 1))
+        return buf.at[flat].add(jnp.where(vmask, x, jnp.zeros((), x.dtype)))
+
+    send = jax.tree.map(scatter_one, payload)
+    sendv = jnp.zeros((S * capacity,), jnp.bool_).at[flat].max(valid)
+
+    def a2a(x):
+        return _all_to_all(x.reshape((S, capacity) + x.shape[1:]), axis_name).reshape(
+            (S * capacity,) + x.shape[1:])
+
+    recv = jax.tree.map(a2a, send)
+    recvv = a2a(sendv.astype(jnp.int8)).astype(jnp.bool_)
+    return recv, recvv, flat, valid
+
+
+def _reply(reply_payload, flat: jnp.ndarray, valid: jnp.ndarray, axis_name: AxisName,
+           capacity: int, fill=0):
+    """Return per-request answers computed at the owner back to the requesters."""
+    S = axis_size(axis_name)
+
+    def a2a(x):
+        return _all_to_all(x.reshape((S, capacity) + x.shape[1:]), axis_name).reshape(
+            (S * capacity,) + x.shape[1:])
+
+    back = jax.tree.map(a2a, reply_payload)
+
+    def unscatter(x):
+        out = jnp.take(x, flat, axis=0)
+        vmask = valid.reshape(valid.shape + (1,) * (out.ndim - 1))
+        return jnp.where(vmask, out, jnp.asarray(fill, out.dtype))
+
+    return jax.tree.map(unscatter, back)
+
+
+# ---------------------------------------------------------------------------
+# DGAS remote access primitives
+# ---------------------------------------------------------------------------
+
+def dgas_gather(local: jnp.ndarray, gidx: jnp.ndarray, att: ATT, axis_name: AxisName,
+                *, capacity: Optional[int] = None, fill: float = 0.0) -> jnp.ndarray:
+    """PIUMA fine-grained remote gather (DMA gather across the DGAS).
+
+    Each shard holds `local` (its rows of the global array, per `att`); `gidx`
+    are *global* ids to fetch.  Only the index requests (8 B) and the fetched
+    elements travel the network — never whole array replicas.
+
+    capacity: max requests any single peer pair exchanges; defaults to
+      2*ceil(n/S) (fine for interleaved/balanced rules; raise for skew —
+      overflowing requests return `fill`).
+    """
+    n = gidx.shape[0]
+    S = axis_size(axis_name)
+    C = capacity if capacity is not None else min(n, 2 * (-(-n // S)))
+    owner = att.owner(gidx).astype(jnp.int32)
+    local_idx = att.local(gidx).astype(jnp.int32)
+    local_idx = jnp.where((gidx >= 0) & (gidx < att.n_global), local_idx, -1)
+    recv, recvv, flat, valid = _route(local_idx, owner, axis_name, C)
+    answers = dma_gather(local, jnp.where(recvv, recv, -1), fill=fill)
+    return _reply(answers, flat, valid, axis_name, C, fill=fill)
+
+
+def remote_scatter_add(local: jnp.ndarray, gidx: jnp.ndarray, vals: jnp.ndarray,
+                       att: ATT, axis_name: AxisName, *,
+                       capacity: Optional[int] = None) -> jnp.ndarray:
+    """PIUMA remote atomic add: the update executes at the owner shard.
+
+    Routes (local index, value) pairs to the owning shard which applies a
+    single fused segment update — the batched bulk-synchronous equivalent of
+    per-word remote atomics (commutative ops only; see DESIGN.md §2).
+    """
+    n = gidx.shape[0]
+    S = axis_size(axis_name)
+    C = capacity if capacity is not None else min(n, 2 * (-(-n // S)))
+    owner = att.owner(gidx).astype(jnp.int32)
+    local_idx = att.local(gidx).astype(jnp.int32)
+    local_idx = jnp.where((gidx >= 0) & (gidx < att.n_global), local_idx, -1)
+    (ridx, rvals), recvv, _, _ = _route((local_idx, vals), owner, axis_name, C)
+    ridx = jnp.where(recvv, ridx, -1)
+    return dma_scatter_add(local, ridx, rvals)
+
+
+def all_gather_gather(local: jnp.ndarray, gidx: jnp.ndarray, att: ATT,
+                      axis_name: AxisName, *, fill: float = 0.0) -> jnp.ndarray:
+    """Conventional-architecture baseline: replicate the whole array, then index.
+
+    This is the 'move the cache line (here: the entire remote array)' strategy
+    GSPMD produces by default; kept to quantify PIUMA's advantage.
+    Requires a contiguous or interleaved rule to reassemble the global order.
+    """
+    g = lax.all_gather(local, axis_name, tiled=False)  # (S, rows_per_shard, ...)
+    S = g.shape[0]
+    if att.kind == "interleave":
+        # global id g -> (g % S, g // S): reassemble by transposing
+        full = jnp.swapaxes(g, 0, 1).reshape((-1,) + g.shape[2:])[: att.n_global]
+    else:
+        full = g.reshape((-1,) + g.shape[2:])[: att.n_global]
+    return dma_gather(full, gidx, fill=fill)
+
+
+# ---------------------------------------------------------------------------
+# Queue engine
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QueueState:
+    """Fixed-capacity distributed work queue (one buffer per shard)."""
+
+    items: jnp.ndarray  # (capacity,) int32, padding = -1
+    count: jnp.ndarray  # () int32 — valid prefix length
+
+    def tree_flatten(self):
+        return (self.items, self.count), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def queue_make(capacity: int) -> QueueState:
+    return QueueState(jnp.full((capacity,), -1, jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def queue_balance(q: QueueState, axis_name: AxisName) -> QueueState:
+    """Rebalance queued items evenly across shards (hardware work stealing).
+
+    Every item gets a global rank via a device prefix scan; item with rank r
+    moves to shard r % S (interleave), so post-balance counts differ by <=1.
+    """
+    S = axis_size(axis_name)
+    cap = q.items.shape[0]
+    offset = prefix_scan(q.count, axis_name)
+    rank = offset + jnp.arange(cap, dtype=jnp.int32)
+    is_item = jnp.arange(cap) < q.count
+    dest = jnp.where(is_item, rank % S, -1)
+    recv, recvv, _, _ = _route(q.items, dest.astype(jnp.int32), axis_name, cap)
+    recv = jnp.where(recvv, recv, -1)
+    # compact received items to a prefix
+    order = jnp.argsort(~recvv, stable=True)  # valid first
+    items = jnp.take(recv, order)
+    return QueueState(items, recvv.sum().astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Collective engine
+# ---------------------------------------------------------------------------
+
+def hierarchical_psum(x, axes: Sequence[AxisName]):
+    """Reduce one mesh level at a time (intra-block -> intra-pod -> cross-pod),
+    matching the HyperX hierarchy; XLA can then schedule each stage on its own
+    link class."""
+    for a in axes:
+        x = lax.psum(x, a)
+    return x
+
+
+def barrier(axis_name: AxisName) -> jnp.ndarray:
+    """System-wide barrier (semantic, via a 1-word reduction)."""
+    return lax.psum(jnp.ones((), jnp.int32), axis_name)
+
+
+def prefix_scan(x: jnp.ndarray, axis_name: AxisName) -> jnp.ndarray:
+    """Exclusive prefix sum across shards (collective-engine scan)."""
+    g = lax.all_gather(x, axis_name, tiled=False)  # (S, ...)
+    csum = jnp.cumsum(g, axis=0) - g
+    return jnp.take(csum, my_shard(axis_name), axis=0)

@@ -1,0 +1,1 @@
+from . import sharding, fault_tolerance

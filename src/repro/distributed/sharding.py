@@ -1,0 +1,129 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP + pod axis).
+
+Models annotate activations with *logical* axes; `MeshRules` maps them onto
+the physical mesh.  When no mesh is active (CPU smoke tests), constraints are
+no-ops, so model code is mesh-agnostic.
+
+The mapping mirrors PIUMA's ATT: a programmable table translating application
+space (logical axes) to physical location (mesh axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Sequence[str]]
+
+__all__ = ["MeshRules", "LOGICAL", "make_rules"]
+
+# logical axis -> role
+LOGICAL = {
+    "batch": "data parallel (pod x data)",
+    "seq": "sequence parallel (model) — opt-in",
+    "heads": "tensor parallel",
+    "kv_heads": "tensor parallel (may be smaller than mesh axis)",
+    "ff": "tensor parallel",
+    "vocab": "tensor parallel",
+    "expert": "expert parallel",
+    "embed": "FSDP (weights only)",
+    "nodes": "graph vertex partition (data x model flattened)",
+    "edges": "graph edge partition (data x model flattened)",
+    "rows": "embedding-table row partition",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Optional[Mesh]
+    batch: Axes
+    seq_sp: Axes          # sequence-parallel target (None = replicated seq)
+    tp: Axes
+    fsdp: Axes
+    expert: Axes
+    flat: Axes            # fully-flattened axis set (graph / recsys)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        table = {
+            "batch": self.batch, "seq": None, "seq_sp": self.seq_sp,
+            "heads": self.tp, "kv_heads": self.tp, "ff": self.tp,
+            "vocab": self.tp, "expert": self.expert, "embed": self.fsdp,
+            "seq_kv": self.tp,   # decode KV caches shard the sequence dim (SP)
+            "nodes": self.flat, "edges": self.flat, "rows": self.flat,
+            None: None,
+        }
+        return P(*(table[a] for a in logical))
+
+    def dp_size(self) -> int:
+        """Number of data-parallel shards (1 when meshless)."""
+        if self.mesh is None:
+            return 1
+        return self._axis_size(self.batch)
+
+    def _axis_size(self, axes: Axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[a]
+        return n
+
+    def constrain(self, x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+        """Sharding constraint; dims the mesh does not divide are left
+        UNCONSTRAINED (e.g. 40 heads on a 16-way TP axis, batch=1 decode)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(*logical)
+        entries = []
+        used: set = set()
+        for dim, axes in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+            names = ((axes,) if isinstance(axes, str) else tuple(axes or ()))
+            if axes is not None and (dim % self._axis_size(axes) != 0
+                                     or used & set(names)):
+                # non-dividing dim, or a mesh axis already consumed by an
+                # earlier dim (e.g. seq-parallel + vocab-parallel logits)
+                entries.append(P.UNCONSTRAINED)
+            else:
+                entries.append(axes)
+                used |= set(names)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*entries)))
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def input_sharding(self, shape, *logical: Optional[str]):
+        """NamedSharding for jit in_shardings: non-dividing dims -> replicated."""
+        if self.mesh is None:
+            return None
+        spec = self.spec(*logical)
+        entries = []
+        for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            entries.append(axes if axes is None or dim % self._axis_size(axes) == 0
+                           else None)
+        return NamedSharding(self.mesh, P(*entries))
+
+
+def make_rules(mesh: Optional[Mesh] = None, *, seq_parallel: bool = False) -> MeshRules:
+    """Build rules from a mesh with axes ('data','model') or ('pod','data','model')."""
+    if mesh is None:
+        return MeshRules(None, None, None, None, None, None, None)
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    batch = ("pod", "data") if has_pod else ("data",)
+    return MeshRules(
+        mesh=mesh,
+        batch=batch,
+        seq_sp="model" if seq_parallel else None,
+        tp="model",
+        fsdp=batch,
+        expert="model",
+        flat=(("pod", "data", "model") if has_pod else ("data", "model")),
+    )

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU)."""
+from . import ops, ref

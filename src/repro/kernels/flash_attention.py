@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window / GQA).
+
+The LM hot path.  Online-softmax accumulation over key blocks with the
+running (m, l, acc) state held in VMEM scratch; q/k/v blocks are DMA'd by the
+Pallas pipeline (double buffered).  Supports:
+
+* GQA — Hq queries share Hq/Hkv kv heads (k/v BlockSpecs fold the group),
+* causal masking with q occupying the LAST Sq positions of the kv range
+  (covers both training (Sq == Skv) and decode (Sq == 1)),
+* sliding-window masking (Mixtral-style SWA).
+
+Block sizes default to MXU-aligned (128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel_call"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, seq_off: int, n_kblocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + seq_off
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                             # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kblocks - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel_call(q, k, v, *, causal: bool = True,
+                                window: Optional[int] = None,
+                                scale: Optional[float] = None,
+                                block_q: int = 128, block_k: int = 128,
+                                interpret: bool = True):
+    """q (B,Hq,Sq,D); k,v (B,Hkv,Skv,D). Returns (B,Hq,Sq,D) in q.dtype."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_off=Skv - Sq, n_kblocks=nk)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=(B, Hq, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+                pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // g, j, 0)),
+                pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // g, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out

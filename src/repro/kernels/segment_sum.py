@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: sorted segment-sum — the "remote atomic apply" stage.
+
+`remote_scatter_add` (core/offload.py) routes (index, value) pairs to the
+owner shard; the owner then applies one fused reduction.  This kernel is that
+apply stage: data rows arrive *sorted by segment id* (the routing step sorts),
+and the scatter is expressed as a one-hot MXU matmul per input block:
+
+    out += onehot(seg_blk)^T @ data_blk        # (M, bn) @ (bn, d)
+
+The output (num_segments, d) stays VMEM-resident across the grid (init at
+step 0) — sized for the per-shard vertex partitions the offload engines
+produce (ops.py falls back to jax.ops.segment_sum above the VMEM budget).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["segment_sum_kernel_call"]
+
+
+def _kernel(seg_ref, data_ref, out_ref, *, block_n: int, num_segments: int):
+    i = pl.program_id(0)
+    seg = seg_ref[0, :]                                        # (bn,) sorted ids, -1 pad
+    data = data_ref[...]                                       # (1, bn, d) -> use [0]
+    seg_iota = jax.lax.broadcasted_iota(jnp.int32, (block_n, num_segments), 1)
+    onehot = (seg[:, None] == seg_iota).astype(jnp.float32)    # (bn, M); -1 matches none
+    blk = jax.lax.dot_general(
+        onehot, data[0].astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (M, d)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = blk
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] += blk
+
+
+def segment_sum_kernel_call(data: jnp.ndarray, seg: jnp.ndarray, num_segments: int,
+                            *, block_n: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """data (N, d) f32, seg (N,) int32 sorted ascending (-1 = drop). -> (M, d)."""
+    n, d = data.shape
+    n_pad = -(-n // block_n) * block_n
+    data = jnp.pad(data.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+    seg = jnp.pad(seg.astype(jnp.int32), (0, n_pad - n), constant_values=-1)
+    kern = functools.partial(_kernel, block_n=block_n, num_segments=num_segments)
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_n), lambda i: (i, 0)),
+                pl.BlockSpec((1, block_n, d), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
+        interpret=interpret,
+    )(seg.reshape(-1, block_n), data.reshape(-1, block_n, d))
+    return out

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: BBCSR SpMV — PIUMA's "DMA gather + selective caching".
+
+Mapping of the paper's SpMV optimizations onto the TPU memory hierarchy
+(DESIGN.md §2):
+
+* *selective caching*  — CSR values/indices stream sequentially through VMEM
+  tiles (the "cache the matrix" decision); the dense vector is never
+  replicated: exactly one `block_cols` slice is resident per column block.
+* *DMA gather to SPAD* — the Pallas pipeline DMAs the vector block into VMEM
+  (SPAD) while the previous tile computes (double buffering = the offload
+  engine running "in the background").
+* *8-byte access*      — HBM cannot do 8 B, so the fine-grained gather/scatter
+  happens **inside VMEM** as one-hot MXU matmuls: gather = onehot(cols) @ x,
+  scatter = contribᵀ @ onehot(rows). Irregularity is densified locally while
+  the global structure stays sparse.
+
+Grid: one step per tile, ordered by (row_block, col_block); output row blocks
+are revisited only consecutively, so accumulation uses the standard
+init-on-first-visit pattern driven by the host-precomputed `tile_init` flags
+(scalar-prefetched, like the tile→block maps).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.graph import BBCSR
+
+__all__ = ["spmv_bbcsr_kernel_call"]
+
+
+def _kernel(rb_ref, cb_ref, init_ref, rows_ref, cols_ref, vals_ref, x_ref, y_ref,
+            *, block_rows: int, block_cols: int, tile_nnz: int):
+    i = pl.program_id(0)
+    cols = cols_ref[0, :]                                   # (T,) local col ids
+    rows = rows_ref[0, :]                                   # (T,) local row ids
+    vals = vals_ref[0, :]                                   # (T,) 0 on padding
+    xblk = x_ref[0, :]                                      # (C,) VMEM-resident vector block
+
+    # fine-grained gather inside VMEM, expressed on the MXU
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_nnz, block_cols), 1)
+    onehot_g = (cols[:, None] == col_iota).astype(jnp.float32)      # (T, C)
+    gathered = jax.lax.dot_general(
+        onehot_g, xblk[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]                   # (T,)
+
+    contrib = vals * gathered                                       # (T,)
+
+    # fine-grained scatter-add inside VMEM, also on the MXU
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_nnz, block_rows), 1)
+    onehot_s = (rows[:, None] == row_iota).astype(jnp.float32)      # (T, R)
+    yblk = jax.lax.dot_general(
+        contrib[None, :], onehot_s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                        # (1, R)
+
+    @pl.when(init_ref[i] == 1)
+    def _init():
+        y_ref[0, :] = yblk[0]
+
+    @pl.when(init_ref[i] == 0)
+    def _acc():
+        y_ref[0, :] += yblk[0]
+
+
+def spmv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray, *, interpret: bool = True
+                           ) -> jnp.ndarray:
+    """Launch the kernel. Returns y (n_rows,) float32."""
+    n_rb, n_cb = bb.n_row_blocks, bb.n_col_blocks
+    x_pad = jnp.pad(x.astype(jnp.float32), (0, n_cb * bb.block_cols - x.shape[0]))
+    x2d = x_pad.reshape(n_cb, bb.block_cols)
+    kern = functools.partial(_kernel, block_rows=bb.block_rows,
+                             block_cols=bb.block_cols, tile_nnz=bb.tile_nnz)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # tile_rb, tile_cb, tile_init
+        grid=(bb.n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini: (i, 0)),  # rows
+            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini: (i, 0)),  # cols
+            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini: (i, 0)),  # vals
+            pl.BlockSpec((1, bb.block_cols), lambda i, rb, cb, ini: (cb[i], 0)),  # x blk
+        ],
+        out_specs=pl.BlockSpec((1, bb.block_rows), lambda i, rb, cb, ini: (rb[i], 0)),
+    )
+    y2d = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rb, bb.block_rows), jnp.float32),
+        interpret=interpret,
+    )(bb.tile_rb, bb.tile_cb, bb.tile_init,
+      bb.rows_local, bb.cols_local, bb.vals, x2d)
+    return y2d.reshape(-1)[: bb.n_rows]

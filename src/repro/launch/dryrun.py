@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count at first init).
+
+r"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * compiled.memory_analysis()  — proves the program fits per-chip HBM,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * a collective inventory parsed from the post-SPMD HLO (bytes per
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute)
+    — the roofline's collective term,
+  * derived roofline terms (seconds) against TPU v5e constants.
+
+Usage:
+  python -m repro.launch.dryrun --arch gin-tu --shape molecule [--multi-pod]
+  python -m repro.launch.dryrun --sweep --out results/dryrun.json [--multi-pod]
+
+Results are written incrementally (one JSON per completed cell merged into
+--out), so a long sweep can be watched and resumed (--resume skips done cells).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import (get_config, ARCH_NAMES, input_specs, shape_names,
+                       make_step, state_shapes, state_logical_axes,
+                       param_logical_axes)
+from ..configs.common import param_shardings, apply_variant
+from ..distributed.sharding import make_rules
+from ..optim import adamw
+from .mesh import make_production_mesh, HW
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device payload bytes of every collective in the (post-SPMD)
+    HLO.  For each op we take max(result bytes, operand bytes) as the payload
+    estimate — all-gather counts the gathered result, reduce-scatter the
+    scattered operand, all-reduce its (equal) payload."""
+    stats: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        m = _COLL_RE.search(line, eq)
+        if not m:
+            continue
+        kind = m.group(1).lower()
+        # HLO grammar: %name = <result shape(s)> op-name(<operand shapes>...)
+        res_b = _shape_bytes(line[eq + 1: m.start()])
+        paren = line[m.end():]          # regex consumed the opening '('
+        depth, end = 1, len(paren)
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        op_b = _shape_bytes(paren[:end])
+        payload = max(res_b, op_b)
+        s = stats.setdefault(kind, {"count": 0, "bytes": 0})
+        s["count"] += 1
+        s["bytes"] += payload
+    total = sum(s["bytes"] for s in stats.values())
+    return {"ops": stats, "total_bytes": total}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float) -> dict:
+    """Per-device roofline terms in seconds (TPU v5e constants)."""
+    t_c = flops / HW["peak_bf16_flops"]
+    t_m = hbm_bytes / HW["hbm_bw"]
+    t_n = coll_bytes / HW["ici_bw"]
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "dominant": dom,
+            "bound_s": max(t_c, t_m, t_n),
+            "roofline_fraction": (max(t_c, t_m) / max(t_c, t_m, t_n, 1e-30)
+                                  if max(t_c, t_m, t_n) > 0 else 0.0)}
+
+
+def model_flops(ac, bundle) -> Optional[float]:
+    """MODEL_FLOPS = 6*N*D (dense LM) / 6*N_active*D (MoE) — global, fwd+bwd."""
+    if ac.family != "lm":
+        return None
+    cfg = bundle.model
+    from ..models.transformer import count_params, init_params as ip
+    shapes = jax.eval_shape(lambda: ip(cfg, jax.random.PRNGKey(0)))
+    n_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    if cfg.moe is not None:
+        m = cfg.moe
+        moe_layers = cfg.n_layers // m.period
+        expert_params_per_layer = 3 * cfg.d_model * m.d_ff
+        n_active = (n_total
+                    - moe_layers * m.n_experts * expert_params_per_layer
+                    + moe_layers * max(m.top_k, 1) * expert_params_per_layer)
+    else:
+        n_active = n_total
+    toks = int(np.prod(bundle.batch["tokens"].shape))
+    mult = 6 if bundle.kind == "train" else 2
+    return float(mult) * n_active * toks
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             seq_parallel: bool = True, donate: bool = True,
+             variant: str = None) -> dict:
+    # seq_parallel default ON: the per-layer saved residuals are sequence-
+    # sharded (Megatron SP), without which an 88-layer 123B model cannot fit
+    # its remat carries in 16 GB/chip (DESIGN.md §7).
+    ac = get_config(arch)
+    if shape in ac.skips:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped", "reason": ac.skips[shape]}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, seq_parallel=seq_parallel)
+    bundle = apply_variant(input_specs(ac, shape), variant)
+    step = make_step(ac, bundle, rules)
+    n_chips = int(np.prod(mesh.devices.shape))
+
+    batch_structs = dict(bundle.batch)
+    batch_sh = {k: rules.input_sharding(v.shape, *bundle.batch_axes[k])
+                for k, v in batch_structs.items()}
+
+    params_shape, state_shape = state_shapes(ac, bundle.model)
+    pax = param_logical_axes(ac, bundle.model, params_shape)
+    p_sh = param_shardings(rules, params_shape, pax)
+
+    if bundle.kind == "train":
+        st_sh = adamw.TrainState(params=p_sh, m=p_sh, v=p_sh,
+                                 step=rules.input_sharding(()))
+        fn = jax.jit(step, in_shardings=(st_sh, batch_sh),
+                     donate_argnums=(0,) if donate else ())
+        lowered = fn.lower(state_shape, batch_structs)
+    elif bundle.kind == "prefill":
+        fn = jax.jit(step, in_shardings=(p_sh, batch_sh))
+        lowered = fn.lower(params_shape, batch_structs)
+    elif bundle.kind == "decode":
+        cache_sh = {k: rules.input_sharding(v.shape, *bundle.cache_axes[k])
+                    for k, v in bundle.cache.items()}
+        fn = jax.jit(step, in_shardings=(p_sh, cache_sh, batch_sh),
+                     donate_argnums=(1,) if donate else ())
+        lowered = fn.lower(params_shape, bundle.cache, batch_structs)
+    else:  # serve / retrieval
+        fn = jax.jit(step, in_shardings=(p_sh, batch_sh))
+        lowered = fn.lower(params_shape, batch_structs)
+
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", -1.0))
+    hbm_bytes = float(cost.get("bytes accessed", -1.0))
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        mem_d[attr] = int(getattr(mem, attr, -1))
+    per_device_total = (mem_d["temp_size_in_bytes"]
+                        + mem_d["argument_size_in_bytes"])
+
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    roof = roofline_terms(max(flops, 0.0), max(hbm_bytes, 0.0),
+                          coll["total_bytes"])
+    mf = model_flops(ac, bundle)
+
+    rec = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "variant": variant,
+        "status": "ok", "kind": bundle.kind, "n_chips": n_chips,
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            "flops": flops, "hbm_bytes": hbm_bytes,
+            "collective_bytes": coll["total_bytes"],
+            "memory": mem_d, "total_hbm_used": per_device_total,
+            "fits_16gb": bool(per_device_total < HW["hbm_per_chip"]),
+        },
+        "collectives": coll["ops"],
+        "roofline": roof,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (flops * n_chips)
+                               if (mf and flops > 0) else None),
+        "hlo_bytes": len(hlo),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--seq-parallel", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="named model transform (configs.common.VARIANTS)")
+    args = ap.parse_args()
+
+    results = []
+    if args.out and args.resume and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["multi_pod"]) for r in results}
+
+    def emit(rec):
+        results.append(rec)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+        r = rec.get("roofline", {})
+        print(f"[{rec['arch']} x {rec['shape']} pods={1+int(rec['multi_pod'])}] "
+              f"{rec['status']} "
+              + (f"compile={rec.get('compile_s')}s dom={r.get('dominant')} "
+                 f"fit={rec['per_device']['fits_16gb']} "
+                 f"cT={r.get('compute_s', 0):.2e} mT={r.get('memory_s', 0):.2e} "
+                 f"nT={r.get('collective_s', 0):.2e}"
+                 if rec["status"] == "ok" else rec.get("reason", rec.get("error", ""))),
+              flush=True)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.sweep:
+        cells = []
+        for a in ARCH_NAMES:
+            ac = get_config(a)
+            for s in shape_names(ac):
+                for mp in meshes:
+                    cells.append((a, s, mp))
+        # smallest families first so results accumulate early
+        order = {"gin-tu": 0, "gatedgcn": 1, "fm": 2, "dimenet": 3,
+                 "equiformer-v2": 4, "mixtral-8x7b": 5, "qwen3-14b": 6,
+                 "minicpm3-4b": 7, "llama4-maverick-400b-a17b": 8,
+                 "mistral-large-123b": 9}
+        cells.sort(key=lambda c: (order.get(c[0], 99), c[1], c[2]))
+        for a, s, mp in cells:
+            if (a, s, mp) in done:
+                continue
+            try:
+                emit(run_cell(a, s, multi_pod=mp,
+                              seq_parallel=args.seq_parallel))
+            except Exception as e:  # noqa: BLE001 — record and continue sweep
+                emit({"arch": a, "shape": s, "multi_pod": mp,
+                      "status": "error", "error": f"{type(e).__name__}: {e}",
+                      "trace": traceback.format_exc()[-2000:]})
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --sweep)"
+        for mp in meshes:
+            emit(run_cell(args.arch, args.shape, multi_pod=mp,
+                          seq_parallel=args.seq_parallel,
+                          variant=args.variant))
+
+
+if __name__ == "__main__":
+    main()

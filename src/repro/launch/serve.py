@@ -1,0 +1,92 @@
+"""Batched serving driver: prefill + decode loop with a shared KV cache.
+
+Serves an LM config against synthetic request batches (greedy decode),
+or scores recsys batches.  The decode loop is one jitted `decode_step` per
+token — cache donated, so serving is allocation-free after warmup.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..distributed.sharding import make_rules
+from ..models import transformer as TF
+from ..models import recsys as RS
+from ..data import synthetic
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    ac = get_config(args.arch)
+    cfg = ac.smoke if args.smoke else ac.model
+    rules = make_rules(None)
+
+    if ac.family == "recsys":
+        params = RS.init_params(cfg, jax.random.PRNGKey(args.seed))
+        it = synthetic.recsys_batches(args.batch, cfg.n_fields,
+                                      cfg.rows_per_field, seed=args.seed)
+        score = jax.jit(lambda p, ids: RS.fm_scores(cfg, p, ids, rules))
+        b = next(it)
+        t0 = time.time()
+        s = score(params, jnp.asarray(b["ids"]))
+        s.block_until_ready()
+        print(f"scored {args.batch} requests in {time.time()-t0:.3f}s; "
+              f"mean score {float(s.mean()):.4f}")
+        return
+
+    params = TF.init_params(cfg, jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.gen
+    if cfg.window is not None:
+        max_len = min(max_len, max(cfg.window, 1))
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+
+    prefill = jax.jit(lambda p, t: TF.prefill(cfg, p, t, rules))
+    decode = jax.jit(lambda p, c, t: TF.decode_step(cfg, p, c, t, rules),
+                     donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, jnp.asarray(prompts))
+    # right-size the cache for decoding
+    pad = max_len - args.prompt_len
+    if pad > 0:
+        cache = {k: (jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)) +
+                             ((0, 0),) * (v.ndim - 4)) if hasattr(v, "ndim") and v.ndim > 1
+                     else v)
+                 for k, v in cache.items()}
+    t_prefill = time.time() - t0
+
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for _ in range(args.gen):
+        out.append(np.asarray(tok)[:, 0])
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+    gen = np.stack(out, 1)
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.3f}s; "
+          f"decoded {args.gen} tokens in {t_decode:.3f}s "
+          f"({args.batch*args.gen/max(t_decode,1e-9):.1f} tok/s)")
+    print("sample generation ids:", gen[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, TrainState, init_state, apply_update, cosine_schedule
+from . import compression

@@ -1,0 +1,113 @@
+"""AdamW with cosine schedule, global-norm clipping, optional bf16 moments.
+
+bf16 moments are the memory lever that fits llama4-maverick-400b training on
+256 v5e chips (DESIGN.md §7) — a distributed-optimization trick with precedent
+(Gopher, PaLM used bf16/compressed optimizer state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "TrainState", "init_state", "apply_update",
+           "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: Any = jnp.float32   # bf16 for the 400B MoE config
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.m, self.v, self.step), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_state(params) -> TrainState:
+    zeros_like = lambda dt: lambda p: jnp.zeros(p.shape, dt)
+    return TrainState(
+        params=params,
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_state_with_dtype(params, moment_dtype) -> TrainState:
+    return TrainState(
+        params=params,
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_update(cfg: AdamWConfig, state: TrainState, grads) -> TrainState:
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    gn = global_norm(grads)
+    scale = (jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+             if cfg.clip_norm else 1.0)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        v_new = b2 * v32 + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(state.params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    return TrainState(
+        params=jax.tree.unflatten(treedef, [o[0] for o in out]),
+        m=jax.tree.unflatten(treedef, [o[1] for o in out]),
+        v=jax.tree.unflatten(treedef, [o[2] for o in out]),
+        step=step,
+    )

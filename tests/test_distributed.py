@@ -1,0 +1,16 @@
+"""Runs the 8-device shard_map validation in a subprocess (device count must
+be fixed before jax initializes, so it cannot run in-process with pytest)."""
+import os
+import subprocess
+import sys
+
+
+def test_distributed_engines_and_algorithms():
+    script = os.path.join(os.path.dirname(__file__), "_distributed_main.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, env=env, timeout=1200)
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed validation failed"

@@ -1,0 +1,21 @@
+"""Dry-run integration: one small cell end-to-end in a subprocess (the dry-run
+pins 512 host devices, so it cannot share the test process)."""
+import os
+import subprocess
+import sys
+
+
+def test_dryrun_single_cell():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "gin-tu",
+         "--shape", "molecule"],
+        capture_output=True, text=True, env=env, timeout=900,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    sys.stdout.write(proc.stdout[-2000:])
+    sys.stderr.write(proc.stderr[-1000:])
+    assert proc.returncode == 0
+    assert "ok" in proc.stdout
+    assert "fit=True" in proc.stdout

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dgas, uniform_random_graph, to_bbcsr
+from repro.core.algorithms import spmv
+from repro.kernels import ops, ref
+from repro.core.traffic import (SPMV_PROFILES, XEON, PIUMA_NODE, time_per_elem,
+                                speedup)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(1, 10_000), s=st.integers(1, 64),
+       kind=st.sampled_from(["interleave", "block"]))
+@settings(**SETTINGS)
+def test_att_roundtrip(n, s, kind):
+    att = (dgas.interleave_rule if kind == "interleave" else dgas.block_rule)(n, s)
+    gid = jnp.arange(n, dtype=jnp.int32)
+    owner, local = att.owner(gid), att.local(gid)
+    assert int(owner.max()) < s
+    assert int(local.max()) < att.per_shard
+    back = att.to_global(owner, local)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(gid))
+
+
+@given(st.lists(st.integers(0, 50), min_size=2, max_size=40),
+       st.integers(1, 8))
+@settings(**SETTINGS)
+def test_degree_balanced_rule_covers(degs, s):
+    indptr = np.concatenate([[0], np.cumsum(degs)])
+    att = dgas.degree_balanced_rule(indptr, s)
+    n = len(degs)
+    gid = jnp.arange(n, dtype=jnp.int32)
+    owner = np.asarray(att.owner(gid))
+    # owners are monotone (contiguous partition) and cover each vertex once
+    assert (np.diff(owner) >= 0).all()
+    back = np.asarray(att.to_global(att.owner(gid), att.local(gid)))
+    np.testing.assert_array_equal(back, np.arange(n))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_spmv_linearity(seed):
+    rng = np.random.default_rng(seed)
+    g = uniform_random_graph(64, 4, seed=seed % 17)
+    x = jnp.asarray(rng.random(64, np.float32))
+    y = jnp.asarray(rng.random(64, np.float32))
+    a = float(rng.random() * 3)
+    lhs = spmv(g, a * x + y)
+    rhs = a * spmv(g, x) + spmv(g, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3,
+                               atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000), scale=st.integers(4, 7))
+@settings(max_examples=10, deadline=None)
+def test_spmv_kernel_vs_oracle_property(seed, scale):
+    from repro.core import rmat
+    g = rmat(scale, 4, seed=seed % 100)
+    bb = to_bbcsr(g, block_rows=32, block_cols=32, tile_nnz=64)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(g.n_cols, np.float32))
+    np.testing.assert_allclose(np.asarray(ops.spmv_dma(bb, x)),
+                               np.asarray(ref.spmv_bbcsr_ref(bb, x)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(n=st.integers(1, 200), v=st.integers(1, 100), seed=st.integers(0, 9999))
+@settings(**SETTINGS)
+def test_gather_matches_take(n, v, seed):
+    from repro.core.offload import dma_gather
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((v, 3)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-1, v, n).astype(np.int32))
+    out = np.asarray(dma_gather(table, idx))
+    for i, ix in enumerate(np.asarray(idx)):
+        if ix >= 0:
+            np.testing.assert_allclose(out[i], np.asarray(table)[ix])
+        else:
+            np.testing.assert_allclose(out[i], 0.0)
+
+
+@given(seed=st.integers(0, 9999))
+@settings(**SETTINGS)
+def test_scatter_add_matches_dense(seed):
+    from repro.core.offload import dma_scatter_add
+    rng = np.random.default_rng(seed)
+    dest = jnp.zeros((20, 2), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, 20, 30).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal((30, 2)).astype(np.float32))
+    out = np.asarray(dma_scatter_add(dest, idx, vals))
+    expect = np.zeros((20, 2), np.float32)
+    for i, ix in enumerate(np.asarray(idx)):
+        if ix >= 0:
+            expect[ix] += np.asarray(vals)[i]
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_traffic_model_orderings():
+    """Structural invariants of the Table I analytical model."""
+    t = {k: time_per_elem(PIUMA_NODE, p) for k, p in SPMV_PROFILES.items()
+         if k != "xeon"}
+    # staged optimizations monotonically improve...
+    assert t["piuma_base"] > t["piuma_selective"] > t["piuma_dma"]
+    # ...and cache-everything is WORSE than base (the paper's pathology)
+    assert t["piuma_cache_all"] > t["piuma_base"]
+    # PIUMA node beats the Xeon node on every version
+    assert speedup(SPMV_PROFILES["piuma_base"]) > 1
