@@ -11,7 +11,8 @@ import numpy as np
 
 from repro.core import rmat
 from repro.core.algorithms import (spmv, spmspv, pagerank, bfs, random_walks,
-                                   label_propagation, modularity, ties_sample)
+                                   label_propagation, modularity, ties_sample,
+                                   sssp, connected_components, symmetrize)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=int, default=12)
@@ -39,11 +40,18 @@ wk = timed("Random walks (4096x16)", jax.jit(lambda: random_walks(
     g, jnp.arange(4096) % g.n_rows, 16, key)))
 lab = timed("Louvain (LPA, 8 it)", jax.jit(lambda: label_propagation(
     g, iters=8, max_deg=64)))
+dist = timed("SSSP (delta-stepping)", jax.jit(lambda: sssp(g, 0)))
+gsym = symmetrize(g)  # host-side prep for components
+comp = timed("Connected components", jax.jit(lambda: connected_components(
+    gsym, symmetrize_input=False)))
 nodes, n_nodes, mask = timed("TIES sampler", jax.jit(lambda: ties_sample(
     g, 512, 1024, key)))
 
 print(f"\n  pagerank mass          {float(pr.sum()):.4f}")
 print(f"  bfs reached            {int((lv >= 0).sum())}/{g.n_rows}")
+print(f"  sssp reached           {int(np.isfinite(np.asarray(dist)).sum())}"
+      f"/{g.n_rows}")
+print(f"  components             {len(np.unique(np.asarray(comp)))}")
 print(f"  communities            {len(np.unique(np.asarray(lab)))}")
 print(f"  modularity             {float(modularity(g, lab)):.4f}")
 print(f"  TIES nodes/edges       {int(n_nodes)}/{int(mask.sum())}")

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI entry point.
+#
+#   scripts/ci.sh         — tier-1: the full suite (what the driver enforces)
+#   scripts/ci.sh fast    — inner-loop subset: skips the @slow
+#                           subprocess-spawning distributed/dryrun tests
+#                           (~4 min), keeps everything else
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+case "${1:-all}" in
+  fast)
+    python -m pytest -x -q -m "not slow"
+    ;;
+  all)
+    python -m pytest -x -q
+    ;;
+  *)
+    echo "usage: scripts/ci.sh [fast|all]" >&2
+    exit 2
+    ;;
+esac

@@ -27,13 +27,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
+
 __all__ = ["save", "restore", "latest_step", "CheckpointManager"]
 
 _SEP = "/"
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = compat.tree_flatten_with_path(tree)
     items = []
     for path, leaf in flat:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)

@@ -1,0 +1,66 @@
+"""Version-tolerant aliases for jax APIs that drifted across releases.
+
+Policy (DESIGN.md §10): repro code never calls a jax symbol that only exists
+in some of the versions we support.  Every such symbol gets one alias here,
+written as "try the new spelling, fall back to the old one", so a version bump
+is a one-file change and the rest of the tree stays on a stable surface.
+
+Covered today (installed jax 0.4.x):
+
+* ``tree_flatten_with_path``  — ``jax.tree.flatten_with_path`` only appears in
+  newer jax; ``jax.tree_util.tree_flatten_with_path`` is the stable spelling.
+* ``axis_size``               — ``lax.axis_size`` is missing on this version;
+  ``lax.psum(1, axis_name)`` is the documented equivalent and constant-folds
+  to a static ``int`` under ``shard_map``, so it remains usable for shapes.
+* ``cost_analysis_dict``      — ``Compiled.cost_analysis()`` has returned a
+  dict, a list of dicts (one per program), or ``None`` depending on version.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence, Union
+
+import jax
+from jax import lax
+
+__all__ = ["tree_flatten_with_path", "axis_size", "cost_analysis_dict"]
+
+AxisName = Union[str, Sequence[str]]
+
+
+def tree_flatten_with_path(tree: Any):
+    """(path, leaf) pairs + treedef, on any jax that has either spelling."""
+    if hasattr(jax, "tree") and hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def _one_axis_size(axis_name: str) -> int:
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    # psum of a literal is constant-folded to the axis size (a python int),
+    # so this works even where the result feeds a static shape.
+    return lax.psum(1, axis_name)
+
+
+def axis_size(axis_name: AxisName) -> int:
+    """Size of one mesh axis, or the product over a tuple of axes."""
+    if isinstance(axis_name, (tuple, list)):
+        s = 1
+        for a in axis_name:
+            s *= _one_axis_size(a)
+        return s
+    return _one_axis_size(axis_name)
+
+
+def cost_analysis_dict(compiled: Any) -> Mapping[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` to a single flat dict."""
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: dict[str, float] = {}
+        for entry in cost:
+            if isinstance(entry, Mapping):
+                merged.update(entry)
+        return merged
+    return cost

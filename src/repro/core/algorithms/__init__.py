@@ -1,7 +1,10 @@
 from .spmv import spmv, spmv_ell, spmv_bbcsr, spmv_distributed
 from .spmspv import spmspv, spmspv_ell
 from .pagerank import pagerank, pagerank_distributed
-from .bfs import bfs, bfs_distributed
+from .bfs import bfs, bfs_distributed, bfs_program
+from .sssp import sssp, sssp_distributed, sssp_program
+from .cc import (connected_components, connected_components_distributed,
+                 cc_program, symmetrize)
 from .random_walks import random_walks, random_walks_distributed
 from .louvain import label_propagation, modularity
 from .sampling import ties_sample, neighbor_sample
@@ -10,7 +13,10 @@ __all__ = [
     "spmv", "spmv_ell", "spmv_bbcsr", "spmv_distributed",
     "spmspv", "spmspv_ell",
     "pagerank", "pagerank_distributed",
-    "bfs", "bfs_distributed",
+    "bfs", "bfs_distributed", "bfs_program",
+    "sssp", "sssp_distributed", "sssp_program",
+    "connected_components", "connected_components_distributed",
+    "cc_program", "symmetrize",
     "random_walks", "random_walks_distributed",
     "label_propagation", "modularity",
     "ties_sample", "neighbor_sample",

@@ -1,88 +1,78 @@
-"""Breadth-first search.
+"""Breadth-first search, as a :mod:`repro.core.engine` vertex program.
 
-Local: dense-frontier level synchronous BFS (edge-parallel, scatter-max).
-Distributed: per level, each shard expands its locally-owned frontier rows and
-marks destinations with a PIUMA remote atomic (max) at the owner; the queue
-engine rebalances a sparse frontier when it is small (work stealing).
+The program: active vertices emit an indicator along out-edges; a destination
+combining a positive count for the first time is assigned the next level and
+joins the frontier.  Direction optimization (push the sparse frontier, pull
+once it saturates) is the engine's job, not BFS's — locally ``mode='auto'``
+switches on the frontier population count (Beamer's heuristic); distributed,
+push expands through PIUMA remote atomics at the dst owner and pull gathers
+via fine-grained dgas reads over the reversed edge shards.
 """
 from __future__ import annotations
 
-from functools import partial
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
+from .. import engine
 from ..dgas import ATT
-from ..graph import CSR
-from .. import offload
+from ..graph import CSR, BBCSR
 from .distgraph import ShardedGraph
 
-__all__ = ["bfs", "bfs_distributed"]
+__all__ = ["bfs", "bfs_distributed", "bfs_program"]
 
 
-def bfs(csr: CSR, source: int, *, max_levels: int | None = None) -> jnp.ndarray:
-    """Returns level array (n,) int32; unreachable = -1."""
+def bfs_program() -> engine.VertexProgram:
+    """Levels in state['level'], int32 frontier indicator as the message."""
+
+    def msg_fn(state, frontier):
+        return frontier.astype(jnp.int32)
+
+    def update_fn(state, acc, frontier, it):
+        new = (acc > 0) & (state["level"] < 0)
+        level = jnp.where(new, it + 1, state["level"])
+        return {"level": level}, new.astype(jnp.int32)
+
+    return engine.VertexProgram(edge_op="copy", combine="add",
+                                msg_fn=msg_fn, update_fn=update_fn)
+
+
+def bfs(csr: CSR, source: int, *, max_levels: int | None = None,
+        mode: str = "auto", kernel_bb: Optional[BBCSR] = None) -> jnp.ndarray:
+    """Returns level array (n,) int32; unreachable = -1.
+
+    mode: 'auto' (direction-optimizing, default) | 'push' | 'pull'.
+    kernel_bb: optional BBCSR of A^T to run both directions on the Pallas
+      SpMV/SpMSpV kernels; must be unit-valued — build it with
+      engine.build_pull_operand(csr, unit_values=True) (the engine rejects a
+      weighted operand, since the kernel multiplies by stored values).
+    """
     n = csr.n_rows
-    rows, cols = csr.row_ids(), csr.indices
     max_levels = max_levels or n
-
-    def cond(state):
-        level, frontier, i = state
-        return jnp.logical_and(jnp.any(frontier), i < max_levels)
-
-    def body(state):
-        level, frontier, i = state
-        active = offload.dma_gather(frontier.astype(jnp.int32), rows)  # per edge
-        reached = jnp.zeros((n,), jnp.int32).at[cols].max(active).astype(jnp.bool_)
-        new = reached & (level < 0)
-        level = jnp.where(new, i + 1, level)
-        return level, new, i + 1
-
-    level0 = jnp.full((n,), -1, jnp.int32).at[source].set(0)
-    frontier0 = jnp.zeros((n,), jnp.bool_).at[source].set(True)
-    level, _, _ = jax.lax.while_loop(cond, body, (level0, frontier0, jnp.int32(0)))
-    return level
-
-
-def _bfs_shard(src, dst, x_unused, level, frontier, *, att: ATT, axis, max_levels):
-    src, dst, level, frontier = src[0], dst[0], level[0], frontier[0]
-
-    def cond(state):
-        level, frontier, i = state
-        any_frontier = offload.hierarchical_psum(
-            frontier.sum(), [axis] if isinstance(axis, str) else list(axis))
-        return jnp.logical_and(any_frontier > 0, i < max_levels)
-
-    def body(state):
-        level, frontier, i = state
-        local_src = jnp.where(src >= 0, att.local(jnp.maximum(src, 0)), 0)
-        active = jnp.where(src >= 0,
-                           offload.dma_gather(frontier.astype(jnp.int32), local_src), 0)
-        reached = jnp.zeros((att.per_shard,), jnp.int32)
-        # remote atomic max == scatter-add of indicator then clamp (idempotent mark)
-        reached = offload.remote_scatter_add(
-            reached, jnp.where(active > 0, dst, -1), active.astype(jnp.int32),
-            att, axis, capacity=dst.shape[0])
-        new = (reached > 0) & (level < 0)
-        level = jnp.where(new, i + 1, level)
-        return level, new.astype(jnp.int32), i + 1
-
-    level, _, _ = jax.lax.while_loop(cond, body, (level, frontier, jnp.int32(0)))
-    return level[None]
+    state0 = {"level": jnp.full((n,), -1, jnp.int32).at[source].set(0)}
+    frontier0 = jnp.zeros((n,), jnp.int32).at[source].set(1)
+    state = engine.run(csr, bfs_program(), state0, frontier0,
+                       max_iters=max_levels, mode=mode, kernel_bb=kernel_bb)
+    return state["level"]
 
 
 def bfs_distributed(g: ShardedGraph, att: ATT, source: int, mesh: Mesh, *,
-                    axis=None, max_levels: int = 64) -> jnp.ndarray:
-    """Returns level array stacked (S, per_shard) under `att` layout."""
-    axis = axis if axis is not None else mesh.axis_names[0]
-    spec = P(axis) if isinstance(axis, str) else P(tuple(axis))
+                    axis=None, max_levels: int = 64,
+                    g_rev: Optional[ShardedGraph] = None,
+                    mode: str = "push") -> jnp.ndarray:
+    """Returns level array stacked (S, per_shard) under `att` layout.
+
+    mode='push' reproduces the seed behavior exactly; pass `g_rev`
+    (engine.reverse_graph) with mode='auto' for the direction-optimizing
+    variant.
+    """
     S, per = att.n_shards, att.per_shard
     owner = int(att.owner(jnp.asarray(source)))
     local = int(att.local(jnp.asarray(source)))
-    level0 = jnp.full((S, per), -1, jnp.int32).at[owner, local].set(0)
+    state0 = {"level": jnp.full((S, per), -1, jnp.int32).at[owner, local].set(0)}
     frontier0 = jnp.zeros((S, per), jnp.int32).at[owner, local].set(1)
-    fn = partial(_bfs_shard, att=att, axis=axis, max_levels=max_levels)
-    mapped = shard_map(fn, mesh=mesh, in_specs=(spec,) * 5, out_specs=spec)
-    return mapped(g.src, g.dst, g.val, level0, frontier0)
+    state = engine.run_distributed(g, att, mesh, bfs_program(), state0,
+                                   frontier0, axis=axis, max_iters=max_levels,
+                                   g_rev=g_rev, mode=mode)
+    return state["level"]

@@ -1,0 +1,88 @@
+"""Connected components via min-label propagation, on the frontier engine.
+
+Every vertex starts labeled with its own id; active vertices broadcast their
+label and destinations keep the minimum — the (min, copy) instance of the
+engine's semiring.  A vertex whose label shrinks re-enters the frontier, so
+work decays to the slowly-converging boundary vertices exactly where the
+direction-optimizing switch pays off (dense first sweeps, sparse tail).
+
+Components are defined on the *undirected* structure; by default the input
+is symmetrized host-side (A + A^T pattern).  Distributed, the label pushes
+are PIUMA remote atomic *min* ops at the destination owner, and the caller
+is expected to hand in an already-symmetric sharded graph.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .. import engine
+from ..dgas import ATT
+from ..graph import CSR
+from .distgraph import ShardedGraph
+
+__all__ = ["connected_components", "connected_components_distributed",
+           "cc_program", "symmetrize"]
+
+_PAD_LABEL = 2 ** 30
+
+
+def symmetrize(csr: CSR) -> CSR:
+    """Host-side A + A^T pattern (unweighted)."""
+    indptr = np.asarray(csr.indptr)
+    rows = np.repeat(np.arange(csr.n_rows), np.diff(indptr))
+    cols = np.asarray(csr.indices)
+    r = np.concatenate([rows, cols])
+    c = np.concatenate([cols, rows])
+    return CSR.from_coo(r, c, None, csr.n_rows, csr.n_cols,
+                        sum_duplicates=True)
+
+
+def cc_program() -> engine.VertexProgram:
+    def msg_fn(state, frontier):
+        return jnp.where(frontier > 0, state["label"],
+                         jnp.int32(_PAD_LABEL))
+
+    def update_fn(state, acc, frontier, it):
+        label = state["label"]
+        changed = acc < label
+        return ({"label": jnp.minimum(label, acc)},
+                changed.astype(jnp.int32))
+
+    return engine.VertexProgram(edge_op="copy", combine="min",
+                                msg_fn=msg_fn, update_fn=update_fn,
+                                identity=_PAD_LABEL)
+
+
+def connected_components(csr: CSR, *, max_iters: Optional[int] = None,
+                         symmetrize_input: bool = True,
+                         mode: str = "auto") -> jnp.ndarray:
+    """Returns (n,) int32 — each vertex's component id (its min member id)."""
+    g = symmetrize(csr) if symmetrize_input else csr
+    n = g.n_rows
+    max_iters = max_iters if max_iters is not None else n
+    state0 = {"label": jnp.arange(n, dtype=jnp.int32)}
+    frontier0 = jnp.ones((n,), jnp.int32)
+    state = engine.run(g, cc_program(), state0, frontier0,
+                       max_iters=max_iters, mode=mode)
+    return state["label"]
+
+
+def connected_components_distributed(g: ShardedGraph, att: ATT, mesh: Mesh, *,
+                                     axis=None,
+                                     max_iters: int = 256) -> jnp.ndarray:
+    """Labels stacked (S, per_shard) under `att`.  `g` must already hold the
+    symmetric edge set (build from `symmetrize(csr)`)."""
+    S, per = att.n_shards, att.per_shard
+    shards = jnp.arange(S, dtype=jnp.int32)[:, None]
+    locals_ = jnp.arange(per, dtype=jnp.int32)[None, :]
+    gids = att.to_global(shards, locals_).astype(jnp.int32)  # (S, per)
+    state0 = {"label": gids}
+    frontier0 = jnp.ones((S, per), jnp.int32)
+    state = engine.run_distributed(g, att, mesh, cc_program(), state0,
+                                   frontier0, axis=axis, max_iters=max_iters,
+                                   mode="push")
+    return state["label"]

@@ -1,18 +1,21 @@
-"""PageRank — push-style along out-edges (the paper's Fig. 1 motivating pattern).
+"""PageRank — push-style along out-edges (the paper's Fig. 1 motivating
+pattern), as a dense-frontier :mod:`repro.core.engine` vertex program.
 
-Local: power iteration with fine-grained scatter-adds.
-Distributed: every push is a PIUMA *remote atomic add* at the owner of the
-destination vertex (`offload.remote_scatter_add`).
+The frontier never shrinks (every vertex pushes mass every iteration), so the
+engine runs the dense direction throughout; what PageRank gains from the
+engine is the shared machinery: locally the edge-parallel segment reduction,
+distributed the shard_map wiring with every push a PIUMA *remote atomic add*
+at the owner of the destination vertex.
 """
 from __future__ import annotations
 
 from functools import partial
 
-import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from .. import engine
 from ..dgas import ATT
 from ..graph import CSR
 from .. import offload
@@ -25,32 +28,22 @@ def pagerank(csr: CSR, *, damping: float = 0.85, iters: int = 20) -> jnp.ndarray
     n = csr.n_rows
     deg = csr.degrees().astype(jnp.float32)
     inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1), 0.0)
-    rows = csr.row_ids()
-    cols = csr.indices
 
-    def body(_, x):
-        push = offload.dma_gather(x * inv_deg, rows)          # value each edge carries
-        y = jax.ops.segment_sum(push, cols, num_segments=n)    # scatter-add at dst
-        dangling = jnp.sum(jnp.where(deg > 0, 0.0, x))         # redistribute sinks
-        return (1 - damping) / n + damping * (y + dangling / n)
+    def msg_fn(state, frontier):
+        return state["x"] * inv_deg
 
-    x0 = jnp.full((n,), 1.0 / n, jnp.float32)
-    return jax.lax.fori_loop(0, iters, body, x0)
+    def update_fn(state, acc, frontier, it):
+        x = state["x"]
+        dangling = jnp.sum(jnp.where(deg > 0, 0.0, x))  # redistribute sinks
+        x = (1 - damping) / n + damping * (acc + dangling / n)
+        return {"x": x}, frontier
 
-
-def _pr_shard(src, dst, val, x, inv_deg, deg, *, att: ATT, damping, axis):
-    src, dst, x, inv_deg, deg = src[0], dst[0], x[0], inv_deg[0], deg[0]
-    n = att.n_global
-    local_src = jnp.where(src >= 0, att.local(jnp.maximum(src, 0)), 0)
-    push = jnp.where(src >= 0, offload.dma_gather(x * inv_deg, local_src), 0.0)
-    y = jnp.zeros_like(x)
-    # PIUMA remote atomic add at the dst owner
-    y = offload.remote_scatter_add(y, jnp.where(src >= 0, dst, -1), push, att, axis,
-                                   capacity=dst.shape[0])
-    dangling = offload.hierarchical_psum(
-        jnp.sum(jnp.where(deg > 0, 0.0, x)), [axis] if isinstance(axis, str) else list(axis))
-    out = (1 - damping) / n + damping * (y + dangling / n)
-    return out[None]
+    prog = engine.VertexProgram(edge_op="copy", combine="add",
+                                msg_fn=msg_fn, update_fn=update_fn)
+    state0 = {"x": jnp.full((n,), 1.0 / n, jnp.float32)}
+    frontier0 = jnp.ones((n,), jnp.int32)
+    return engine.run(csr, prog, state0, frontier0, max_iters=iters,
+                      mode="pull")["x"]
 
 
 def pagerank_distributed(g: ShardedGraph, att: ATT, mesh: Mesh, *, axis=None,
@@ -62,6 +55,7 @@ def pagerank_distributed(g: ShardedGraph, att: ATT, mesh: Mesh, *, axis=None,
     axis = axis if axis is not None else mesh.axis_names[0]
     spec = P(axis) if isinstance(axis, str) else P(tuple(axis))
     n, S, per = att.n_global, att.n_shards, att.per_shard
+    axes = [axis] if isinstance(axis, str) else list(axis)
 
     # degrees, sharded by att
     def _deg_shard(src, *, att, axis):
@@ -74,8 +68,18 @@ def pagerank_distributed(g: ShardedGraph, att: ATT, mesh: Mesh, *, axis=None,
                     in_specs=(spec,), out_specs=spec)(g.src)
     inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)
 
-    step = shard_map(partial(_pr_shard, att=att, damping=damping, axis=axis),
-                     mesh=mesh, in_specs=(spec,) * 6, out_specs=spec)
+    def msg_fn(state, frontier):
+        return state["x"] * state["inv_deg"]
+
+    def update_fn(state, acc, frontier, it):
+        x, dg = state["x"], state["deg"]
+        dangling = offload.hierarchical_psum(
+            jnp.sum(jnp.where(dg > 0, 0.0, x)), axes)
+        x = (1 - damping) / n + damping * (acc + dangling / n)
+        return {"x": x, "inv_deg": state["inv_deg"], "deg": dg}, frontier
+
+    prog = engine.VertexProgram(edge_op="copy", combine="add",
+                                msg_fn=msg_fn, update_fn=update_fn)
 
     # mask padded vertex slots out of the initial mass
     x = jnp.full((S, per), 1.0 / n, jnp.float32)
@@ -85,7 +89,8 @@ def pagerank_distributed(g: ShardedGraph, att: ATT, mesh: Mesh, *, axis=None,
          else (n - s + S - 1) // S for s in range(S)], jnp.int32)
     x = jnp.where(jnp.arange(per)[None, :] < spans[:, None], x, 0.0)
 
-    def body(_, x):
-        return step(g.src, g.dst, g.val, x, inv_deg, deg)
-
-    return jax.lax.fori_loop(0, iters, body, x)
+    state0 = {"x": x, "inv_deg": inv_deg, "deg": deg}
+    frontier0 = jnp.ones((S, per), jnp.int32)
+    state = engine.run_distributed(g, att, mesh, prog, state0, frontier0,
+                                   axis=axis, max_iters=iters, mode="push")
+    return state["x"]

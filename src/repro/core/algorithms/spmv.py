@@ -14,15 +14,13 @@ Distributed version (shard_map):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
-from ..dgas import ATT, block_rule
+from ..dgas import ATT
 from ..graph import CSR, BBCSR
 from .. import offload
 from .distgraph import ShardedGraph
@@ -54,36 +52,17 @@ def spmv_bbcsr(bb: BBCSR, x: jnp.ndarray, *, interpret: Optional[bool] = None) -
 # Distributed
 # ---------------------------------------------------------------------------
 
-def _spmv_shard_dgas(src, dst, val, x_local, *, x_att: ATT, row_att: ATT, axis):
-    src, dst, val, x_local = src[0], dst[0], val[0], x_local[0]
-    xg = offload.dgas_gather(x_local, jnp.where(dst >= 0, dst, -1), x_att, axis,
-                             capacity=dst.shape[0])
-    contrib = jnp.where(src >= 0, val * xg, 0.0)
-    local_rows = jnp.where(src >= 0, row_att.local(jnp.maximum(src, 0)), -1)
-    y = jnp.zeros((row_att.per_shard,), x_local.dtype)
-    return offload.dma_scatter_add(y, local_rows, contrib)[None]
-
-
-def _spmv_shard_allgather(src, dst, val, x_local, *, x_att: ATT, row_att: ATT, axis):
-    src, dst, val, x_local = src[0], dst[0], val[0], x_local[0]
-    xg = offload.all_gather_gather(x_local, jnp.where(dst >= 0, dst, -1), x_att, axis)
-    contrib = jnp.where(src >= 0, val * xg, 0.0)
-    local_rows = jnp.where(src >= 0, row_att.local(jnp.maximum(src, 0)), -1)
-    y = jnp.zeros((row_att.per_shard,), x_local.dtype)
-    return offload.dma_scatter_add(y, local_rows, contrib)[None]
-
-
 def spmv_distributed(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,
                      row_att: ATT, mesh: Mesh, *, axis=None,
                      mode: str = "dgas") -> jnp.ndarray:
     """y = A @ x with rows owned per `row_att` and x distributed per `x_att`.
 
-    Returns y stacked (S, per_shard) under `row_att` layout.
+    One pull step of the frontier engine: the row owner dgas-gathers exactly
+    the x elements its nonzeros name ("dgas"), or takes the replicate-x
+    baseline ("allgather").  Returns y stacked (S, per_shard) under `row_att`.
     """
-    axis = axis if axis is not None else mesh.axis_names[0]
-    fn = {"dgas": _spmv_shard_dgas, "allgather": _spmv_shard_allgather}[mode]
-    fn = partial(fn, x_att=x_att, row_att=row_att, axis=axis)
-    spec = P(axis) if isinstance(axis, str) else P(tuple(axis))
-    mapped = shard_map(fn, mesh=mesh,
-                       in_specs=(spec, spec, spec, spec), out_specs=spec)
-    return mapped(g.src, g.dst, g.val, x_sharded)
+    if mode not in ("dgas", "allgather"):
+        raise KeyError(mode)
+    from .. import engine
+    return engine.spmv_pass(g, x_sharded, x_att, row_att, mesh, axis=axis,
+                            mode=mode)

@@ -62,6 +62,15 @@ class CSR:
         out = jnp.zeros((self.n_rows, self.n_cols), vals.dtype)
         return out.at[self.row_ids(), self.indices].add(vals)
 
+    def transpose(self) -> "CSR":
+        """Host-side transpose (CSC view as a CSR). The frontier engine's pull
+        direction iterates in-edges, so it needs A^T sharing A's vertex ids."""
+        indptr = np.asarray(self.indptr)
+        rows = np.repeat(np.arange(self.n_rows), np.diff(indptr))
+        cols = np.asarray(self.indices)
+        vals = None if self.values is None else np.asarray(self.values)
+        return CSR.from_coo(cols, rows, vals, self.n_cols, self.n_rows)
+
     @staticmethod
     def from_coo(rows, cols, vals, n_rows, n_cols, *, sum_duplicates: bool = False) -> "CSR":
         rows = np.asarray(rows, np.int64)

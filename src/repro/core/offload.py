@@ -31,13 +31,15 @@ import jax.numpy as jnp
 from jax import lax
 
 from .dgas import ATT
+from .. import compat
 
 AxisName = Union[str, Sequence[str]]
 
 __all__ = [
     "dma_gather", "dma_scatter_add", "dma_strided_copy",
     "axis_size", "my_shard",
-    "dgas_gather", "remote_scatter_add", "all_gather_gather",
+    "dgas_gather", "remote_scatter_add", "remote_scatter_combine",
+    "all_gather_gather",
     "QueueState", "queue_make", "queue_balance",
     "hierarchical_psum", "barrier", "prefix_scan",
 ]
@@ -73,12 +75,7 @@ def dma_strided_copy(src: jnp.ndarray, start: int, stride: int, count: int) -> j
 # ---------------------------------------------------------------------------
 
 def axis_size(axis_name: AxisName) -> int:
-    if isinstance(axis_name, (tuple, list)):
-        s = 1
-        for a in axis_name:
-            s *= lax.axis_size(a)
-        return s
-    return lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)
 
 
 def my_shard(axis_name: AxisName) -> jnp.ndarray:
@@ -86,7 +83,7 @@ def my_shard(axis_name: AxisName) -> jnp.ndarray:
     if isinstance(axis_name, (tuple, list)):
         idx = jnp.int32(0)
         for a in axis_name:
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + lax.axis_index(a)
         return idx
     return lax.axis_index(axis_name)
 
@@ -210,6 +207,39 @@ def remote_scatter_add(local: jnp.ndarray, gidx: jnp.ndarray, vals: jnp.ndarray,
     (ridx, rvals), recvv, _, _ = _route((local_idx, vals), owner, axis_name, C)
     ridx = jnp.where(recvv, ridx, -1)
     return dma_scatter_add(local, ridx, rvals)
+
+
+def remote_scatter_combine(local: jnp.ndarray, gidx: jnp.ndarray,
+                           vals: jnp.ndarray, att: ATT, axis_name: AxisName, *,
+                           combine: str, identity,
+                           capacity: Optional[int] = None) -> jnp.ndarray:
+    """Remote atomic min/max (the non-additive PIUMA remote atomics).
+
+    Same routing as `remote_scatter_add`; the owner applies a fused
+    scatter-{min,max}.  Dropped/padding slots carry `identity` so they are
+    no-ops at the owner.
+    """
+    if combine not in ("min", "max"):
+        raise ValueError(f"combine must be 'min' or 'max', got {combine!r}")
+    n = gidx.shape[0]
+    S = axis_size(axis_name)
+    C = capacity if capacity is not None else min(n, 2 * (-(-n // S)))
+    owner = att.owner(gidx).astype(jnp.int32)
+    local_idx = att.local(gidx).astype(jnp.int32)
+    local_idx = jnp.where((gidx >= 0) & (gidx < att.n_global), local_idx, -1)
+    neutral = jnp.asarray(identity, vals.dtype)
+    # each routed slot holds exactly one item, so values arrive unchanged;
+    # empty slots are zero-filled by _route and masked to `identity` here.
+    (ridx, rvals), recvv, _, _ = _route((local_idx, vals), owner, axis_name, C)
+    ridx = jnp.where(recvv, ridx, -1)
+    rvals = jnp.where(recvv, rvals, neutral)
+    valid = (ridx >= 0) & (ridx < local.shape[0])
+    safe = jnp.where(valid, ridx, 0)
+    masked = jnp.where(valid, rvals.astype(local.dtype),
+                       jnp.asarray(identity, local.dtype))
+    if combine == "min":
+        return local.at[safe].min(masked)
+    return local.at[safe].max(masked)
 
 
 def all_gather_gather(local: jnp.ndarray, gidx: jnp.ndarray, att: ATT,

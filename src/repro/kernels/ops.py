@@ -19,7 +19,8 @@ from . import ref as ref
 from . import segment_sum as _ss
 from . import spmv_dma as _spmv
 
-__all__ = ["spmv_dma", "segment_sum_sorted", "embedding_bag", "flash_attention"]
+__all__ = ["spmv_dma", "spmspv_dma", "segment_sum_sorted", "embedding_bag",
+           "flash_attention"]
 
 # segment-sum kernel VMEM budget: out (M, d) + onehot (bn, M) in f32
 _SEGSUM_VMEM_LIMIT = 4 * 1024 * 1024
@@ -34,6 +35,14 @@ def _interp(interpret: Optional[bool]) -> bool:
 def spmv_dma(bb: BBCSR, x: jnp.ndarray, *, interpret: Optional[bool] = None) -> jnp.ndarray:
     """y = A @ x via the DMA-gather/selective-caching kernel."""
     return _spmv.spmv_bbcsr_kernel_call(bb, x, interpret=_interp(interpret))
+
+
+def spmspv_dma(bb: BBCSR, x: jnp.ndarray, tile_active: jnp.ndarray, *,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """y = A @ x for sparse x; tiles whose column block is inactive (per
+    `tile_active`, see `core.engine.tile_active`) skip compute."""
+    return _spmv.spmspv_bbcsr_kernel_call(bb, x, tile_active,
+                                          interpret=_interp(interpret))
 
 
 def segment_sum_sorted(data: jnp.ndarray, seg: jnp.ndarray, num_segments: int,

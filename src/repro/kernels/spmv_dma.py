@@ -31,12 +31,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core.graph import BBCSR
 
-__all__ = ["spmv_bbcsr_kernel_call"]
+__all__ = ["spmv_bbcsr_kernel_call", "spmspv_bbcsr_kernel_call"]
 
 
-def _kernel(rb_ref, cb_ref, init_ref, rows_ref, cols_ref, vals_ref, x_ref, y_ref,
-            *, block_rows: int, block_cols: int, tile_nnz: int):
-    i = pl.program_id(0)
+def _tile_yblk(rows_ref, cols_ref, vals_ref, x_ref, *, block_rows: int,
+               block_cols: int, tile_nnz: int):
+    """One tile's dense output block: gather + scatter on the MXU."""
     cols = cols_ref[0, :]                                   # (T,) local col ids
     rows = rows_ref[0, :]                                   # (T,) local row ids
     vals = vals_ref[0, :]                                   # (T,) 0 on padding
@@ -54,9 +54,17 @@ def _kernel(rb_ref, cb_ref, init_ref, rows_ref, cols_ref, vals_ref, x_ref, y_ref
     # fine-grained scatter-add inside VMEM, also on the MXU
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_nnz, block_rows), 1)
     onehot_s = (rows[:, None] == row_iota).astype(jnp.float32)      # (T, R)
-    yblk = jax.lax.dot_general(
+    return jax.lax.dot_general(
         contrib[None, :], onehot_s, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                        # (1, R)
+
+
+def _kernel(rb_ref, cb_ref, init_ref, rows_ref, cols_ref, vals_ref, x_ref, y_ref,
+            *, block_rows: int, block_cols: int, tile_nnz: int):
+    i = pl.program_id(0)
+    yblk = _tile_yblk(rows_ref, cols_ref, vals_ref, x_ref,
+                      block_rows=block_rows, block_cols=block_cols,
+                      tile_nnz=tile_nnz)
 
     @pl.when(init_ref[i] == 1)
     def _init():
@@ -65,6 +73,35 @@ def _kernel(rb_ref, cb_ref, init_ref, rows_ref, cols_ref, vals_ref, x_ref, y_ref
     @pl.when(init_ref[i] == 0)
     def _acc():
         y_ref[0, :] += yblk[0]
+
+
+def _spmspv_kernel(rb_ref, cb_ref, init_ref, act_ref, rows_ref, cols_ref,
+                   vals_ref, x_ref, y_ref, *, block_rows: int, block_cols: int,
+                   tile_nnz: int):
+    """SpMSpV: the scalar-prefetched `act` flag marks tiles whose column block
+    holds at least one active (nonzero) vector entry; inactive tiles skip the
+    gather/compute entirely (work ∝ active columns, the direction-optimizing
+    engine's sparse step) and only zero-initialize their output block."""
+    i = pl.program_id(0)
+    act = act_ref[i]
+
+    @pl.when(jnp.logical_and(init_ref[i] == 1, act == 0))
+    def _zero():
+        y_ref[0, :] = jnp.zeros((block_rows,), jnp.float32)
+
+    @pl.when(act == 1)
+    def _compute():
+        yblk = _tile_yblk(rows_ref, cols_ref, vals_ref, x_ref,
+                          block_rows=block_rows, block_cols=block_cols,
+                          tile_nnz=tile_nnz)
+
+        @pl.when(init_ref[i] == 1)
+        def _init():
+            y_ref[0, :] = yblk[0]
+
+        @pl.when(init_ref[i] == 0)
+        def _acc():
+            y_ref[0, :] += yblk[0]
 
 
 def spmv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray, *, interpret: bool = True
@@ -92,5 +129,41 @@ def spmv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray, *, interpret: bool = True
         out_shape=jax.ShapeDtypeStruct((n_rb, bb.block_rows), jnp.float32),
         interpret=interpret,
     )(bb.tile_rb, bb.tile_cb, bb.tile_init,
+      bb.rows_local, bb.cols_local, bb.vals, x2d)
+    return y2d.reshape(-1)[: bb.n_rows]
+
+
+def spmspv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray,
+                             tile_active: jnp.ndarray, *,
+                             interpret: bool = True) -> jnp.ndarray:
+    """y = A @ x for a sparsely-populated x.
+
+    `tile_active` is (n_tiles,) int32 — 1 iff the tile's column block holds a
+    nonzero x entry (see `engine.tile_active`).  Inactive tiles are skipped,
+    so work scales with the active column blocks instead of nnz(A).
+    """
+    n_rb, n_cb = bb.n_row_blocks, bb.n_col_blocks
+    x_pad = jnp.pad(x.astype(jnp.float32), (0, n_cb * bb.block_cols - x.shape[0]))
+    x2d = x_pad.reshape(n_cb, bb.block_cols)
+    kern = functools.partial(_spmspv_kernel, block_rows=bb.block_rows,
+                             block_cols=bb.block_cols, tile_nnz=bb.tile_nnz)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # tile_rb, tile_cb, tile_init, tile_active
+        grid=(bb.n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini, act: (i, 0)),
+            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini, act: (i, 0)),
+            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini, act: (i, 0)),
+            pl.BlockSpec((1, bb.block_cols), lambda i, rb, cb, ini, act: (cb[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bb.block_rows),
+                               lambda i, rb, cb, ini, act: (rb[i], 0)),
+    )
+    y2d = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rb, bb.block_rows), jnp.float32),
+        interpret=interpret,
+    )(bb.tile_rb, bb.tile_cb, bb.tile_init, tile_active.astype(jnp.int32),
       bb.rows_local, bb.cols_local, bb.vals, x2d)
     return y2d.reshape(-1)[: bb.n_rows]

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from ..configs import (get_config, ARCH_NAMES, input_specs, shape_names,
                        make_step, state_shapes, state_logical_axes,
                        param_logical_axes)
@@ -179,7 +180,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis_dict(compiled)
     flops = float(cost.get("flops", -1.0))
     hbm_bytes = float(cost.get("bytes accessed", -1.0))
     mem = compiled.memory_analysis()

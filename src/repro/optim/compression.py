@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import compat
+
 __all__ = ["psum_bf16", "psum_int8_ef", "init_ef_state"]
 
 
@@ -39,7 +41,7 @@ def _quant_int8(x):
 
 def psum_int8_ef(grads, ef, axis_name) -> Tuple[Any, Any]:
     """Returns (averaged grads, new error-feedback state)."""
-    n = lax.axis_size(axis_name) if isinstance(axis_name, str) else None
+    n = compat.axis_size(axis_name) if isinstance(axis_name, str) else None
 
     def one(g, e):
         x = g.astype(jnp.float32) + e

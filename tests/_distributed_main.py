@@ -122,6 +122,31 @@ lv = bfs_distributed(gsh2, att2, 0, mesh, axis="cores")
 got = np.asarray(unshard_vertex_array(lv, att2))
 check("bfs_distributed", np.array_equal(got, lv_local))
 
+# --- engine: direction-optimizing BFS + SSSP + CC on the same machinery -----
+from repro.core import engine as eng
+from repro.core.algorithms.sssp import sssp, sssp_distributed
+from repro.core.algorithms.cc import (connected_components,
+                                      connected_components_distributed,
+                                      symmetrize)
+
+g_rev = eng.reverse_graph(g, att2)
+lv2 = bfs_distributed(gsh2, att2, 0, mesh, axis="cores", g_rev=g_rev,
+                      mode="auto")
+got = np.asarray(unshard_vertex_array(lv2, att2))
+check("bfs_distributed/auto_direction", np.array_equal(got, lv_local))
+
+d_local = np.asarray(sssp(g, 0, delta=0.5))
+d = sssp_distributed(gsh2, att2, 0, mesh, axis="cores", delta=0.5)
+got = np.asarray(unshard_vertex_array(d, att2))
+check("sssp_distributed", np.allclose(got, d_local, atol=1e-5, equal_nan=True))
+
+gsym = symmetrize(g)
+gshs, atts = shard_graph(gsym, S, row_att=dgas.block_rule(gsym.n_rows, S))
+lab_local = np.asarray(connected_components(gsym, symmetrize_input=False))
+lab = connected_components_distributed(gshs, atts, mesh, axis="cores")
+got = np.asarray(unshard_vertex_array(lab, atts))
+check("cc_distributed", np.array_equal(got, lab_local))
+
 walks = np.asarray(random_walks_distributed(g, jnp.arange(S * 4), 6,
                                             jax.random.PRNGKey(0), mesh,
                                             axis="cores"))

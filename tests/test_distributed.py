@@ -4,7 +4,10 @@ import os
 import subprocess
 import sys
 
+import pytest
 
+
+@pytest.mark.slow
 def test_distributed_engines_and_algorithms():
     script = os.path.join(os.path.dirname(__file__), "_distributed_main.py")
     env = dict(os.environ)

@@ -4,7 +4,10 @@ import os
 import subprocess
 import sys
 
+import pytest
 
+
+@pytest.mark.slow
 def test_dryrun_single_cell():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)

@@ -1,0 +1,288 @@
+"""Frontier engine: output equivalence vs reference implementations,
+direction switching, the SpMSpV kernel path, and the new algorithms."""
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, rmat, uniform_random_graph
+from repro.core.graph import CSR
+from repro.core.algorithms import (bfs, bfs_program, pagerank, sssp,
+                                   connected_components, symmetrize, spmv)
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# references
+# ---------------------------------------------------------------------------
+
+def _np_bfs(indptr, indices, src):
+    n = indptr.shape[0] - 1
+    level = -np.ones(n, np.int64)
+    level[src] = 0
+    frontier, d = [src], 0
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in indices[indptr[u]:indptr[u + 1]]:
+                if level[v] < 0:
+                    level[v] = d + 1
+                    nxt.append(v)
+        frontier, d = nxt, d + 1
+    return level
+
+
+def _np_pagerank(csr, damping=0.85, iters=20):
+    n = csr.n_rows
+    indptr = np.asarray(csr.indptr)
+    rows = np.asarray(csr.row_ids())
+    cols = np.asarray(csr.indices)
+    deg = (indptr[1:] - indptr[:-1]).astype(np.float64)
+    x = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        push = np.where(deg[rows] > 0, x[rows] / np.maximum(deg[rows], 1), 0.0)
+        y = np.zeros(n)
+        np.add.at(y, cols, push)
+        dangling = x[deg == 0].sum()
+        x = (1 - damping) / n + damping * (y + dangling / n)
+    return x
+
+
+def _np_dijkstra(csr, src):
+    indptr = np.asarray(csr.indptr)
+    indices = np.asarray(csr.indices)
+    w = (np.asarray(csr.values) if csr.values is not None
+         else np.ones_like(indices, np.float64))
+    n = indptr.shape[0] - 1
+    dist = np.full(n, np.inf)
+    dist[src] = 0.0
+    pq = [(0.0, src)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        for e in range(indptr[u], indptr[u + 1]):
+            v, nd = indices[e], d + w[e]
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+    return dist
+
+
+def _np_components(n, rows, cols):
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for r, c in zip(rows, cols):
+        a, b = find(int(r)), find(int(c))
+        if a != b:
+            parent[max(a, b)] = min(a, b)
+    return np.array([find(i) for i in range(n)])
+
+
+def _same_partition(a, b):
+    m1, m2 = {}, {}
+    for x, y in zip(a.tolist(), b.tolist()):
+        if m1.setdefault(x, y) != y or m2.setdefault(y, x) != x:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# output equivalence: engine-backed ports vs references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["push", "pull", "auto"])
+def test_engine_bfs_matches_numpy_all_modes(mode):
+    g = uniform_random_graph(250, 4, seed=1)
+    lv = np.asarray(bfs(g, 0, mode=mode))
+    ref_lv = _np_bfs(np.asarray(g.indptr), np.asarray(g.indices), 0)
+    np.testing.assert_array_equal(lv, ref_lv)
+
+
+def test_engine_bfs_matches_on_rmat():
+    g = rmat(8, 8, seed=4)
+    lv = np.asarray(bfs(g, 0))
+    ref_lv = _np_bfs(np.asarray(g.indptr), np.asarray(g.indices), 0)
+    np.testing.assert_array_equal(lv, ref_lv)
+
+
+def test_engine_pagerank_matches_numpy():
+    g = rmat(7, 8, seed=2)
+    pr = np.asarray(pagerank(g, iters=25))
+    ref_pr = _np_pagerank(g, iters=25)
+    np.testing.assert_allclose(pr, ref_pr, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# direction switching
+# ---------------------------------------------------------------------------
+
+def test_push_pull_steps_agree():
+    """The two directions compute the same acc for the same frontier."""
+    g = uniform_random_graph(120, 5, seed=7)
+    prog = bfs_program()
+    n = g.n_rows
+    frontier = jnp.zeros((n,), jnp.int32).at[jnp.arange(0, n, 7)].set(1)
+    msg = prog.msg_fn({}, frontier)
+    dense = engine._dense_step(g.row_ids(), g.indices, None, msg, n, prog)
+    k = int(np.asarray(g.degrees()).max())
+    sparse = engine._sparse_step(g.indptr, g.indices, None, msg, frontier,
+                                 n, n, k, prog)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(sparse))
+
+
+def test_auto_mode_actually_switches():
+    """A long path pushes (frontier of 1); a star pulls after one hop."""
+    n = 200
+    path = CSR.from_coo(np.arange(n - 1), np.arange(1, n), None, n, n)
+    state0 = {"level": jnp.full((n,), -1, jnp.int32).at[0].set(0)}
+    f0 = jnp.zeros((n,), jnp.int32).at[0].set(1)
+    _, stats = engine.run(path, bfs_program(), state0, f0, max_iters=n,
+                          mode="auto", return_stats=True)
+    assert int(stats["pulls"]) == 0 and int(stats["pushes"]) >= n - 1
+
+    star = CSR.from_coo(np.zeros(n - 1, np.int64), np.arange(1, n), None, n, n)
+    # hub -> all: frontier jumps from 1 to n-1, over any n/32 threshold
+    _, stats = engine.run(star, bfs_program(), state0, f0, max_iters=n,
+                          mode="auto", return_stats=True)
+    assert int(stats["pushes"]) >= 1 and int(stats["pulls"]) >= 1
+
+
+def test_engine_rejects_bad_programs():
+    with pytest.raises(ValueError):
+        engine.VertexProgram(edge_op="div", combine="add",
+                             msg_fn=None, update_fn=None)
+    with pytest.raises(ValueError):
+        engine.VertexProgram(edge_op="mul", combine="median",
+                             msg_fn=None, update_fn=None)
+    g = uniform_random_graph(50, 3, seed=2)
+    with pytest.raises(ValueError):
+        bfs(g, 0, mode="psuh")
+    # a weighted kernel operand under an edge_op='copy' program would
+    # silently multiply by edge weights — must be rejected
+    bb_weighted = engine.build_pull_operand(g, block_rows=32, block_cols=32,
+                                            tile_nnz=64)
+    with pytest.raises(ValueError):
+        bfs(g, 0, kernel_bb=bb_weighted)
+
+
+def test_push_capacity_overflow_falls_back_to_dense():
+    """mode='push' with a small capacity must not truncate the frontier."""
+    g = uniform_random_graph(200, 4, seed=1)
+    ref_lv = np.asarray(bfs(g, 0))
+    n = g.n_rows
+    state0 = {"level": jnp.full((n,), -1, jnp.int32).at[0].set(0)}
+    f0 = jnp.zeros((n,), jnp.int32).at[0].set(1)
+    st, stats = engine.run(g, bfs_program(), state0, f0, max_iters=n,
+                           mode="push", push_capacity=4, return_stats=True)
+    np.testing.assert_array_equal(np.asarray(st["level"]), ref_lv)
+    assert int(stats["pulls"]) > 0  # oversized levels took the dense path
+
+
+# ---------------------------------------------------------------------------
+# SpMSpV kernel path
+# ---------------------------------------------------------------------------
+
+def test_spmspv_kernel_matches_masked_spmv():
+    g = rmat(7, 6, seed=9)
+    bb = engine.build_pull_operand(g, block_rows=32, block_cols=32,
+                                   tile_nnz=64)
+    n = g.n_rows
+    frontier = jnp.zeros((n,), jnp.int32).at[jnp.asarray([3, 50, 77])].set(1)
+    x = jnp.where(frontier > 0, jnp.asarray(RNG.random(n, np.float32)), 0.0)
+    got = np.asarray(ops.spmspv_dma(bb, x, engine.tile_active(bb, frontier)))
+    want = np.asarray(ref.spmv_bbcsr_ref(bb, x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_bfs_kernel_path_matches():
+    g = uniform_random_graph(200, 4, seed=12)
+    bb = engine.build_pull_operand(g, unit_values=True, block_rows=32,
+                                   block_cols=32, tile_nnz=64)
+    lv_k = np.asarray(bfs(g, 0, kernel_bb=bb))
+    lv = np.asarray(bfs(g, 0))
+    np.testing.assert_array_equal(lv_k, lv)
+
+
+# ---------------------------------------------------------------------------
+# new engine-backed algorithms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["push", "pull", "auto"])
+def test_sssp_matches_dijkstra(mode):
+    g = uniform_random_graph(220, 4, seed=5)
+    got = np.asarray(sssp(g, 0, mode=mode))
+    want = _np_dijkstra(g, 0)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_sssp_unweighted_equals_bfs_levels():
+    g = uniform_random_graph(150, 3, seed=6, weighted=False)
+    d = np.asarray(sssp(g, 0))
+    lv = np.asarray(bfs(g, 0)).astype(np.float64)
+    lv[lv < 0] = np.inf
+    np.testing.assert_allclose(d, lv)
+
+
+def test_sssp_delta_insensitive():
+    g = uniform_random_graph(150, 4, seed=8)
+    a = np.asarray(sssp(g, 0, delta=0.05))
+    b = np.asarray(sssp(g, 0, delta=10.0))  # ~Bellman-Ford
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["push", "pull", "auto"])
+def test_connected_components_match_union_find(mode):
+    g = uniform_random_graph(300, 1, seed=10)
+    lab = np.asarray(connected_components(g, mode=mode))
+    rows, cols = np.asarray(g.row_ids()), np.asarray(g.indices)
+    want = _np_components(300, rows, cols)
+    assert _same_partition(lab, want)
+
+
+def test_connected_components_two_cliques():
+    rows, cols = [], []
+    for c in range(2):
+        for i in range(6):
+            for j in range(6):
+                if i != j:
+                    rows.append(c * 6 + i)
+                    cols.append(c * 6 + j)
+    g = CSR.from_coo(rows, cols, None, 12, 12)
+    lab = np.asarray(connected_components(g))
+    assert len(set(lab[:6])) == 1 and len(set(lab[6:])) == 1
+    assert lab[0] != lab[6]
+
+
+def test_symmetrize_is_symmetric():
+    g = rmat(6, 4, seed=3)
+    s = symmetrize(g)
+    d = np.asarray(s.to_dense()) > 0
+    assert (d == d.T).all()
+
+
+# ---------------------------------------------------------------------------
+# engine as SpMV (one dense step of the (add, mul) program)
+# ---------------------------------------------------------------------------
+
+def test_engine_dense_step_is_spmv():
+    # messages flow src->dst, so a dense step over A^T's edge list == A @ x
+    g = rmat(6, 6, seed=13)
+    t = g.transpose()
+    x = jnp.asarray(RNG.random(g.n_cols, np.float32))
+    prog = engine.VertexProgram(edge_op="mul", combine="add",
+                                msg_fn=lambda s, f: s, update_fn=None)
+    acc = engine._dense_step(t.row_ids(), t.indices, t.values, x,
+                             t.n_cols, prog)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(spmv(g, x)),
+                               rtol=1e-4, atol=1e-5)
