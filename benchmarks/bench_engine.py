@@ -15,18 +15,33 @@ tiny first/last levels; the switch takes the cheaper side of each.  SSSP
 on the same engine to show the abstraction generalizes — one machinery, four
 workloads.
 
+Also reported:
+
+* the distributed push *byte model* (`core/traffic.py`): routed bytes per
+  sparse level under full-capacity routing vs the engine's compacted
+  frontier-proportional capacity (`engine.frontier_edge_capacity`);
+* ``--sweep-delta`` — delta-stepping bucket-width sweep on RMAT and
+  uniform-weight graphs against the histogram auto-tune (DESIGN.md §8).
+
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--scale 12]
+      PYTHONPATH=src python benchmarks/bench_engine.py --scale 7 --smoke
+      PYTHONPATH=src python benchmarks/bench_engine.py --sweep-delta
+
+``--smoke`` (the `scripts/ci.sh bench` lane) checks the outputs for NaN and
+for regression markers (modes disagreeing, byte model not shrinking) and
+exits nonzero on failure.
 """
 import argparse
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, rmat
-from repro.core.algorithms import (bfs, bfs_program, connected_components,
-                                   pagerank, sssp)
+from repro.core import engine, rmat, uniform_random_graph, traffic
+from repro.core.algorithms import (auto_delta, bfs, bfs_program,
+                                   connected_components, pagerank, sssp)
 
 
 def _t(fn, reps=3):
@@ -39,7 +54,46 @@ def _t(fn, reps=3):
     return best * 1e3  # ms
 
 
-def run(scale: int = 12, edge_factor: int = 8):
+def routed_bytes_report(n, m, pushes, n_shards=8, switch_frac=1 / 32):
+    """Byte model for the distributed push levels of this run: full-capacity
+    routing vs the engine's compacted frontier-proportional capacity."""
+    m_per_shard = -(-m // n_shards)
+    edge_cap = engine.frontier_edge_capacity(m_per_shard, switch_frac)
+    full = traffic.RouteByteCounter(n_shards)
+    compact = traffic.RouteByteCounter(n_shards)
+    for _ in range(max(pushes, 1)):
+        full.push_level(m_per_shard)
+        compact.push_level(edge_cap)
+    reduction = full.total_bytes / max(1, compact.total_bytes)
+    print(f"\nrouted bytes / sparse level (model, S={n_shards}): "
+          f"full={traffic.push_level_route_bytes(n_shards, m_per_shard):,} B  "
+          f"compact={traffic.push_level_route_bytes(n_shards, edge_cap):,} B  "
+          f"(capacity {m_per_shard} -> {edge_cap})")
+    print(f"sparse-phase total over {max(pushes, 1)} push levels: "
+          f"{full.total_bytes:,} B -> {compact.total_bytes:,} B "
+          f"({reduction:.1f}x less)")
+    return reduction
+
+
+def sweep_delta(scale: int = 10, edge_factor: int = 8):
+    """Delta sweep (satellite): RMAT + uniform weights vs the histogram rule."""
+    print("\ndelta-stepping sweep (iters = bucket expansions; ms best-of-3)")
+    for name, g in [("rmat", rmat(scale, edge_factor, seed=0)),
+                    ("uniform", uniform_random_graph(1 << scale, edge_factor,
+                                                     seed=0))]:
+        auto = auto_delta(g)
+        deltas = [0.25 * auto, 0.5 * auto, auto, 2 * auto, 4 * auto, 1e9]
+        tags = ["auto/4", "auto/2", "auto", "2*auto", "4*auto", "inf(BF)"]
+        print(f"  {name}: n={g.n_rows} m={g.nnz} auto_delta={auto:.4f}")
+        for tag, d in zip(tags, deltas):
+            _, stats = sssp(g, 0, delta=d, return_stats=True)
+            ms = _t(jax.jit(lambda d=d: sssp(g, 0, delta=d)))
+            print(f"    delta={tag:<8} ({d:9.4f})  iters={int(stats['iters']):4d}"
+                  f"  {ms:8.2f} ms")
+
+
+def run(scale: int = 12, edge_factor: int = 8, smoke: bool = False):
+    failures = []
     g = rmat(scale, edge_factor, seed=0)
     n, m = g.n_rows, g.nnz
     kmax = int(np.asarray(g.degrees()).max())
@@ -47,41 +101,84 @@ def run(scale: int = 12, edge_factor: int = 8):
 
     rows = []
     stats_by_mode = {}
+    levels_by_mode = {}
     for mode in ("push", "pull", "auto"):
         fn = jax.jit(lambda mode=mode: bfs(g, 0, mode=mode))
         ms = _t(fn)
         state0 = {"level": jnp.full((n,), -1, jnp.int32).at[0].set(0)}
         f0 = jnp.zeros((n,), jnp.int32).at[0].set(1)
-        _, stats = engine.run(g, bfs_program(), state0, f0, max_iters=n,
-                              mode=mode, return_stats=True)
+        st, stats = engine.run(g, bfs_program(), state0, f0, max_iters=n,
+                               mode=mode, return_stats=True)
         stats_by_mode[mode] = {k: int(v) for k, v in stats.items()}
+        levels_by_mode[mode] = np.asarray(st["level"])
         rows.append((f"bfs/{mode}", ms, stats_by_mode[mode]))
 
+    d_auto, s_stats = sssp(g, 0, return_stats=True)
     ms_sssp = _t(jax.jit(lambda: sssp(g, 0)))
-    rows.append(("sssp/auto(delta)", ms_sssp, {}))
+    rows.append((f"sssp/auto(delta={auto_delta(g):.3f})", ms_sssp,
+                 {k: int(v) for k, v in s_stats.items()}))
     from repro.core.algorithms import symmetrize
     gs = symmetrize(g)  # host-side prep, outside the jitted region
     ms_cc = _t(jax.jit(lambda: connected_components(gs, symmetrize_input=False)))
     rows.append(("cc/auto", ms_cc, {}))
+    pr = pagerank(g, iters=10)
     ms_pr = _t(jax.jit(lambda: pagerank(g, iters=10)))
     rows.append(("pagerank/dense x10", ms_pr, {}))
 
-    print(f"\n{'workload':<22}{'ms':>10}   iters/push/pull")
+    print(f"\n{'workload':<28}{'ms':>10}   iters/push/pull")
     for name, ms, st in rows:
         detail = (f"{st['iters']}/{st['pushes']}/{st['pulls']}" if st else "-")
-        print(f"{name:<22}{ms:>10.2f}   {detail}")
+        print(f"{name:<28}{ms:>10.2f}   {detail}")
 
     push_ms = dict((r[0], r[1]) for r in rows)["bfs/push"]
     auto_ms = dict((r[0], r[1]) for r in rows)["bfs/auto"]
     print(f"\nauto vs always-push: {push_ms / auto_ms:.2f}x "
           f"({stats_by_mode['auto']['pushes']} push + "
           f"{stats_by_mode['auto']['pulls']} pull levels)")
-    return rows
+
+    reduction = routed_bytes_report(n, m, stats_by_mode["auto"]["pushes"])
+
+    # --- smoke checks (ci.sh bench): NaN + regression markers ---------------
+    for mode in ("push", "pull"):
+        if not np.array_equal(levels_by_mode[mode], levels_by_mode["auto"]):
+            failures.append(f"REGRESSION: bfs/{mode} disagrees with bfs/auto")
+    d_np = np.asarray(d_auto)
+    if np.isnan(d_np).any():
+        failures.append("REGRESSION: NaN in sssp distances")
+    if not np.isfinite(d_np[np.asarray(levels_by_mode['auto']) >= 0]).all():
+        failures.append("REGRESSION: unreachable sssp distance on a reached vertex")
+    pr_np = np.asarray(pr)
+    if np.isnan(pr_np).any() or abs(float(pr_np.sum()) - 1.0) > 1e-2:
+        failures.append("REGRESSION: pagerank is NaN or not a distribution")
+    # the reduction is a model-level number; the meaningful guard is that the
+    # capacity derivation still enables compaction at this scale (edge_cap
+    # strictly below the full partition => run_distributed's compact path on)
+    m_per_shard = -(-m // 8)
+    if not (0 < engine.frontier_edge_capacity(m_per_shard, 1 / 32) < m_per_shard):
+        failures.append("REGRESSION: derived push capacity no longer compacts")
+    if reduction < 1.0:
+        failures.append("REGRESSION: compacted routing moves MORE bytes than full")
+    if not all(np.isfinite(r[1]) and r[1] > 0 for r in rows):
+        failures.append("REGRESSION: non-finite timing")
+
+    for f in failures:
+        print(f)
+    if smoke:
+        print("SMOKE " + ("FAIL" if failures else "PASS"))
+    return rows, failures
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale CI lane: exit nonzero on NaN/regression")
+    ap.add_argument("--sweep-delta", action="store_true")
     args = ap.parse_args()
-    run(args.scale, args.edge_factor)
+    if args.sweep_delta:
+        sweep_delta(min(args.scale, 10), args.edge_factor)
+        sys.exit(0)
+    _, failures = run(args.scale, args.edge_factor, smoke=args.smoke)
+    if args.smoke and failures:
+        sys.exit(1)

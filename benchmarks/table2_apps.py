@@ -49,7 +49,7 @@ def run(scale=12):
     measured["Random Walks"] = _t(
         jax.jit(lambda: random_walks(g, jnp.arange(1024), 16, key)))
     measured["Louvain Community"] = _t(
-        jax.jit(lambda: label_propagation(g, iters=5, max_deg=64)))
+        jax.jit(lambda: label_propagation(g, iters=5)))
     measured["TIES Sampler"] = _t(
         jax.jit(lambda: ties_sample(g, 256, 512, key)[2]))
     measured["Graph Sage"] = float("nan")  # covered by gnn minibatch bench below

@@ -38,8 +38,7 @@ pr = timed("PageRank (20 it)", jax.jit(lambda: pagerank(g, iters=20)))
 lv = timed("BFS", jax.jit(lambda: bfs(g, 0, max_levels=48)))
 wk = timed("Random walks (4096x16)", jax.jit(lambda: random_walks(
     g, jnp.arange(4096) % g.n_rows, 16, key)))
-lab = timed("Louvain (LPA, 8 it)", jax.jit(lambda: label_propagation(
-    g, iters=8, max_deg=64)))
+lab = timed("Louvain (LPA, 8 it)", jax.jit(lambda: label_propagation(g, iters=8)))
 dist = timed("SSSP (delta-stepping)", jax.jit(lambda: sssp(g, 0)))
 gsym = symmetrize(g)  # host-side prep for components
 comp = timed("Connected components", jax.jit(lambda: connected_components(

@@ -2,9 +2,13 @@
 # CI entry point.
 #
 #   scripts/ci.sh         — tier-1: the full suite (what the driver enforces)
-#   scripts/ci.sh fast    — inner-loop subset: skips the @slow
+#   scripts/ci.sh fast    — pre-commit default: skips the @slow
 #                           subprocess-spawning distributed/dryrun tests
-#                           (~4 min), keeps everything else
+#                           (~4 min), keeps everything else.  Run this before
+#                           every commit; run the full suite before merge.
+#   scripts/ci.sh bench   — engine benchmark smoke lane: bench_engine.py at
+#                           tiny scale, fails on NaN / regression markers
+#                           (mode disagreement, byte model not shrinking)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -13,11 +17,14 @@ case "${1:-all}" in
   fast)
     python -m pytest -x -q -m "not slow"
     ;;
+  bench)
+    python benchmarks/bench_engine.py --scale 7 --smoke
+    ;;
   all)
     python -m pytest -x -q
     ;;
   *)
-    echo "usage: scripts/ci.sh [fast|all]" >&2
+    echo "usage: scripts/ci.sh [fast|bench|all]" >&2
     exit 2
     ;;
 esac

@@ -2,11 +2,13 @@ from .spmv import spmv, spmv_ell, spmv_bbcsr, spmv_distributed
 from .spmspv import spmspv, spmspv_ell
 from .pagerank import pagerank, pagerank_distributed
 from .bfs import bfs, bfs_distributed, bfs_program
-from .sssp import sssp, sssp_distributed, sssp_program
+from .sssp import sssp, sssp_distributed, sssp_program, auto_delta
 from .cc import (connected_components, connected_components_distributed,
                  cc_program, symmetrize)
-from .random_walks import random_walks, random_walks_distributed
-from .louvain import label_propagation, modularity
+from .random_walks import (random_walks, random_walks_distributed,
+                           walk_queue_program)
+from .louvain import (label_propagation, label_propagation_distributed,
+                      lpa_program, modularity)
 from .sampling import ties_sample, neighbor_sample
 
 __all__ = [
@@ -14,10 +16,11 @@ __all__ = [
     "spmspv", "spmspv_ell",
     "pagerank", "pagerank_distributed",
     "bfs", "bfs_distributed", "bfs_program",
-    "sssp", "sssp_distributed", "sssp_program",
+    "sssp", "sssp_distributed", "sssp_program", "auto_delta",
     "connected_components", "connected_components_distributed",
     "cc_program", "symmetrize",
-    "random_walks", "random_walks_distributed",
-    "label_propagation", "modularity",
+    "random_walks", "random_walks_distributed", "walk_queue_program",
+    "label_propagation", "label_propagation_distributed", "lpa_program",
+    "modularity",
     "ties_sample", "neighbor_sample",
 ]

@@ -2,59 +2,99 @@
 
 Implemented as weighted label propagation — one-level Louvain local-move
 sweeps: every vertex adopts the label with maximal incident edge weight.
-The access pattern (gather all neighbor labels, weighted vote, atomic label
-update) is exactly the remote-atomic-heavy loop the paper benchmarks; full
-multi-level coarsening is out of scope (DESIGN.md §9).
+Since PR 2 the sweep is an engine program: the per-vertex weighted vote is
+the engine's ``combine='argmax_weighted'`` structured combine (DESIGN.md §4),
+so this module holds only the two-line message/update rules.  Votes come
+from a vertex's *out*-neighbors, and the engine combines over in-edges, so
+the program runs on the transposed adjacency.
+
+Distributed, the votes are owner-routed raw and reduced at the destination
+owner (`offload.remote_scatter_weighted_mode` — the remote-atomic-heavy loop
+the paper benchmarks); full multi-level coarsening is out of scope
+(DESIGN.md §9).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
-from ..graph import CSR, to_padded_ell
-from .. import offload
+from .. import engine, offload
+from ..dgas import ATT, block_rule
+from ..graph import CSR
+from .distgraph import shard_graph, shard_vertex_array
 
-__all__ = ["label_propagation", "modularity"]
+__all__ = ["label_propagation", "label_propagation_distributed",
+           "lpa_program", "modularity"]
 
-_PAD = jnp.int32(2**30)
 
+def lpa_program() -> engine.VertexProgram:
+    """Weighted label propagation as an argmax-combine engine program.
 
-def _weighted_mode(labels: jnp.ndarray, weights: jnp.ndarray, fallback: jnp.ndarray):
-    """Row-wise argmax_l sum(weights[labels==l]). labels padded with _PAD/w=0.
-
-    (n, k) -> (n,). Ties break toward the smaller label (deterministic).
+    Messages are current labels; the edge value is the vote weight; the
+    engine's structured combine returns (winning label's total weight,
+    winning label) with ties toward the smaller label.  Vertices with no
+    positive incident vote keep their label.  Every vertex stays active
+    every sweep (classic synchronous LPA), so the frontier never drains and
+    the engine runs exactly ``max_iters`` sweeps.
     """
-    n, k = labels.shape
-    order = jnp.argsort(labels, axis=1)
-    sl = jnp.take_along_axis(labels, order, 1)
-    sw = jnp.take_along_axis(weights, order, 1)
-    is_start = jnp.concatenate(
-        [jnp.ones((n, 1), bool), sl[:, 1:] != sl[:, :-1]], axis=1)
-    run_id = jnp.cumsum(is_start, axis=1) - 1                     # (n,k) in [0,k)
-    seg = (jnp.arange(n)[:, None] * k + run_id).reshape(-1)
-    run_w = jax.ops.segment_sum(sw.reshape(-1), seg, num_segments=n * k).reshape(n, k)
-    run_l = jnp.full((n * k,), _PAD, jnp.int32).at[seg].min(sl.reshape(-1)).reshape(n, k)
-    run_w = jnp.where(run_l == _PAD, -1.0, run_w)
-    best = jnp.argmax(run_w, axis=1)
-    lab = jnp.take_along_axis(run_l, best[:, None], 1)[:, 0]
-    has_any = jnp.max(run_w, axis=1) > 0
-    return jnp.where(has_any, lab, fallback)
+
+    def msg_fn(state, frontier):
+        return jnp.where(frontier > 0, state["label"], -1)
+
+    def update_fn(state, acc, frontier, it):
+        best_w, best_l = acc
+        label = jnp.where(best_w > 0, best_l, state["label"])
+        return {"label": label}, jnp.ones_like(frontier)
+
+    return engine.VertexProgram(edge_op="mul", combine="argmax_weighted",
+                                msg_fn=msg_fn, update_fn=update_fn)
 
 
 def label_propagation(csr: CSR, *, iters: int = 10,
-                      max_deg: int | None = None) -> jnp.ndarray:
-    """Returns (n,) int32 community labels."""
-    cols, vals, mask = to_padded_ell(csr, max_deg)
+                      mode: str = "pull") -> jnp.ndarray:
+    """Returns (n,) int32 community labels.
+
+    Defaults to mode='pull': the frontier is all-ones every sweep, so the
+    sparse/push machinery (and its max-degree gather budget) would be dead
+    weight under 'auto'.
+    """
     n = csr.n_rows
+    state0 = {"label": jnp.arange(n, dtype=jnp.int32)}
+    frontier0 = jnp.ones((n,), jnp.int32)
+    # votes flow out-neighbor -> voter: run the program over A^T's edges
+    state = engine.run(csr.transpose(), lpa_program(), state0, frontier0,
+                       max_iters=iters, mode=mode)
+    return state["label"]
 
-    def body(_, labels):
-        nl = offload.dma_gather(labels, jnp.where(mask, cols, -1), fill=0)
-        nl = jnp.where(mask, nl, _PAD).astype(jnp.int32)
-        w = jnp.where(mask, vals, 0.0)
-        return _weighted_mode(nl, w, labels)
 
-    labels0 = jnp.arange(n, dtype=jnp.int32)
-    return jax.lax.fori_loop(0, iters, body, labels0)
+def label_propagation_distributed(csr: CSR, mesh: Mesh, *,
+                                  att: Optional[ATT] = None, axis=None,
+                                  iters: int = 10) -> jnp.ndarray:
+    """Distributed LPA; labels returned stacked (S, per) under `att`.
+
+    Shards the transposed edge list by vote-source owner and pushes each
+    sweep through the engine: (voter, label, weight) triples are owner-routed
+    and reduced with the remote weighted-mode combine at the voter's owner.
+    """
+    axis = axis if axis is not None else mesh.axis_names[0]
+    names = [axis] if isinstance(axis, str) else list(axis)
+    S = 1
+    for a in names:
+        S *= int(mesh.shape[a])
+    att = att if att is not None else block_rule(csr.n_rows, S)
+    g_t, _ = shard_graph(csr.transpose(), S, row_att=att)
+    labels0 = shard_vertex_array(jnp.arange(csr.n_rows, dtype=jnp.int32), att)
+    state0 = {"label": labels0}
+    frontier0 = jnp.ones((S, att.per_shard), jnp.int32)
+    # LPA's frontier is all-ones every sweep: compacted push would always
+    # overflow and fall back, so disable it and skip the per-sweep check
+    state = engine.run_distributed(g_t, att, mesh, lpa_program(), state0,
+                                   frontier0, axis=axis, max_iters=iters,
+                                   mode="push", push_edge_capacity=0)
+    return state["label"]
 
 
 def modularity(csr: CSR, labels: jnp.ndarray) -> jnp.ndarray:

@@ -2,104 +2,121 @@
 
 Pure pointer chasing: every step is two dependent fine-grained reads
 (degree/offset from indptr, then the sampled neighbor from the edge array).
-The distributed version issues both as DGAS remote gathers against *different*
-ATT rules (vertex space vs edge space) — the pattern conventional caches are
-worst at and PIUMA is built for.
+Since PR 2 both variants run on shared engine machinery instead of bespoke
+traversal code:
+
+* locally each step is :func:`engine.sample_neighbors` — the push-compacted
+  ``combine='sample'`` step (keyed reservoir pick over the DMA-gathered
+  adjacency row); this module keeps only the scan over steps.
+* distributed, a walker is a *queue entry*, not a frontier bit: the walk runs
+  on :func:`engine.run_queue`, so walker load-balancing across shards comes
+  from the shared queue engine (`offload.queue_balance` work stealing) and
+  the per-step reads stay DGAS remote gathers against *different* ATT rules
+  (vertex space vs edge space) — the pattern conventional caches are worst
+  at and PIUMA is built for.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+import numpy as np
+from jax.sharding import Mesh
 
+from .. import engine, offload
 from ..dgas import ATT, block_rule
 from ..graph import CSR
-from .. import offload
 from .distgraph import shard_vertex_array
 
-__all__ = ["random_walks", "random_walks_distributed"]
+__all__ = ["random_walks", "random_walks_distributed", "walk_queue_program"]
 
 
 def random_walks(csr: CSR, starts: jnp.ndarray, n_steps: int,
                  key: jax.Array) -> jnp.ndarray:
     """Uniform random walks. Returns (n_walkers, n_steps+1) int32 node ids.
 
-    Walkers at a sink (deg 0) stay in place.
+    Walkers at a sink (deg 0) stay in place.  Each walker slot draws
+    independently, so walkers colliding on a vertex stay uncorrelated.
     """
-    n_walkers = starts.shape[0]
-
-    def step(cur, key):
-        start = offload.dma_gather(csr.indptr, cur)
-        end = offload.dma_gather(csr.indptr, cur + 1)
-        deg = end - start
-        r = jax.random.randint(key, (n_walkers,), 0, 1 << 30)
-        off = start + r % jnp.maximum(deg, 1)
-        nbr = offload.dma_gather(csr.indices, off)
-        return jnp.where(deg > 0, nbr, cur)
-
-    keys = jax.random.split(key, n_steps)
-
-    def body(cur, k):
-        nxt = step(cur, k)
+    def body(cur, step_key):
+        nxt = engine.sample_neighbors(csr, cur, step_key)
         return nxt, nxt
 
+    keys = jax.random.split(key, n_steps)
     _, path = jax.lax.scan(body, starts.astype(jnp.int32), keys)
     return jnp.concatenate([starts[None].astype(jnp.int32), path], axis=0).T
 
 
-def _rw_shard(indptr_sh, indices_sh, cur, keys, *, v_att: ATT, e_att: ATT, axis):
-    indptr_sh, indices_sh, cur = indptr_sh[0], indices_sh[0], cur[0]
-    n_walkers = cur.shape[0]
+def walk_queue_program(v_att: ATT, e_att: ATT, axis, cap: int) -> engine.QueueProgram:
+    """One walk step as a queue program: items are walker ids, the payload is
+    each walker's current vertex.  Both reads are fine-grained DGAS gathers;
+    the sampled move is the classic two-dependent-load pointer chase."""
 
-    def step(cur, key):
-        start = offload.dgas_gather(indptr_sh, cur, v_att, axis,
-                                    capacity=n_walkers).astype(jnp.int32)
-        end = offload.dgas_gather(indptr_sh, cur + 1, v_att, axis,
-                                  capacity=n_walkers).astype(jnp.int32)
+    def step_fn(operands, items, cur, state, it, key):
+        indptr_sh, indices_sh = operands
+        valid = items >= 0
+        q = jnp.where(valid, cur, -1)
+        start = offload.dgas_gather(indptr_sh, q, v_att, axis,
+                                    capacity=cap).astype(jnp.int32)
+        end = offload.dgas_gather(indptr_sh, jnp.where(valid, cur + 1, -1),
+                                  v_att, axis, capacity=cap).astype(jnp.int32)
         deg = end - start
-        r = jax.random.randint(key, (n_walkers,), 0, 1 << 30)
+        r = jax.random.randint(key, items.shape, 0, 1 << 30)
         off = start + r % jnp.maximum(deg, 1)
-        nbr = offload.dgas_gather(indices_sh, off, e_att, axis,
-                                  capacity=n_walkers).astype(jnp.int32)
-        return jnp.where(deg > 0, nbr, cur)
+        nbr = offload.dgas_gather(indices_sh,
+                                  jnp.where(valid & (deg > 0), off, -1),
+                                  e_att, axis, capacity=cap).astype(jnp.int32)
+        nxt = jnp.where(valid, jnp.where(deg > 0, nbr, cur), -1)
+        return items, nxt, state, (items, nxt)
 
-    def body(cur, k):
-        nxt = step(cur, k)
-        return nxt, nxt
-
-    _, path = jax.lax.scan(body, cur, keys[0])
-    return jnp.concatenate([cur[None], path], axis=0).T[None]
+    return engine.QueueProgram(step_fn)
 
 
 def random_walks_distributed(csr: CSR, starts: jnp.ndarray, n_steps: int,
                              key: jax.Array, mesh: Mesh, *, axis=None) -> jnp.ndarray:
     """Walker-parallel distributed walks; graph arrays DGAS-sharded.
 
-    indptr sharded by a vertex-space block ATT; indices (edge array) by an
-    edge-space block ATT. Walkers sharded evenly. Returns (n_walkers, n_steps+1).
+    indptr is sharded by a vertex-space block ATT; indices (edge array) by an
+    edge-space block ATT.  Walkers start at their start vertex's owner shard
+    and are rebalanced every step by the queue engine.  Returns
+    (n_walkers, n_steps+1).
     """
     axis = axis if axis is not None else mesh.axis_names[0]
-    spec = P(axis) if isinstance(axis, str) else P(tuple(axis))
-    S = int(np_prod([mesh.shape[a] for a in ([axis] if isinstance(axis, str) else axis)]))
+    names = [axis] if isinstance(axis, str) else list(axis)
+    S = 1
+    for a in names:
+        S *= int(mesh.shape[a])
     v_att = block_rule(csr.n_rows + 1, S)
     e_att = block_rule(int(csr.indices.shape[0]), S)
-    indptr_sh = shard_vertex_array(jnp.asarray(csr.indptr), v_att)
-    indices_sh = shard_vertex_array(jnp.asarray(csr.indices), e_att)
-    n_walkers = starts.shape[0]
-    assert n_walkers % S == 0, "walkers must divide across shards"
-    cur = starts.astype(jnp.int32).reshape(S, n_walkers // S)
-    keys = jax.random.split(key, (S, n_steps))
-    fn = partial(_rw_shard, v_att=v_att, e_att=e_att, axis=axis)
-    mapped = shard_map(fn, mesh=mesh, in_specs=(spec,) * 4, out_specs=spec)
-    out = mapped(indptr_sh, indices_sh, cur, keys)
-    return out.reshape(n_walkers, n_steps + 1)
+    indptr_sh = shard_vertex_array(np.asarray(csr.indptr), v_att)
+    indices_sh = shard_vertex_array(np.asarray(csr.indices), e_att)
 
+    starts_np = np.asarray(starts, np.int32)
+    W = starts_np.shape[0]
+    # natural DGAS placement: a walker enqueues at its start vertex's owner;
+    # capacity covers both that initial skew and the balanced ceil(W/S)
+    owner = np.asarray(block_rule(csr.n_rows, S).owner(jnp.asarray(starts_np)))
+    counts = np.bincount(owner, minlength=S)
+    cap = max(1, int(counts.max()), -(-W // S))
+    items0 = np.full((S, cap), -1, np.int32)
+    cur0 = np.zeros((S, cap), np.int32)
+    for s in range(S):
+        sel = np.nonzero(owner == s)[0]
+        items0[s, :sel.size] = sel
+        cur0[s, :sel.size] = starts_np[sel]
 
-def np_prod(xs):
-    out = 1
-    for x in xs:
-        out *= int(x)
-    return out
+    prog = walk_queue_program(v_att, e_att, axis, cap)
+    _, (out_ids, out_v) = engine.run_queue(
+        mesh, prog, jnp.asarray(items0), jnp.asarray(cur0),
+        (indptr_sh, indices_sh), n_iters=n_steps, axis=axis, key=key)
+
+    # stitch the per-(shard, step) snapshots back into per-walker paths
+    out_ids = np.asarray(out_ids)   # (S, n_steps, cap)
+    out_v = np.asarray(out_v)
+    walks = np.zeros((W, n_steps + 1), np.int32)
+    walks[:, 0] = starts_np
+    for t in range(n_steps):
+        ids = out_ids[:, t, :].reshape(-1)
+        vs = out_v[:, t, :].reshape(-1)
+        sel = ids >= 0
+        walks[ids[sel], t + 1] = vs[sel]
+    return jnp.asarray(walks)

@@ -4,8 +4,11 @@ TIES = Totally Induced Edge Sampling (Ahmed et al.): sample edges uniformly,
 keep the induced subgraph on their endpoints.
 
 `neighbor_sample` is the GraphSAGE-style layered fanout sampler required by
-the `minibatch_lg` GNN shape — with-replacement sampling straight out of CSR
-(each draw is the random-walk double-gather, a PIUMA fine-grained pattern).
+the `minibatch_lg` GNN shape — with-replacement sampling straight out of CSR.
+Each layer is one `engine.sample_neighbors` pass (the push-compacted
+``combine='sample'`` step: DMA-gathered adjacency rows + a keyed reservoir
+pick per query slot, a PIUMA fine-grained pattern); this module keeps only
+the layered fanout shape.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph import CSR
-from .. import offload
+from .. import engine, offload
 
 __all__ = ["ties_sample", "neighbor_sample", "neighbor_sample_np"]
 
@@ -54,19 +57,16 @@ def neighbor_sample(csr: CSR, seeds: jnp.ndarray, fanouts: Sequence[int],
     """Layered with-replacement fanout sampling.
 
     Returns a list of node-id arrays: [seeds (B,), (B,f1), (B,f1,f2), ...].
-    Sink nodes self-sample (id repeated), keeping shapes static.
+    Sink nodes self-sample (id repeated), keeping shapes static.  Each layer
+    replicates every query f times — one independent reservoir slot per draw —
+    and runs one engine sampling step over the flattened slots.
     """
     layers = [seeds.astype(jnp.int32)]
     cur = seeds.astype(jnp.int32)
-    for i, f in enumerate(fanouts):
+    for f in fanouts:
         key, sub = jax.random.split(key)
-        flat = cur.reshape(-1)
-        start = offload.dma_gather(csr.indptr, flat)
-        deg = offload.dma_gather(csr.indptr, flat + 1) - start
-        r = jax.random.randint(sub, (flat.shape[0], f), 0, 1 << 30)
-        off = start[:, None] + r % jnp.maximum(deg, 1)[:, None]
-        nbr = offload.dma_gather(csr.indices, off)
-        nbr = jnp.where(deg[:, None] > 0, nbr, flat[:, None])
+        flat = jnp.repeat(cur.reshape(-1), f)
+        nbr = engine.sample_neighbors(csr, flat, sub)
         nxt = nbr.reshape(cur.shape + (f,))
         layers.append(nxt)
         cur = nxt

@@ -31,7 +31,7 @@ from ..dgas import ATT
 from ..graph import CSR
 from .distgraph import ShardedGraph
 
-__all__ = ["sssp", "sssp_distributed", "sssp_program"]
+__all__ = ["sssp", "sssp_distributed", "sssp_program", "auto_delta"]
 
 _INF = jnp.float32(jnp.inf)
 
@@ -66,20 +66,46 @@ def sssp_program(delta: float, *, global_min=None) -> engine.VertexProgram:
                                 msg_fn=msg_fn, update_fn=update_fn)
 
 
-def _default_delta(csr: CSR) -> float:
+def auto_delta(csr: CSR, *, bins: int = 64, light_edges_per_vertex: float = 4.0
+               ) -> float:
+    """Delta from the weight histogram (DESIGN.md §8).
+
+    Pick delta at the weight quantile where the expected number of sub-delta
+    ("light") edges per vertex reaches ``light_edges_per_vertex``:
+    delta ≈ quantile(w, q) with q = min(1, target / avg_degree), read off a
+    ``bins``-bin histogram CDF (the histogram, not a full sort, is what a
+    PIUMA-side autotuner would keep as a running statistic).  Small targets
+    degenerate toward Dijkstra's serial bucket order (many near-empty
+    expansions); very large ones re-relax heavy chains Bellman-Ford-style.
+    The default target 4.0 comes from the `bench_engine.py --sweep-delta`
+    sweep on RMAT and uniform-weight graphs (DESIGN.md §8): on this
+    bulk-synchronous engine, iteration count dominates, and the 4-light-edge
+    quantile sits within ~10% of the best fixed delta on both graph classes
+    while keeping the bucket discipline that bounds re-relaxation work.
+    """
     if csr.values is None:
         return 1.0
     w = np.asarray(csr.values)
-    # classic heuristic: delta ~ mean weight / mean out-degree
+    if w.size == 0:
+        return 1.0
     avg_deg = max(1.0, csr.nnz / max(1, csr.n_rows))
-    return float(max(w.mean(), 1e-6) / avg_deg * 4.0)
+    hist, edges = np.histogram(w, bins=bins)
+    cdf = np.cumsum(hist) / max(1, w.size)
+    q = min(1.0, light_edges_per_vertex / avg_deg)
+    k = int(np.searchsorted(cdf, q))
+    return float(max(edges[min(k + 1, len(edges) - 1)], 1e-6))
 
 
 def sssp(csr: CSR, source: int, *, delta: Optional[float] = None,
-         max_iters: Optional[int] = None, mode: str = "auto") -> jnp.ndarray:
-    """Returns (n,) float32 distances; unreachable = +inf."""
+         max_iters: Optional[int] = None, mode: str = "auto",
+         return_stats: bool = False):
+    """Returns (n,) float32 distances; unreachable = +inf.
+
+    delta: bucket width; None auto-tunes from the weight histogram
+      (:func:`auto_delta`).
+    """
     n = csr.n_rows
-    delta = delta if delta is not None else _default_delta(csr)
+    delta = delta if delta is not None else auto_delta(csr)
     max_iters = max_iters if max_iters is not None else 4 * n
     state0 = {
         "dist": jnp.full((n,), _INF).at[source].set(0.0),
@@ -87,9 +113,12 @@ def sssp(csr: CSR, source: int, *, delta: Optional[float] = None,
         "bound": jnp.float32(delta),
     }
     frontier0 = jnp.zeros((n,), jnp.int32).at[source].set(1)
-    state = engine.run(csr, sssp_program(delta), state0, frontier0,
-                       max_iters=max_iters, mode=mode)
-    return state["dist"]
+    out = engine.run(csr, sssp_program(delta), state0, frontier0,
+                     max_iters=max_iters, mode=mode, return_stats=return_stats)
+    if return_stats:
+        state, stats = out
+        return state["dist"], stats
+    return out["dist"]
 
 
 def sssp_distributed(g: ShardedGraph, att: ATT, source: int, mesh: Mesh, *,

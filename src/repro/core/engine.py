@@ -17,9 +17,23 @@ Semiring-lite model.  A program computes, per iteration::
     acc[v] = combine_{(u,v) in E} edge_op(msg[u], w_uv)
     state, frontier = update_fn(state, acc, frontier, it)
 
-with ``edge_op`` in {mul, add, copy} and ``combine`` in {add, min, max}.
+with ``edge_op`` in {mul, add, copy} and ``combine`` in {add, min, max} — plus
+two *structured* combines that extend the semiring with non-scalar reductions
+(DESIGN.md §4):
+
+* ``combine='argmax_weighted'`` — per-destination weighted label mode: the
+  message is an int label, the edge value is the vote weight, and ``acc`` is
+  the pair (winning label's total weight, winning label).  Weighted label
+  propagation (Louvain local moves) is this combine plus a two-line update.
+* ``combine='sample'`` — per-destination keyed reservoir pick: every edge
+  draws a random priority from the iteration key (Efraimidis–Spirakis when
+  ``edge_op='mul'`` weights the draw) and ``acc`` is the pair (best priority,
+  sampled source payload).  Random walks and neighbor sampling are one-step
+  programs on this combine, via :func:`sample_neighbors`.
+
 Frontier masking is folded into ``msg_fn`` (inactive vertices emit the combine
-identity), which is what makes push and pull produce the same ``acc``.
+identity — ``-1`` for structured payloads), which is what makes push and pull
+produce the same ``acc``.
 
 Direction optimization (Beamer-style, re-expressed for bulk arrays):
 
@@ -61,10 +75,12 @@ AxisName = Union[str, Sequence[str]]
 
 __all__ = [
     "VertexProgram", "run", "run_distributed", "spmv_pass",
-    "build_pull_operand", "tile_active",
+    "build_pull_operand", "tile_active", "sample_neighbors",
+    "QueueProgram", "run_queue", "frontier_edge_capacity",
 ]
 
 _COMBINE_IDENTITY = {"add": 0.0, "min": float("inf"), "max": float("-inf")}
+_STRUCTURED_COMBINES = ("argmax_weighted", "sample")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,7 +89,10 @@ class VertexProgram:
 
     Attributes:
       edge_op:   how a message meets the edge weight: 'mul' | 'add' | 'copy'.
-      combine:   destination-side reduction: 'add' | 'min' | 'max'.
+      combine:   destination-side reduction: 'add' | 'min' | 'max', or a
+                 structured combine 'argmax_weighted' | 'sample' (the message
+                 is then an int32 payload, -1 = inactive, and `acc` is the
+                 (score, payload) pair — see the module docstring).
       msg_fn:    (state, frontier) -> (n,) messages; MUST emit `identity` for
                  vertices outside the frontier (that makes push == pull).
       update_fn: (state, acc, frontier, it) -> (state, next_frontier).
@@ -89,13 +108,26 @@ class VertexProgram:
     def __post_init__(self):
         if self.edge_op not in ("mul", "add", "copy"):
             raise ValueError(f"unknown edge_op {self.edge_op!r}")
-        if self.combine not in _COMBINE_IDENTITY:
+        if (self.combine not in _COMBINE_IDENTITY
+                and self.combine not in _STRUCTURED_COMBINES):
             raise ValueError(f"unknown combine {self.combine!r}")
+        if self.structured and self.edge_op == "add":
+            raise ValueError(f"combine {self.combine!r} takes its weight from "
+                             "the edge value: edge_op must be 'mul' (weighted)"
+                             " or 'copy' (unit)")
+
+    @property
+    def structured(self) -> bool:
+        """True for the non-scalar combines whose acc is a (score, payload)
+        pair rather than a single reduced value."""
+        return self.combine in _STRUCTURED_COMBINES
 
     @property
     def ident(self):
         if self.identity is not None:
             return self.identity
+        if self.structured:
+            return float("-inf")  # score identity; payload identity is -1
         return _COMBINE_IDENTITY[self.combine]
 
 
@@ -155,8 +187,52 @@ def tile_active(bb: BBCSR, frontier: jnp.ndarray) -> jnp.ndarray:
 # Local engine
 # ---------------------------------------------------------------------------
 
-def _dense_step(rows, cols, vals, msg, n, prog: VertexProgram):
+def _gather_rows(indptr, indices, vals, ids, k):
+    """DMA-gather up to ``k`` adjacency entries per id (padding id = -1).
+
+    Returns (cols (C, k), w (C, k) f32 — edge values or unit, valid (C, k),
+    deg (C,)); the shared expansion behind the push step and the compacted
+    sampling step.
+    """
+    safe = jnp.maximum(ids, 0)
+    start = jnp.take(indptr, safe)
+    deg = jnp.take(indptr, safe + 1) - start
+    offs = start[:, None] + jnp.arange(k, dtype=indptr.dtype)[None, :]
+    valid = (jnp.arange(k)[None, :] < deg[:, None]) & (ids >= 0)[:, None]
+    cols = offload.dma_gather(indices, jnp.where(valid, offs, -1))
+    if vals is not None:
+        w = offload.dma_gather(vals, jnp.where(valid, offs, -1))
+    else:
+        w = jnp.ones((ids.shape[0], k), jnp.float32)
+    return cols, w, valid, deg
+
+
+def _es_scores(u: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Efraimidis–Spirakis reservoir priorities: the max of u_i^(1/w_i) picks
+    item i with probability w_i / sum(w); non-positive weights never win."""
+    return jnp.where(w > 0, u ** (1.0 / jnp.maximum(w, 1e-30)), -jnp.inf)
+
+
+def _structured_combine(idx, payload, w, n, prog: VertexProgram, key):
+    """Edge-stream entry to the structured combines: idx = destination per
+    item (-1 ignored), payload = int message, w = edge weight."""
+    idx = jnp.where(payload >= 0, idx, -1)
+    if prog.combine == "argmax_weighted":
+        return offload.segment_weighted_mode(idx, payload, w, n)
+    # 'sample': keyed reservoir pick — iid priorities, so the per-destination
+    # argmax is a uniform pick; Efraimidis–Spirakis exponents weight the draw
+    # by the edge value when edge_op='mul'.
+    u = jax.random.uniform(key, idx.shape, minval=1e-7, maxval=1.0)
+    score = _es_scores(u, w) if prog.edge_op == "mul" else u
+    return offload.segment_argmax(idx, score, payload, n)
+
+
+def _dense_step(rows, cols, vals, msg, n, prog: VertexProgram, key=None):
     """Pull direction: one edge-parallel pass over every edge."""
+    if prog.structured:
+        payload = jnp.take(msg, rows).astype(jnp.int32)
+        w = vals if vals is not None else jnp.ones_like(rows, jnp.float32)
+        return _structured_combine(cols, payload, w, n, prog, key)
     em = jnp.take(msg, rows)
     ev = _apply_edge(em, vals, prog.edge_op)
     if prog.combine == "add":
@@ -166,19 +242,19 @@ def _dense_step(rows, cols, vals, msg, n, prog: VertexProgram):
 
 
 def _sparse_step(indptr, indices, vals, msg, frontier, n, C, k,
-                 prog: VertexProgram):
+                 prog: VertexProgram, key=None):
     """Push direction: expand only the ≤C active vertices' adjacency rows."""
     ids, = jnp.nonzero(frontier, size=C, fill_value=-1)
+    cols, ev, valid, _ = _gather_rows(indptr, indices, vals, ids, k)
     safe = jnp.maximum(ids, 0)
-    start = jnp.take(indptr, safe)
-    deg = jnp.take(indptr, safe + 1) - start
-    offs = start[:, None] + jnp.arange(k, dtype=indptr.dtype)[None, :]
-    valid = (jnp.arange(k)[None, :] < deg[:, None]) & (ids >= 0)[:, None]
-    cols = offload.dma_gather(indices, jnp.where(valid, offs, -1))
-    if vals is not None:
-        ev = offload.dma_gather(vals, jnp.where(valid, offs, -1))
-    else:
-        ev = jnp.ones((C, k), msg.dtype)
+    if prog.structured:
+        payload = jnp.broadcast_to(
+            jnp.take(msg, safe).astype(jnp.int32)[:, None], (C, k))
+        idx = jnp.where(valid, cols, -1).reshape(-1)
+        return _structured_combine(idx, payload.reshape(-1),
+                                   ev.astype(jnp.float32).reshape(-1), n,
+                                   prog, key)
+    ev = ev.astype(msg.dtype)
     em = jnp.take(msg, safe)[:, None]
     contrib = _apply_edge(em, ev, prog.edge_op)
     contrib = jnp.where(valid, contrib, jnp.asarray(prog.ident, msg.dtype))
@@ -187,10 +263,58 @@ def _sparse_step(indptr, indices, vals, msg, frontier, n, C, k,
                             contrib.reshape(-1), prog.combine, prog.ident)
 
 
+def _max_degree(indptr) -> int:
+    # static max degree for gather budgets; derived with numpy from the
+    # (concrete) indptr so the callers stay usable under jit
+    indptr_np = np.asarray(indptr)
+    k = int((indptr_np[1:] - indptr_np[:-1]).max()) if indptr_np.size > 1 else 1
+    return max(k, 1)
+
+
+def sample_neighbors(csr: CSR, queries: jnp.ndarray, key: jax.Array, *,
+                     weighted: bool = False,
+                     k: Optional[int] = None) -> jnp.ndarray:
+    """One push-compacted step of a ``combine='sample'`` program.
+
+    For every query slot (duplicates allowed — each slot draws independently,
+    so colliding walkers stay uncorrelated) the engine picks one out-neighbor
+    of that vertex.  The unweighted pick lowers the reservoir to the
+    equivalent inverse-CDF draw — one random offset into the row, O(1) DMA
+    per slot instead of a max-degree-padded row gather (same uniform
+    distribution, and the pointer-chase access pattern the paper's random
+    walks measure).  ``weighted=True`` keeps the full keyed reservoir: the
+    row is DMA-gathered and the per-slot argmax of Efraimidis–Spirakis
+    priorities draws proportionally to edge values.  Sinks return the query
+    itself (walkers stay put, shapes stay static).
+
+    Random walks and layered neighbor sampling are scans/loops over this one
+    step — the offload machinery (DMA gather, keyed pick) is the engine's,
+    the algorithms keep only their loop shape.
+    """
+    q = queries.astype(jnp.int32)
+    safe = jnp.maximum(q, 0)
+    if not weighted:
+        start = jnp.take(csr.indptr, safe)
+        deg = jnp.take(csr.indptr, safe + 1) - start
+        r = jax.random.randint(key, q.shape, 0, 1 << 30)
+        off = start + r % jnp.maximum(deg, 1)
+        nbr = offload.dma_gather(csr.indices, jnp.where(deg > 0, off, -1))
+        return jnp.where((deg > 0) & (q >= 0), nbr, q)
+    if k is None:
+        k = _max_degree(csr.indptr)
+    cols, w, valid, deg = _gather_rows(csr.indptr, csr.indices, csr.values,
+                                       q, k)
+    u = jax.random.uniform(key, cols.shape, minval=1e-7, maxval=1.0)
+    score = jnp.where(valid, _es_scores(u, w), -jnp.inf)
+    pick = jnp.argmax(score, axis=1)
+    nbr = jnp.take_along_axis(cols, pick[:, None], 1)[:, 0]
+    return jnp.where((deg > 0) & (q >= 0), nbr, q)
+
+
 def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
         max_iters: int, mode: str = "auto", push_capacity: Optional[int] = None,
         kernel_bb: Optional[BBCSR] = None, interpret: Optional[bool] = None,
-        return_stats: bool = False):
+        key: Optional[jax.Array] = None, return_stats: bool = False):
     """Run `prog` to frontier exhaustion (or `max_iters`).
 
     mode: 'auto' (direction-optimizing), 'push' (always sparse), 'pull'
@@ -198,10 +322,13 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
       sparse while it fits `push_capacity` (default n/32), dense otherwise.
     kernel_bb: BBCSR of A^T (see `build_pull_operand`) — routes both
       directions through the Pallas SpMV/SpMSpV kernels (combine='add' only).
+    key: PRNG key, required for combine='sample' (folded per iteration).
     return_stats: also return {'iters', 'pushes', 'pulls'} taken.
     """
     if mode not in ("auto", "push", "pull"):
         raise ValueError(f"mode must be 'auto', 'push' or 'pull', got {mode!r}")
+    if prog.combine == "sample" and key is None:
+        raise ValueError("combine='sample' draws keyed priorities: pass key=")
     n = csr.n_rows
     rows, cols = csr.row_ids(), csr.indices
     vals = csr.values
@@ -209,14 +336,7 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
         vals = None
     elif vals is None:
         vals = jnp.ones_like(csr.indices, jnp.float32)
-    if mode != "pull":
-        # static max degree for the push gather budget; derived with numpy
-        # from the (concrete) indptr so `run` stays usable under jit
-        indptr_np = np.asarray(csr.indptr)
-        k = int((indptr_np[1:] - indptr_np[:-1]).max()) if indptr_np.size > 1 else 1
-    else:
-        k = 1
-    k = max(k, 1)
+    k = _max_degree(csr.indptr) if mode != "pull" else 1
     if push_capacity is None:
         push_capacity = n if mode == "push" else max(1, n // 32)
     C = min(push_capacity, n)
@@ -234,19 +354,19 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
                     "edge_op 'copy' needs a unit-valued kernel operand — "
                     "build it with build_pull_operand(csr, unit_values=True)")
 
-    def dense(msg, frontier):
+    def dense(msg, frontier, it_key):
         if kernel_bb is not None:
             from ..kernels import ops as kops
             return kops.spmv_dma(kernel_bb, msg, interpret=interpret)[:n]
-        return _dense_step(rows, cols, vals, msg, n, prog)
+        return _dense_step(rows, cols, vals, msg, n, prog, it_key)
 
-    def sparse(msg, frontier):
+    def sparse(msg, frontier, it_key):
         if kernel_bb is not None:
             from ..kernels import ops as kops
             return kops.spmspv_dma(kernel_bb, msg, tile_active(kernel_bb, frontier),
                                    interpret=interpret)[:n]
         return _sparse_step(csr.indptr, csr.indices, vals, msg, frontier,
-                            n, C, k, prog)
+                            n, C, k, prog, it_key)
 
     def cond(carry):
         state, frontier, it, _, _ = carry
@@ -255,15 +375,16 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
     def body(carry):
         state, frontier, it, n_push, n_pull = carry
         msg = prog.msg_fn(state, frontier)
+        it_key = jax.random.fold_in(key, it) if key is not None else None
         if mode == "pull":
-            acc, was_push = dense(msg, frontier), jnp.int32(0)
+            acc, was_push = dense(msg, frontier, it_key), jnp.int32(0)
         else:
             # 'push' too: a frontier over C would be silently truncated by
             # the size=C nonzero, so oversized levels fall back to dense
             # (with push's default C=n the fallback never fires)
             small = frontier.astype(jnp.int32).sum() <= C
-            acc = lax.cond(small, lambda: sparse(msg, frontier),
-                           lambda: dense(msg, frontier))
+            acc = lax.cond(small, lambda: sparse(msg, frontier, it_key),
+                           lambda: dense(msg, frontier, it_key))
             was_push = small.astype(jnp.int32)
         state, frontier = prog.update_fn(state, acc, frontier, it)
         return state, frontier, it + 1, n_push + was_push, n_pull + (1 - was_push)
@@ -287,17 +408,68 @@ def _spec(axis: AxisName) -> P:
     return P(axis) if isinstance(axis, str) else P(tuple(axis))
 
 
+def frontier_edge_capacity(m: int, switch_frac: float, *,
+                           slack: float = 4.0) -> int:
+    """Per-peer routing capacity for the compacted sparse push.
+
+    While the engine is in the push regime the frontier holds at most
+    ``switch_frac * n`` vertices, so with edges spread uniformly a shard sees
+    ≈ ``switch_frac * m`` active edges; ``slack`` covers degree skew.  Levels
+    that overflow this capacity fall back to full-capacity routing at
+    runtime, so the rule trades traffic (capacity shrinks with the frontier
+    bound) against fallback frequency — see DESIGN.md §7 and
+    `traffic.push_level_route_bytes` for the byte model the capacity feeds.
+    """
+    return max(1, min(m, int(m * switch_frac * slack)))
+
+
+def _active_edge_mask(src, frontier, att: ATT):
+    """Per-shard mask of edges whose (owned) source is in the frontier —
+    computed once per level and shared by the overflow count and the
+    compaction (they sit on opposite sides of a `lax.cond`, so CSE across
+    the boundary is not guaranteed)."""
+    local_src = jnp.where(src >= 0, att.local(jnp.maximum(src, 0)), 0)
+    return (src >= 0) & (jnp.take(frontier, local_src) > 0)
+
+
+def _compact_active_edges(src, dst, val, active, cap: int):
+    """Frontier-proportional payload: keep only the edges the `active` mask
+    names, compacted into ``cap`` slots (`jnp.nonzero`-into-capacity — the
+    distributed analogue of the local push step's frontier extraction).
+    Returns (src, dst, val) of length ``cap``, padded with src = dst = -1.
+    """
+    slots, = jnp.nonzero(active, size=cap, fill_value=-1)
+    ssafe = jnp.maximum(slots, 0)
+    keep = slots >= 0
+    return (jnp.where(keep, jnp.take(src, ssafe), -1),
+            jnp.where(keep, jnp.take(dst, ssafe), -1),
+            jnp.where(keep, jnp.take(val, ssafe), 0.0))
+
+
 def _push_step_shard(src, dst, val, msg, att: ATT, axis, prog: VertexProgram,
                      capacity: int):
     """Push: owner of src computes contributions locally, remote-combines at
-    the dst owner (PIUMA remote atomic)."""
+    the dst owner (PIUMA remote atomic).  ``capacity`` is the per-peer
+    routing budget — ``_route`` moves O(S * capacity) bytes, so a compacted
+    edge list with a small capacity makes the level's traffic proportional to
+    the active frontier instead of the full edge partition."""
     local_src = jnp.where(src >= 0, att.local(jnp.maximum(src, 0)), 0)
+    gidx = jnp.where(src >= 0, dst, -1)
+    if prog.structured:
+        payload = offload.dma_gather(msg, local_src, fill=-1).astype(jnp.int32)
+        payload = jnp.where(src >= 0, payload, -1)
+        w = val if prog.edge_op == "mul" else jnp.ones_like(val)
+        if prog.combine != "argmax_weighted":
+            raise NotImplementedError(
+                "distributed combine='sample' is queue-shaped work: run it "
+                "through run_queue / sample_neighbors instead")
+        return offload.remote_scatter_weighted_mode(
+            att.per_shard, gidx, payload, w, att, axis, capacity=capacity)
     em = offload.dma_gather(msg, local_src, fill=prog.ident)
     em = jnp.where(src >= 0, em, jnp.asarray(prog.ident, msg.dtype))
     ev = _apply_edge(em, val, prog.edge_op) if prog.edge_op != "copy" else em
     ev = jnp.where(src >= 0, ev, jnp.asarray(prog.ident, msg.dtype))
     acc = _acc_init(att.per_shard, prog, msg.dtype)
-    gidx = jnp.where(src >= 0, dst, -1)
     if prog.combine == "add":
         return offload.remote_scatter_add(acc, gidx, ev, att, axis,
                                           capacity=capacity)
@@ -313,6 +485,18 @@ def _pull_step_shard(own, remote, val, msg, att_in: ATT, att_out: ATT, axis,
     owners (fine-grained dgas_gather, or the all_gather baseline) and reduces
     locally."""
     gidx = jnp.where(remote >= 0, remote, -1)
+    if prog.structured:
+        if prog.combine != "argmax_weighted":
+            raise NotImplementedError(
+                "distributed combine='sample' is queue-shaped work: run it "
+                "through run_queue / sample_neighbors instead")
+        payload = offload.dgas_gather(msg, gidx, att_in, axis,
+                                      capacity=capacity, fill=-1)
+        payload = payload.astype(jnp.int32)
+        w = val if prog.edge_op == "mul" else jnp.ones_like(val)
+        local_own = jnp.where(own >= 0, att_out.local(jnp.maximum(own, 0)), -1)
+        return offload.segment_weighted_mode(local_own, payload, w,
+                                             att_out.per_shard)
     if gather_mode == "dgas":
         em = offload.dgas_gather(msg, gidx, att_in, axis, capacity=capacity,
                                  fill=prog.ident)
@@ -339,13 +523,21 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                     prog: VertexProgram, state0: Any, frontier0: jnp.ndarray,
                     *, axis: Optional[AxisName] = None, max_iters: int,
                     g_rev: Optional[ShardedGraph] = None, mode: str = "push",
-                    switch_frac: float = 1 / 32):
+                    switch_frac: float = 1 / 32,
+                    push_edge_capacity: Optional[int] = None):
     """Distributed loop; `state0`/`frontier0` are stacked (S, per) per `att`.
 
     mode: 'push' (every level scatters via remote atomics — the seed
       behavior), 'pull' (requires `g_rev`; every level gathers via dgas), or
       'auto' (push while the globally-psum'd frontier is below
       `switch_frac * n`, pull once it saturates — Beamer's heuristic).
+    push_edge_capacity: per-peer routing capacity for the *compacted* push
+      step.  When a level's globally-agreed active-edge count fits, the shard
+      compacts active edges with nonzero-into-capacity and routes at this
+      small capacity, so sparse levels move O(active edges) bytes instead of
+      the full edge partition; overflowing levels fall back to full-capacity
+      routing.  None derives `frontier_edge_capacity(m, switch_frac)`; 0
+      disables compaction (the seed behavior).
     Returns the final state pytree, stacked (S, per).
     """
     if mode not in ("auto", "push", "pull"):
@@ -362,6 +554,11 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
     use_rev = g_rev is not None
     m_fwd = g.edges_per_shard
     m_rev = g_rev.edges_per_shard if use_rev else 0
+    if push_edge_capacity is None:
+        edge_cap = frontier_edge_capacity(m_fwd, switch_frac)
+    else:
+        edge_cap = int(push_edge_capacity)
+    compact = mode != "pull" and 0 < edge_cap < m_fwd
 
     def shard_fn(src, dst, val, rsrc, rdst, rval, frontier, *leaves):
         src, dst, val = src[0], dst[0], val[0]
@@ -369,9 +566,26 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
         frontier = frontier[0]
         state = jax.tree.unflatten(state_def, [l[0] for l in leaves])
 
-        def push(msg):
+        def push_full(msg):
             return _push_step_shard(src, dst, val, msg, att, axis, prog,
                                     capacity=m_fwd)
+
+        def push_compact(msg, active):
+            csrc, cdst, cval = _compact_active_edges(src, dst, val, active,
+                                                     edge_cap)
+            return _push_step_shard(csrc, cdst, cval, msg, att, axis, prog,
+                                    capacity=edge_cap)
+
+        def push(msg, frontier):
+            if not compact:
+                return push_full(msg)
+            active = _active_edge_mask(src, frontier, att)
+            # every shard must take the same branch: reduce the overflow flag
+            over = offload.hierarchical_psum(
+                (active.astype(jnp.int32).sum() > edge_cap
+                 ).astype(jnp.int32), axes)
+            return lax.cond(over == 0, lambda: push_compact(msg, active),
+                            lambda: push_full(msg))
 
         def pull(msg):
             # g_rev rows: src = output vertex (owned here), dst = input vertex
@@ -390,12 +604,12 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
             state, frontier, it, alive = carry
             msg = prog.msg_fn(state, frontier)
             if mode == "push":
-                acc = push(msg)
+                acc = push(msg, frontier)
             elif mode == "pull":
                 acc = pull(msg)
             else:
                 acc = lax.cond(alive <= switch_count,
-                               lambda: push(msg), lambda: pull(msg))
+                               lambda: push(msg, frontier), lambda: pull(msg))
             state, frontier = prog.update_fn(state, acc, frontier, it)
             # one collective per level: the new count rides the loop carry
             return state, frontier, it + 1, count(frontier)
@@ -440,3 +654,84 @@ def spmv_pass(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,
     mapped = shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * 4,
                        out_specs=spec)
     return mapped(g.src, g.dst, g.val, x_sharded)
+
+
+# ---------------------------------------------------------------------------
+# Queue-driven programs (the second program family: work entries, not bitmaps)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueueProgram:
+    """An algorithm whose unit of work is a queue entry, not a frontier bit.
+
+    step_fn: (operands, items, payload, state, it, key)
+             -> (items, payload, state, out)
+      items:   (cap,) int32 queue entries, -1 = empty slot; setting an entry
+               to -1 retires it (the runner re-compacts before balancing).
+      payload: pytree of (cap, ...) companion data aligned with the items —
+               it migrates with them through the balancer.
+      out:     anything to stack per iteration (see run_queue).
+    """
+
+    step_fn: Callable
+
+
+def run_queue(mesh: Mesh, prog: QueueProgram, items0: jnp.ndarray,
+              payload0: Any, operands: Any, *, n_iters: int,
+              axis: Optional[AxisName] = None,
+              key: Optional[jax.Array] = None, state0: Any = ()):
+    """Queue-driven distributed runner — shard_map plumbing owned once.
+
+    Frontier programs are bitmap-shaped; walker / sampler workloads are a bag
+    of work entries that migrate between shards.  Per iteration this runner
+    compacts each shard's queue, rebalances entries (and their payload)
+    across shards with `offload.queue_balance` — the hardware queue engine's
+    work stealing — and hands the balanced queue to the program's step with a
+    per-(shard, iteration) key.
+
+    items0:   (S, cap) int32 stacked queues, -1 = empty slot.
+    payload0: pytree of (S, cap, ...) companion data riding with the items.
+    operands: pytree of (S, ...) sharded arrays handed to every step
+              (graph shards, lookup tables, ...).
+    Returns (state, outs) with each `out` leaf stacked (S, n_iters, ...).
+    """
+    axis = axis if axis is not None else mesh.axis_names[0]
+    spec = _spec(axis)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    pl_leaves, pl_def = jax.tree.flatten(payload0)
+    op_leaves, op_def = jax.tree.flatten(operands)
+    st_leaves, st_def = jax.tree.flatten(state0)
+    n_pl, n_op = len(pl_leaves), len(op_leaves)
+
+    def shard_fn(items, *rest):
+        items = items[0]
+        payload = jax.tree.unflatten(pl_def, [l[0] for l in rest[:n_pl]])
+        ops = jax.tree.unflatten(op_def, [l[0] for l in rest[n_pl:n_pl + n_op]])
+        state = jax.tree.unflatten(st_def, [l[0] for l in rest[n_pl + n_op:]])
+        shard_key = jax.random.fold_in(key, offload.my_shard(axis))
+
+        def body(carry, it):
+            items, payload, state = carry
+            # retired entries may sit anywhere in the buffer: compact first
+            order = jnp.argsort(items < 0, stable=True)
+            items = jnp.take(items, order)
+            payload = jax.tree.map(lambda x: jnp.take(x, order, axis=0),
+                                   payload)
+            q = offload.QueueState(items,
+                                   (items >= 0).sum().astype(jnp.int32))
+            if pl_leaves:
+                q, payload = offload.queue_balance(q, axis, payload)
+            else:
+                q = offload.queue_balance(q, axis)
+            items, payload, state, out = prog.step_fn(
+                ops, q.items, payload, state, it,
+                jax.random.fold_in(shard_key, it))
+            return (items, payload, state), out
+
+        (items, payload, state), outs = lax.scan(
+            body, (items, payload, state), jnp.arange(n_iters))
+        return jax.tree.map(lambda l: l[None], (state, outs))
+
+    mapped = shard_map(shard_fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                       check_rep=False)
+    return mapped(items0, *pl_leaves, *op_leaves, *st_leaves)

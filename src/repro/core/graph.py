@@ -64,15 +64,23 @@ class CSR:
 
     def transpose(self) -> "CSR":
         """Host-side transpose (CSC view as a CSR). The frontier engine's pull
-        direction iterates in-edges, so it needs A^T sharing A's vertex ids."""
+        direction iterates in-edges, so it needs A^T sharing A's vertex ids.
+
+        The result stays NumPy-backed: wrapping with `jnp.asarray` inside a
+        jit trace would stage the arrays into tracers, and callers that
+        transpose under jit (e.g. a jitted LPA) need the result concrete so
+        the engine can still derive its static gather budgets from it.
+        """
         indptr = np.asarray(self.indptr)
         rows = np.repeat(np.arange(self.n_rows), np.diff(indptr))
         cols = np.asarray(self.indices)
         vals = None if self.values is None else np.asarray(self.values)
-        return CSR.from_coo(cols, rows, vals, self.n_cols, self.n_rows)
+        return CSR.from_coo(cols, rows, vals, self.n_cols, self.n_rows,
+                            device=False)
 
     @staticmethod
-    def from_coo(rows, cols, vals, n_rows, n_cols, *, sum_duplicates: bool = False) -> "CSR":
+    def from_coo(rows, cols, vals, n_rows, n_cols, *, sum_duplicates: bool = False,
+                 device: bool = True) -> "CSR":
         rows = np.asarray(rows, np.int64)
         cols = np.asarray(cols, np.int64)
         vals = None if vals is None else np.asarray(vals)
@@ -90,10 +98,11 @@ class CSR:
         indptr = np.zeros(n_rows + 1, np.int64)
         np.add.at(indptr, rows + 1, 1)
         indptr = np.cumsum(indptr)
+        wrap = jnp.asarray if device else np.asarray
         return CSR(
-            jnp.asarray(indptr, jnp.int32),
-            jnp.asarray(cols, jnp.int32),
-            None if vals is None else jnp.asarray(vals, jnp.float32),
+            wrap(np.asarray(indptr, np.int32)),
+            wrap(np.asarray(cols, np.int32)),
+            None if vals is None else wrap(np.asarray(vals, np.float32)),
             int(n_rows),
             int(n_cols),
         )

@@ -38,11 +38,16 @@ AxisName = Union[str, Sequence[str]]
 __all__ = [
     "dma_gather", "dma_scatter_add", "dma_strided_copy",
     "axis_size", "my_shard",
+    "segment_argmax", "segment_weighted_mode",
     "dgas_gather", "remote_scatter_add", "remote_scatter_combine",
+    "remote_scatter_weighted_mode",
     "all_gather_gather",
     "QueueState", "queue_make", "queue_balance",
     "hierarchical_psum", "barrier", "prefix_scan",
 ]
+
+# payload sentinel that sorts after every real label / vertex id
+LABEL_PAD = 2 ** 30
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +73,68 @@ def dma_scatter_add(dest: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray) -> j
 
 def dma_strided_copy(src: jnp.ndarray, start: int, stride: int, count: int) -> jnp.ndarray:
     return lax.dynamic_slice_in_dim(src, start, 1 + (count - 1) * stride)[::stride]
+
+
+# ---------------------------------------------------------------------------
+# Structured segment combines (the engine's argmax / sample reductions; also
+# executed at the owner shard by the remote variants below)
+# ---------------------------------------------------------------------------
+
+def segment_argmax(idx: jnp.ndarray, score: jnp.ndarray, payload: jnp.ndarray,
+                   n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-destination (score, payload)-packed segment max.
+
+    For each destination v: best[v] = max score over items with idx==v, and
+    pick[v] = the payload of a maximizing item (ties broken toward the
+    *smaller* payload, deterministically).  Items with idx outside [0, n) or
+    score == -inf are ignored; destinations with no items get (-inf, -1).
+
+    HBM has no native packed max, so the pack is expressed as a two-plane
+    lexicographic scatter: scatter-max the score plane, then scatter-min the
+    payload plane masked to score winners.
+    """
+    valid = (idx >= 0) & (idx < n)
+    safe = jnp.where(valid, idx, 0)
+    neg = jnp.asarray(-jnp.inf, score.dtype)
+    s = jnp.where(valid, score, neg)
+    best = jnp.full((n,), neg, score.dtype).at[safe].max(s)
+    is_best = valid & (s == jnp.take(best, safe)) & (s > neg)
+    pad = jnp.int32(LABEL_PAD)
+    cand = jnp.where(is_best, payload.astype(jnp.int32), pad)
+    pick = jnp.full((n,), pad, jnp.int32).at[safe].min(cand)
+    return best, jnp.where(pick == pad, -1, pick)
+
+
+def segment_weighted_mode(idx: jnp.ndarray, labels: jnp.ndarray,
+                          weights: jnp.ndarray, n: int
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-destination weighted mode: argmax_l sum(weights | idx==v, labels==l).
+
+    Returns (best_w, best_label): the winning label's total weight and the
+    label itself, ties toward the smaller label.  Items with idx outside
+    [0, n) or labels < 0 are ignored; destinations with no items get
+    (-inf, -1).  This is the two-stage structured combine: weights are first
+    summed per (destination, label) run — the stream is sorted by that pair so
+    the sums are one fused segment reduction — then the (sum, label) pack goes
+    through :func:`segment_argmax`.
+    """
+    m = int(idx.shape[0])
+    if m == 0:
+        return (jnp.full((n,), -jnp.inf, weights.dtype),
+                jnp.full((n,), -1, jnp.int32))
+    valid = (idx >= 0) & (idx < n) & (labels >= 0)
+    si = jnp.where(valid, idx, n).astype(jnp.int32)
+    sl = jnp.where(valid, labels, LABEL_PAD).astype(jnp.int32)
+    order = jnp.lexsort((sl, si))
+    si, sl = jnp.take(si, order), jnp.take(sl, order)
+    sw = jnp.where(jnp.take(valid, order),
+                   jnp.take(weights, order), jnp.zeros((), weights.dtype))
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), (si[1:] != si[:-1]) | (sl[1:] != sl[:-1])])
+    run_id = jnp.cumsum(is_start) - 1
+    run_w = jax.ops.segment_sum(sw, run_id, num_segments=m)
+    rep_idx = jnp.where(is_start & (si < n), si, -1)
+    return segment_argmax(rep_idx, jnp.take(run_w, run_id), sl, n)
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +309,34 @@ def remote_scatter_combine(local: jnp.ndarray, gidx: jnp.ndarray,
     return local.at[safe].max(masked)
 
 
+def remote_scatter_weighted_mode(per_shard_n: int, gidx: jnp.ndarray,
+                                 labels: jnp.ndarray, weights: jnp.ndarray,
+                                 att: ATT, axis_name: AxisName, *,
+                                 capacity: Optional[int] = None
+                                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Remote structured combine: weighted label mode executed at the owner.
+
+    Each shard contributes (global vertex, label, weight) votes; the triples
+    are owner-routed *raw* (no sender-side pre-reduction) so the owner's
+    :func:`segment_weighted_mode` sums each (vertex, label) pair over every
+    contributing shard before taking the argmax — the reduction is correct
+    even when votes for one pair arrive from many shards.  Returns the
+    per-local-vertex (best_w, best_label); vertices with no votes get
+    (-inf, -1).
+    """
+    n = gidx.shape[0]
+    S = axis_size(axis_name)
+    C = capacity if capacity is not None else min(n, 2 * (-(-n // S)))
+    in_range = (gidx >= 0) & (gidx < att.n_global)
+    owner = jnp.where(in_range, att.owner(jnp.maximum(gidx, 0)), -1).astype(jnp.int32)
+    local_idx = jnp.where(in_range, att.local(jnp.maximum(gidx, 0)), -1).astype(jnp.int32)
+    (ridx, rlab, rw), recvv, _, _ = _route(
+        (local_idx, labels.astype(jnp.int32), weights), owner, axis_name, C)
+    ridx = jnp.where(recvv, ridx, -1)
+    rlab = jnp.where(recvv, rlab, -1)
+    return segment_weighted_mode(ridx, rlab, rw, per_shard_n)
+
+
 def all_gather_gather(local: jnp.ndarray, gidx: jnp.ndarray, att: ATT,
                       axis_name: AxisName, *, fill: float = 0.0) -> jnp.ndarray:
     """Conventional-architecture baseline: replicate the whole array, then index.
@@ -284,11 +379,19 @@ def queue_make(capacity: int) -> QueueState:
     return QueueState(jnp.full((capacity,), -1, jnp.int32), jnp.zeros((), jnp.int32))
 
 
-def queue_balance(q: QueueState, axis_name: AxisName) -> QueueState:
+def queue_balance(q: QueueState, axis_name: AxisName, payload=None):
     """Rebalance queued items evenly across shards (hardware work stealing).
 
     Every item gets a global rank via a device prefix scan; item with rank r
     moves to shard r % S (interleave), so post-balance counts differ by <=1.
+    Since the global item count never exceeds S * capacity, the balanced
+    per-shard count fits the original capacity and the returned queue keeps
+    the input buffer size (a fixed point for iterated balancing).
+
+    payload: optional pytree with leading dim == capacity, routed alongside
+      the items (a queue entry's companion data — e.g. a walker's current
+      vertex); rows without an item are zeroed.  Returns (QueueState, payload)
+      when given, else just the QueueState.
     """
     S = axis_size(axis_name)
     cap = q.items.shape[0]
@@ -296,12 +399,23 @@ def queue_balance(q: QueueState, axis_name: AxisName) -> QueueState:
     rank = offset + jnp.arange(cap, dtype=jnp.int32)
     is_item = jnp.arange(cap) < q.count
     dest = jnp.where(is_item, rank % S, -1)
-    recv, recvv, _, _ = _route(q.items, dest.astype(jnp.int32), axis_name, cap)
-    recv = jnp.where(recvv, recv, -1)
-    # compact received items to a prefix
-    order = jnp.argsort(~recvv, stable=True)  # valid first
-    items = jnp.take(recv, order)
-    return QueueState(items, recvv.sum().astype(jnp.int32))
+    pl_leaves, pl_def = (jax.tree.flatten(payload) if payload is not None
+                         else ((), None))
+    recv, recvv, _, _ = _route((q.items,) + tuple(pl_leaves),
+                               dest.astype(jnp.int32), axis_name, cap)
+    # compact received items to a prefix, back into the original capacity
+    order = jnp.argsort(~recvv, stable=True)[:cap]  # valid first
+    kept = jnp.take(recvv, order)
+    items = jnp.where(kept, jnp.take(recv[0], order), -1)
+    out_q = QueueState(items, recvv.sum().astype(jnp.int32))
+    if payload is None:
+        return out_q
+    out_pl = []
+    for x in recv[1:]:
+        xs = jnp.take(x, order, axis=0)
+        mask = kept.reshape((-1,) + (1,) * (xs.ndim - 1))
+        out_pl.append(jnp.where(mask, xs, jnp.zeros((), xs.dtype)))
+    return out_q, jax.tree.unflatten(pl_def, out_pl)
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,8 @@ import dataclasses
 from typing import Dict
 
 __all__ = ["Machine", "XEON", "PIUMA_NODE", "AccessProfile", "SPMV_PROFILES",
-           "APP_PROFILES", "time_per_elem", "speedup", "multinode_time_per_elem"]
+           "APP_PROFILES", "time_per_elem", "speedup", "multinode_time_per_elem",
+           "ROUTE_PAYLOAD_BYTES", "push_level_route_bytes", "RouteByteCounter"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +92,57 @@ SPMV_PROFILES: Dict[str, AccessProfile] = {
     "piuma_dma": AccessProfile("piuma_dma", dram_bytes=12.0 + 8.0,
                                uncached_loads=0.0, instrs=4.0),
 }
+
+
+# ---------------------------------------------------------------------------
+# Owner-routed exchange byte model (the engine's `offload._route` traffic)
+# ---------------------------------------------------------------------------
+
+# one routed push item: int32 local index + f32 value + validity flag
+ROUTE_PAYLOAD_BYTES = 4 + 4 + 1
+
+
+def push_level_route_bytes(n_shards: int, per_peer_capacity: int,
+                           payload_bytes: int = ROUTE_PAYLOAD_BYTES) -> int:
+    """Bytes one shard injects per push level through `offload._route`.
+
+    The routed exchange is a fixed-capacity all_to_all: every level each
+    shard sends `capacity` slots to each of the S peers whether or not the
+    slots hold live items — so the level's network bytes are set by the
+    *capacity*, not the frontier.  That is exactly why the engine's compacted
+    sparse push (`engine.frontier_edge_capacity`) pays off: shrinking the
+    per-peer capacity shrinks this number linearly while full-capacity
+    routing pins it at m_per_shard.
+    """
+    return n_shards * per_peer_capacity * payload_bytes
+
+
+@dataclasses.dataclass
+class RouteByteCounter:
+    """Per-level routed-byte ledger for an engine run (analytical counter).
+
+    The engine's routing capacities are static per mode, so a run's traffic
+    is reconstructed exactly from its per-level direction trace: call
+    `push_level(capacity)` once per sparse level (with the level's routing
+    capacity) and `pull_level(gather_bytes)` for dense levels.
+    """
+
+    n_shards: int
+    payload_bytes: int = ROUTE_PAYLOAD_BYTES
+    total_bytes: int = 0
+    levels: int = 0
+
+    def push_level(self, per_peer_capacity: int) -> int:
+        b = push_level_route_bytes(self.n_shards, per_peer_capacity,
+                                   self.payload_bytes)
+        self.total_bytes += b
+        self.levels += 1
+        return b
+
+    def pull_level(self, gather_bytes: int) -> int:
+        self.total_bytes += int(gather_bytes)
+        self.levels += 1
+        return int(gather_bytes)
 
 
 def time_per_elem(m: Machine, p: AccessProfile) -> float:

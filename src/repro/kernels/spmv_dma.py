@@ -31,7 +31,32 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core.graph import BBCSR
 
-__all__ = ["spmv_bbcsr_kernel_call", "spmspv_bbcsr_kernel_call"]
+__all__ = ["spmv_bbcsr_kernel_call", "spmspv_bbcsr_kernel_call",
+           "collapse_inactive_blocks"]
+
+
+def collapse_inactive_blocks(tile_cb: jnp.ndarray,
+                             tile_active: jnp.ndarray) -> jnp.ndarray:
+    """x-block DMA schedule for SpMSpV: drop the fetch for inactive tiles.
+
+    The Pallas pipeline issues a new x-block DMA whenever consecutive grid
+    steps map to *different* block indices.  `pl.when` alone only skips the
+    compute — the inactive tile's x block still streams into VMEM dead.  So
+    the x index_map is collapsed: an inactive tile re-uses the most recent
+    active tile's column block (same index => no new DMA), and tiles before
+    the first active one pin block 0.  Works for any engine operand the
+    active mask derives from — BFS frontiers and the structured-combine
+    programs' weight operands alike (`engine.tile_active`).
+
+    Returns the (n_tiles,) int32 schedule handed to the kernel as its cb
+    scalar-prefetch operand (the kernel body itself never reads cb).
+    """
+    ta = tile_active.astype(jnp.int32)
+    n = ta.shape[0]
+    idx = jnp.where(ta == 1, jnp.arange(n, dtype=jnp.int32), -1)
+    last_active = jax.lax.cummax(idx)
+    safe = jnp.maximum(last_active, 0)
+    return jnp.where(last_active >= 0, jnp.take(tile_cb, safe), 0).astype(jnp.int32)
 
 
 def _tile_yblk(rows_ref, cols_ref, vals_ref, x_ref, *, block_rows: int,
@@ -139,12 +164,16 @@ def spmspv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray,
     """y = A @ x for a sparsely-populated x.
 
     `tile_active` is (n_tiles,) int32 — 1 iff the tile's column block holds a
-    nonzero x entry (see `engine.tile_active`).  Inactive tiles are skipped,
-    so work scales with the active column blocks instead of nnz(A).
+    nonzero x entry (see `engine.tile_active`).  Inactive tiles skip the
+    compute (`pl.when`) *and* the x-block DMA (their index_map entry is
+    collapsed onto the previous active tile's block via
+    `collapse_inactive_blocks`), so both MXU work and VMEM traffic scale
+    with the active column blocks instead of nnz(A).
     """
     n_rb, n_cb = bb.n_row_blocks, bb.n_col_blocks
     x_pad = jnp.pad(x.astype(jnp.float32), (0, n_cb * bb.block_cols - x.shape[0]))
     x2d = x_pad.reshape(n_cb, bb.block_cols)
+    cb_sched = collapse_inactive_blocks(bb.tile_cb, tile_active)
     kern = functools.partial(_spmspv_kernel, block_rows=bb.block_rows,
                              block_cols=bb.block_cols, tile_nnz=bb.tile_nnz)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -164,6 +193,6 @@ def spmspv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_rb, bb.block_rows), jnp.float32),
         interpret=interpret,
-    )(bb.tile_rb, bb.tile_cb, bb.tile_init, tile_active.astype(jnp.int32),
+    )(bb.tile_rb, cb_sched, bb.tile_init, tile_active.astype(jnp.int32),
       bb.rows_local, bb.cols_local, bb.vals, x2d)
     return y2d.reshape(-1)[: bb.n_rows]

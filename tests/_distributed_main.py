@@ -147,17 +147,51 @@ lab = connected_components_distributed(gshs, atts, mesh, axis="cores")
 got = np.asarray(unshard_vertex_array(lab, atts))
 check("cc_distributed", np.array_equal(got, lab_local))
 
-walks = np.asarray(random_walks_distributed(g, jnp.arange(S * 4), 6,
+# --- frontier-proportional compacted push routing ----------------------------
+from repro.core.algorithms.bfs import bfs_program
+
+owner0 = int(att2.owner(jnp.asarray(0)))
+local0 = int(att2.local(jnp.asarray(0)))
+st0 = {"level": jnp.full((S, att2.per_shard), -1, jnp.int32).at[owner0, local0].set(0)}
+f0 = jnp.zeros((S, att2.per_shard), jnp.int32).at[owner0, local0].set(1)
+for cap, name in [(16, "tiny_cap_fallback"),
+                  (eng.frontier_edge_capacity(gsh2.edges_per_shard, 1 / 32),
+                   "derived_cap"),
+                  (0, "disabled")]:
+    st = eng.run_distributed(gsh2, att2, mesh, bfs_program(), st0, f0,
+                             axis="cores", max_iters=64, mode="push",
+                             push_edge_capacity=cap)
+    got = np.asarray(unshard_vertex_array(st["level"], att2))
+    check(f"bfs_compact_push/{name}", np.array_equal(got, lv_local))
+
+d2 = sssp_distributed(gsh2, att2, 0, mesh, axis="cores", delta=0.5)
+got = np.asarray(unshard_vertex_array(d2, att2))
+check("sssp_distributed/compact_default", np.allclose(got, d_local, atol=1e-5,
+                                                      equal_nan=True))
+
+# --- structured combine: distributed weighted label propagation --------------
+from repro.core.algorithms.louvain import (label_propagation,
+                                           label_propagation_distributed)
+
+lpa_local = np.asarray(label_propagation(g, iters=5))
+lpa_att = dgas.block_rule(g.n_rows, S)
+lpa = label_propagation_distributed(g, mesh, axis="cores", iters=5)
+got = np.asarray(unshard_vertex_array(lpa, lpa_att))
+check("label_propagation_distributed", np.array_equal(got, lpa_local))
+
+# queue-engine walks: walker count deliberately NOT divisible by S (the
+# queue balancer owns the load spreading now, not a reshape)
+walks = np.asarray(random_walks_distributed(g, jnp.arange(S * 4 + 3), 6,
                                             jax.random.PRNGKey(0), mesh,
                                             axis="cores"))
 indptr, indices = np.asarray(g.indptr), np.asarray(g.indices)
-ok = True
+ok = walks.shape == (S * 4 + 3, 7)
 for w in walks:
     for a, b in zip(w[:-1], w[1:]):
         nbrs = indices[indptr[a]:indptr[a + 1]]
         if not ((b in nbrs) or (b == a and nbrs.size == 0)):
             ok = False
-check("random_walks_distributed/edges", ok)
+check("random_walks_distributed/queue_engine", ok)
 
 # --- gradient compression ----------------------------------------------------
 from repro.optim import compression

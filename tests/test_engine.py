@@ -1,5 +1,6 @@
 """Frontier engine: output equivalence vs reference implementations,
-direction switching, the SpMSpV kernel path, and the new algorithms."""
+direction switching, the SpMSpV kernel path, the structured combines
+(argmax / sample), and the new algorithms."""
 import heapq
 
 import jax
@@ -7,10 +8,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import engine, rmat, uniform_random_graph
+from repro.core import engine, offload, rmat, uniform_random_graph, to_padded_ell
 from repro.core.graph import CSR
-from repro.core.algorithms import (bfs, bfs_program, pagerank, sssp,
-                                   connected_components, symmetrize, spmv)
+from repro.core.algorithms import (bfs, bfs_program, pagerank, sssp, auto_delta,
+                                   connected_components, symmetrize, spmv,
+                                   label_propagation, lpa_program, random_walks)
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(11)
@@ -269,6 +271,149 @@ def test_symmetrize_is_symmetric():
     s = symmetrize(g)
     d = np.asarray(s.to_dense()) > 0
     assert (d == d.T).all()
+
+
+# ---------------------------------------------------------------------------
+# structured combines: argmax_weighted (LPA) and sample
+# ---------------------------------------------------------------------------
+
+_PAD = jnp.int32(2 ** 30)
+
+
+def _weighted_mode_ell(labels, weights, fallback):
+    """The pre-refactor per-row weighted mode (reference for equivalence)."""
+    n, k = labels.shape
+    order = jnp.argsort(labels, axis=1)
+    sl = jnp.take_along_axis(labels, order, 1)
+    sw = jnp.take_along_axis(weights, order, 1)
+    is_start = jnp.concatenate(
+        [jnp.ones((n, 1), bool), sl[:, 1:] != sl[:, :-1]], axis=1)
+    run_id = jnp.cumsum(is_start, axis=1) - 1
+    seg = (jnp.arange(n)[:, None] * k + run_id).reshape(-1)
+    run_w = jax.ops.segment_sum(sw.reshape(-1), seg, num_segments=n * k).reshape(n, k)
+    run_l = jnp.full((n * k,), _PAD, jnp.int32).at[seg].min(sl.reshape(-1)).reshape(n, k)
+    run_w = jnp.where(run_l == _PAD, -1.0, run_w)
+    best = jnp.argmax(run_w, axis=1)
+    lab = jnp.take_along_axis(run_l, best[:, None], 1)[:, 0]
+    has_any = jnp.max(run_w, axis=1) > 0
+    return jnp.where(has_any, lab, fallback)
+
+
+def _lpa_reference(csr, iters):
+    """The pre-refactor label_propagation (ELL gather + per-row mode)."""
+    cols, vals, mask = to_padded_ell(csr)
+    n = csr.n_rows
+
+    def body(_, labels):
+        nl = offload.dma_gather(labels, jnp.where(mask, cols, -1), fill=0)
+        nl = jnp.where(mask, nl, _PAD).astype(jnp.int32)
+        w = jnp.where(mask, vals, 0.0)
+        return _weighted_mode_ell(nl, w, labels)
+
+    return jax.lax.fori_loop(0, iters, body, jnp.arange(n, dtype=jnp.int32))
+
+
+@pytest.mark.parametrize("seed", [4, 5])
+def test_lpa_engine_matches_prerefactor_exactly(seed):
+    """Engine-backed LPA == the bespoke implementation, label for label
+    (fixed smaller-label tie-breaking)."""
+    g = rmat(8, 8, seed=seed)
+    got = np.asarray(label_propagation(g, iters=6))
+    want = np.asarray(_lpa_reference(g, iters=6))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_argmax_push_pull_steps_agree():
+    """Both directions compute the same (weight, label) acc for a partial
+    frontier — the structured-combine analogue of test_push_pull_steps_agree."""
+    g = uniform_random_graph(150, 5, seed=3)
+    n = g.n_rows
+    prog = lpa_program()
+    labels = jnp.asarray(RNG.integers(0, 12, n).astype(np.int32))
+    frontier = jnp.zeros((n,), jnp.int32).at[jnp.arange(0, n, 3)].set(1)
+    msg = prog.msg_fn({"label": labels}, frontier)
+    dw, dl = engine._dense_step(g.row_ids(), g.indices, g.values, msg, n, prog)
+    k = int(np.asarray(g.degrees()).max())
+    sw, sl = engine._sparse_step(g.indptr, g.indices, g.values, msg, frontier,
+                                 n, n, k, prog)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(sw), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(dl), np.asarray(sl))
+
+
+def test_sample_combine_is_uniform_pick():
+    """combine='sample' through engine.run: each destination picks uniformly
+    among its active in-neighbors."""
+    n, hub = 9, 0
+    srcs = np.arange(1, n)
+    g = CSR.from_coo(srcs, np.full(n - 1, hub), None, n, n)
+
+    def msg_fn(state, frontier):
+        return jnp.where(frontier > 0, jnp.arange(n, dtype=jnp.int32), -1)
+
+    def update_fn(state, acc, frontier, it):
+        _, pick = acc
+        return {"pick": pick}, jnp.zeros_like(frontier)  # one step
+
+    prog = engine.VertexProgram(edge_op="copy", combine="sample",
+                                msg_fn=msg_fn, update_fn=update_fn)
+    frontier0 = jnp.ones((n,), jnp.int32)
+    run1 = jax.jit(lambda key: engine.run(
+        g, prog, {"pick": jnp.full((n,), -1, jnp.int32)}, frontier0,
+        max_iters=1, mode="pull", key=key)["pick"][hub])
+    counts = np.zeros(n, np.int64)
+    for s in range(400):
+        counts[int(run1(jax.random.PRNGKey(s)))] += 1
+    assert counts[hub] == 0 and counts[1:].min() > 0
+    expected = 400 / (n - 1)
+    assert counts[1:].max() < 3 * expected  # loose uniformity bound
+
+
+def test_sample_requires_key_and_structured_rejects_add():
+    g = uniform_random_graph(30, 2, seed=1)
+    prog = engine.VertexProgram(edge_op="copy", combine="sample",
+                                msg_fn=lambda s, f: f, update_fn=None)
+    with pytest.raises(ValueError):
+        engine.run(g, prog, {}, jnp.ones((30,), jnp.int32), max_iters=1)
+    with pytest.raises(ValueError):
+        engine.VertexProgram(edge_op="add", combine="argmax_weighted",
+                             msg_fn=None, update_fn=None)
+
+
+def test_sample_neighbors_distribution_and_sinks():
+    n = 7
+    g = CSR.from_coo(np.zeros(n - 1, np.int64), np.arange(1, n), None, n, n)
+    qs = jnp.zeros((3000,), jnp.int32)
+    picks = np.asarray(engine.sample_neighbors(g, qs, jax.random.PRNGKey(0)))
+    cnt = np.bincount(picks, minlength=n)
+    assert cnt[0] == 0
+    assert cnt[1:].min() > 0.7 * 3000 / (n - 1)
+    assert cnt[1:].max() < 1.3 * 3000 / (n - 1)
+    # sinks (vertices 1..n-1 have no out-edges) self-sample
+    sinks = np.asarray(engine.sample_neighbors(
+        g, jnp.arange(1, n, dtype=jnp.int32), jax.random.PRNGKey(1)))
+    np.testing.assert_array_equal(sinks, np.arange(1, n))
+
+
+def test_random_walks_next_step_marginal_uniform():
+    """Distribution-level equivalence: one-step marginals from a hub match
+    the uniform neighbor pick of the pre-refactor sampler."""
+    n = 6
+    g = CSR.from_coo(np.zeros(n - 1, np.int64), np.arange(1, n), None, n, n)
+    walks = np.asarray(random_walks(g, jnp.zeros((4000,), jnp.int32), 1,
+                                    jax.random.PRNGKey(3)))
+    cnt = np.bincount(walks[:, 1], minlength=n)
+    assert cnt[0] == 0
+    assert cnt[1:].min() > 0.7 * 4000 / (n - 1)
+    assert cnt[1:].max() < 1.3 * 4000 / (n - 1)
+
+
+def test_auto_delta_tracks_weight_scale():
+    g = uniform_random_graph(300, 4, seed=2)
+    d1 = auto_delta(g)
+    g10 = CSR(g.indptr, g.indices, g.values * 10.0, g.n_rows, g.n_cols)
+    d10 = auto_delta(g10)
+    assert 5.0 < d10 / d1 < 20.0  # quantile rule scales with the weights
+    assert auto_delta(CSR(g.indptr, g.indices, None, g.n_rows, g.n_cols)) == 1.0
 
 
 # ---------------------------------------------------------------------------

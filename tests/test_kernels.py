@@ -24,6 +24,39 @@ def test_spmv_dma_sweep(scale, ef, block):
     np.testing.assert_allclose(np.asarray(y_k), y_d, rtol=1e-4, atol=1e-4)
 
 
+def test_spmspv_collapsed_index_sequence():
+    """SpMSpV must not DMA the x block of inactive tiles: the collapsed cb
+    schedule re-uses the previous active tile's block (no index transition
+    => the Pallas pipeline issues no new copy), and the kernel output with
+    the collapsed schedule still matches the dense reference."""
+    from repro.core import engine
+    from repro.kernels.spmv_dma import collapse_inactive_blocks
+
+    # hand-checked pattern: leading inactive tiles pin block 0
+    cb = jnp.asarray(np.array([3, 1, 4, 4, 2, 5], np.int32))
+    act = jnp.asarray(np.array([0, 1, 0, 1, 0, 1], np.int32))
+    got = np.asarray(collapse_inactive_blocks(cb, act))
+    np.testing.assert_array_equal(got, [0, 1, 1, 4, 4, 5])
+
+    g = rmat(7, 6, seed=21)
+    bb = to_bbcsr(g.transpose(), block_rows=32, block_cols=32, tile_nnz=64)
+    n = g.n_rows
+    frontier = jnp.zeros((n,), jnp.int32).at[jnp.asarray([5, 40])].set(1)
+    x = jnp.where(frontier > 0, jnp.asarray(RNG.random(n, np.float32)), 0.0)
+    tact = engine.tile_active(bb, frontier)
+    sched = np.asarray(collapse_inactive_blocks(bb.tile_cb, tact))
+    a = np.asarray(tact)
+    # every index transition (= a new x DMA) happens at an active tile, and
+    # active tiles keep their true block
+    trans = np.nonzero(sched[1:] != sched[:-1])[0] + 1
+    assert (a[trans] == 1).all()
+    np.testing.assert_array_equal(sched[a == 1], np.asarray(bb.tile_cb)[a == 1])
+    assert len(trans) <= int(a.sum())  # never more DMAs than active tiles
+    y = np.asarray(ops.spmspv_dma(bb, x, tact))
+    np.testing.assert_allclose(y, np.asarray(ref.spmv_bbcsr_ref(bb, x)),
+                               rtol=1e-4, atol=1e-5)
+
+
 def test_spmv_dma_empty_rows():
     # matrix with fully empty row blocks must still zero its output
     from repro.core.graph import CSR
