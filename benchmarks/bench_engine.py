@@ -11,27 +11,47 @@ Times level-synchronous BFS in three engine modes on the same graph:
 On RMAT the frontier explodes after 2-3 hops, so always-push pays the
 max-degree padding on a huge frontier and always-pull pays |E| work on the
 tiny first/last levels; the switch takes the cheaper side of each.  SSSP
-(delta-stepping buckets) and connected components (min-label propagation) run
-on the same engine to show the abstraction generalizes — one machinery, four
-workloads.
+(delta-stepping buckets), connected components (min-label propagation) and
+multi-level Louvain (gain-gated sweeps + contraction, DESIGN.md §11) run on
+the same engine to show the abstraction generalizes — one machinery, five
+workloads, and Louvain is the first with a *quality* metric (modularity)
+rather than output equivalence.
 
 Also reported:
 
 * the distributed push *byte model* (`core/traffic.py`): routed bytes per
   sparse level under full-capacity routing vs the engine's compacted
   frontier-proportional capacity (`engine.frontier_edge_capacity`);
+* the compacted-push **overflow fallback rate** on a skewed RMAT graph
+  (DESIGN.md §7): per BFS level, would any shard's active-edge count
+  overflow the derived capacity;
+* with >= 8 devices (the CI bench lane exports
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``): distributed
+  multi-level Louvain — partition equivalence vs single-device, contraction
+  route bytes, and the *measured* fallback count from
+  `engine.run_distributed(return_stats=True)`;
 * ``--sweep-delta`` — delta-stepping bucket-width sweep on RMAT and
   uniform-weight graphs against the histogram auto-tune (DESIGN.md §8).
 
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--scale 12]
-      PYTHONPATH=src python benchmarks/bench_engine.py --scale 7 --smoke
+      PYTHONPATH=src python benchmarks/bench_engine.py --scale 7 --smoke \
+          --json BENCH_pr3.json --baseline auto
       PYTHONPATH=src python benchmarks/bench_engine.py --sweep-delta
 
 ``--smoke`` (the `scripts/ci.sh bench` lane) checks the outputs for NaN and
-for regression markers (modes disagreeing, byte model not shrinking) and
-exits nonzero on failure.
+for regression markers (modes disagreeing, byte model not shrinking,
+modularity not beating a single LPA sweep) and exits nonzero on failure.
+``--json`` writes the machine-readable result document (the repo's persisted
+``BENCH_*.json`` trajectory); ``--baseline auto`` compares against the
+newest committed ``BENCH_*.json`` and fails on NaN or a >25% regression.
 """
 import argparse
+import glob
+import json
+import math
+import os
+import platform
+import re
 import sys
 import time
 
@@ -39,9 +59,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, rmat, uniform_random_graph, traffic
+from repro.core import dgas, engine, rmat, uniform_random_graph, traffic
 from repro.core.algorithms import (auto_delta, bfs, bfs_program,
-                                   connected_components, pagerank, sssp)
+                                   connected_components, label_propagation,
+                                   modularity, multilevel, pagerank, sssp)
 
 
 def _t(fn, reps=3):
@@ -72,7 +93,127 @@ def routed_bytes_report(n, m, pushes, n_shards=8, switch_frac=1 / 32):
     print(f"sparse-phase total over {max(pushes, 1)} push levels: "
           f"{full.total_bytes:,} B -> {compact.total_bytes:,} B "
           f"({reduction:.1f}x less)")
-    return reduction
+    return {"full_bytes": full.total_bytes, "compact_bytes": compact.total_bytes,
+            "reduction": reduction}
+
+
+def fallback_report(scale, edge_factor=8, n_shards=8, switch_frac=1 / 32):
+    """Compacted-push overflow fallback rate on a *skewed* RMAT graph.
+
+    Replays BFS levels under the distributed engine's capacity rule (block
+    vertex rule, ``frontier_edge_capacity`` per-peer budget): a push level
+    falls back to full-capacity routing when any shard's active-edge count
+    overflows.  This is the analytical counterpart of the runtime counter in
+    ``run_distributed(return_stats=True)`` — same decision rule, no mesh
+    needed — measured on a=0.7 RMAT where degree skew concentrates active
+    edges on few shards (DESIGN.md §7 records the number).
+    """
+    g = rmat(scale, edge_factor, a=0.7, b=0.12, c=0.12, seed=1)
+    n, m = g.n_rows, g.nnz
+    lv = np.asarray(bfs(g, 0))
+    att = dgas.block_rule(n, n_shards)
+    rows = np.asarray(g.row_ids())
+    owner = np.asarray(att.owner(jnp.asarray(rows)))
+    m_per_shard = int(np.bincount(owner, minlength=n_shards).max())
+    edge_cap = engine.frontier_edge_capacity(m_per_shard, switch_frac)
+    switch_count = max(1, int(n * switch_frac))
+    push_levels = fallbacks = 0
+    for d in range(int(lv.max()) + 1 if lv.max() >= 0 else 0):
+        frontier = lv == d
+        if not frontier.any() or int(frontier.sum()) > switch_count:
+            continue  # dense regime: the engine pulls, no routing capacity
+        push_levels += 1
+        active_per_shard = np.bincount(owner[frontier[rows]],
+                                       minlength=n_shards)
+        if active_per_shard.max() > edge_cap:
+            fallbacks += 1
+    rate = fallbacks / push_levels if push_levels else 0.0
+    print(f"\ncompacted-push fallback on skewed RMAT-{scale} (a=0.7, S={n_shards}): "
+          f"{fallbacks}/{push_levels} push levels overflow cap {edge_cap} "
+          f"(rate {rate:.2f})")
+    return {"scale": scale, "push_levels": push_levels, "fallbacks": fallbacks,
+            "rate": rate, "edge_cap": edge_cap}
+
+
+def louvain_report(g, smoke_failures):
+    """Multi-level Louvain quality + wall time (the repo's first quality
+    metric: modularity, not output equivalence)."""
+    q_single = float(modularity(g, label_propagation(g, iters=1)))
+    labels, scores = multilevel(g)  # cold run: correctness + jit warmup
+    t0 = time.perf_counter()
+    multilevel(g)  # warm run: level shapes repeat, so compiles are cached
+    ms = (time.perf_counter() - t0) * 1e3
+    q_multi = scores[-1] if scores else float(modularity(g, labels))
+    n_comm = int(np.unique(np.asarray(labels)).size)
+    print(f"\nlouvain: single LPA sweep Q={q_single:.5f}  multilevel "
+          f"Q={q_multi:.5f} over {len(scores)} levels ({n_comm} communities, "
+          f"{ms:.0f} ms)")
+    if not scores:
+        smoke_failures.append("REGRESSION: multilevel accepted no level")
+    elif not all(b > a for a, b in zip(scores, scores[1:])):
+        smoke_failures.append("REGRESSION: multilevel scores not increasing")
+    if not np.isfinite(q_multi) or q_multi <= q_single:
+        smoke_failures.append(
+            "REGRESSION: multilevel Q does not beat a single LPA sweep")
+    return {"single_sweep": q_single, "multilevel": q_multi,
+            "levels": len(scores), "n_communities": n_comm, "ms": ms}
+
+
+def distributed_report(scale, smoke_failures, n_shards=8):
+    """Distributed lane (runs when the host exposes >= n_shards devices, as
+    the CI bench lane does via XLA_FLAGS): distributed multi-level Louvain
+    equivalence + contraction route bytes, and the measured compacted-push
+    fallback counter from the engine's runtime stats."""
+    if len(jax.devices()) < n_shards:
+        print(f"\ndistributed lane skipped ({len(jax.devices())} devices < "
+              f"{n_shards}; CI sets XLA_FLAGS=--xla_force_host_platform_"
+              f"device_count={n_shards})")
+        return None
+    from repro.core.algorithms import multilevel_distributed
+    from repro.core.algorithms.louvain import partition_equal
+    from repro.core.algorithms.distgraph import shard_graph, unshard_vertex_array
+    from repro.launch.mesh import make_cores_mesh
+
+    mesh = make_cores_mesh(n_shards)
+    g = rmat(scale, 8, seed=1)
+    lab_l, scores_l = multilevel(g)
+    ctr = traffic.RouteByteCounter(n_shards,
+                                   payload_bytes=traffic.CONTRACT_PAYLOAD_BYTES)
+    t0 = time.perf_counter()
+    lab_d, scores_d = multilevel_distributed(g, mesh, counter=ctr)
+    ms = (time.perf_counter() - t0) * 1e3
+    match = partition_equal(lab_l, lab_d)
+    # measured fallback counter on a skewed graph (engine runtime stats);
+    # mode='auto' so only genuine push-regime levels count, matching
+    # fallback_report's analytical replay of the same decision rule
+    gs = rmat(scale, 8, a=0.7, b=0.12, c=0.12, seed=1)
+    att = dgas.block_rule(gs.n_rows, n_shards)
+    gsh, _ = shard_graph(gs, n_shards, row_att=att)
+    g_rev = engine.reverse_graph(gs, att)
+    o0, l0 = int(att.owner(jnp.asarray(0))), int(att.local(jnp.asarray(0)))
+    st0 = {"level": jnp.full((n_shards, att.per_shard), -1,
+                             jnp.int32).at[o0, l0].set(0)}
+    f0 = jnp.zeros((n_shards, att.per_shard), jnp.int32).at[o0, l0].set(1)
+    _, stats = engine.run_distributed(gsh, att, mesh, bfs_program(), st0, f0,
+                                      axis="cores", max_iters=gs.n_rows,
+                                      mode="auto", g_rev=g_rev,
+                                      return_stats=True)
+    stats = {k: int(np.asarray(v)[0]) for k, v in stats.items()}
+    print(f"\ndistributed louvain (S={n_shards}): Q levels "
+          f"{[round(s, 5) for s in scores_d]} ({ms:.0f} ms), partition match "
+          f"with single-device: {match}")
+    print(f"contraction routing: {ctr.total_bytes:,} B over {ctr.levels} "
+          f"levels; measured push fallbacks on skewed RMAT-{scale}: "
+          f"{stats['fallbacks']}/{stats['pushes']}")
+    if not match:
+        smoke_failures.append(
+            "REGRESSION: distributed multilevel diverges from single-device")
+    if scores_d and scores_l and abs(scores_d[-1] - scores_l[-1]) > 1e-3:
+        smoke_failures.append("REGRESSION: distributed multilevel Q diverges")
+    return {"q_levels": scores_d, "partition_match": bool(match),
+            "contract_bytes": ctr.total_bytes, "contract_levels": ctr.levels,
+            "ms": ms, "measured_fallbacks": stats["fallbacks"],
+            "measured_pushes": stats["pushes"]}
 
 
 def sweep_delta(scale: int = 10, edge_factor: int = 8):
@@ -136,7 +277,11 @@ def run(scale: int = 12, edge_factor: int = 8, smoke: bool = False):
           f"({stats_by_mode['auto']['pushes']} push + "
           f"{stats_by_mode['auto']['pulls']} pull levels)")
 
-    reduction = routed_bytes_report(n, m, stats_by_mode["auto"]["pushes"])
+    bytes_doc = routed_bytes_report(n, m, stats_by_mode["auto"]["pushes"])
+    reduction = bytes_doc["reduction"]
+    louvain_doc = louvain_report(g, failures)
+    fallback_doc = fallback_report(scale)
+    dist_doc = distributed_report(min(scale, 8), failures)
 
     # --- smoke checks (ci.sh bench): NaN + regression markers ---------------
     for mode in ("push", "pull"):
@@ -161,11 +306,91 @@ def run(scale: int = 12, edge_factor: int = 8, smoke: bool = False):
     if not all(np.isfinite(r[1]) and r[1] > 0 for r in rows):
         failures.append("REGRESSION: non-finite timing")
 
+    doc = {
+        "meta": {"scale": scale, "edge_factor": edge_factor, "n": n, "m": m,
+                 "n_shards": 8, "host": platform.node()},
+        "timings_ms": {name: ms for name, ms, _ in rows},
+        "bytes": bytes_doc,
+        "modularity": louvain_doc,
+        "fallback": fallback_doc,
+    }
+    doc["timings_ms"]["louvain/multilevel"] = louvain_doc["ms"]
+    if dist_doc is not None:
+        doc["distributed"] = dist_doc
+
     for f in failures:
         print(f)
     if smoke:
         print("SMOKE " + ("FAIL" if failures else "PASS"))
-    return rows, failures
+    return doc, failures
+
+
+# ---------------------------------------------------------------------------
+# Persisted bench trajectory (BENCH_*.json artifact + baseline comparison)
+# ---------------------------------------------------------------------------
+
+def _walk_numbers(node, path=""):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _walk_numbers(v, f"{path}/{k}")
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _walk_numbers(v, f"{path}[{i}]")
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        yield path, float(node)
+
+
+def find_baseline():
+    """Newest committed BENCH_*.json (by numeric suffix, then name).  The
+    output file itself counts if it already exists — it is read *before* the
+    new run overwrites it, so re-runs in one checkout still compare."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cands = sorted(
+        glob.glob(os.path.join(root, "BENCH_*.json")),
+        key=lambda p: (int((re.search(r"(\d+)", os.path.basename(p)) or
+                            [0, 0])[1]), p))
+    return cands[-1] if cands else None
+
+
+def compare_to_baseline(doc, base, rel=0.25, ms_floor=2.0):
+    """Regression gate for the bench lane: a timing more than ``rel`` slower
+    (plus an absolute floor — tiny-scale timings are noisy), modularity more
+    than ``rel`` lower, or the byte-model reduction more than ``rel`` smaller
+    than the committed baseline.  Wall-clock timings are only compared when
+    the baseline came from the *same host* (meta.host) — a baseline committed
+    from the authoring machine must not fail heterogeneous CI runners; the
+    machine-independent metrics (modularity, bytes) always gate."""
+    failures = []
+    for k in ("scale", "edge_factor", "n_shards"):
+        if doc.get("meta", {}).get(k) != base.get("meta", {}).get(k):
+            print(f"baseline meta mismatch ({k}: "
+                  f"{base.get('meta', {}).get(k)} vs "
+                  f"{doc.get('meta', {}).get(k)}): runs are not comparable, "
+                  f"skipping baseline gate")
+            return failures
+    same_host = (doc.get("meta", {}).get("host")
+                 and doc.get("meta", {}).get("host")
+                 == base.get("meta", {}).get("host"))
+    if not same_host:
+        print("baseline from a different host: skipping wall-clock "
+              "comparison (quality/byte metrics still gate)")
+    for k, new in (doc.get("timings_ms", {}) if same_host else {}).items():
+        old = base.get("timings_ms", {}).get(k)
+        if old is not None and new > old * (1 + rel) + ms_floor:
+            failures.append(f"REGRESSION: {k} {new:.2f} ms vs baseline "
+                            f"{old:.2f} ms (> {100 * rel:.0f}% slower)")
+    q_new = doc.get("modularity", {}).get("multilevel")
+    q_old = base.get("modularity", {}).get("multilevel")
+    if q_new is not None and q_old is not None:
+        if q_new < q_old - rel * max(abs(q_old), 0.02):
+            failures.append(f"REGRESSION: multilevel modularity {q_new:.5f} "
+                            f"vs baseline {q_old:.5f}")
+    r_new = doc.get("bytes", {}).get("reduction")
+    r_old = base.get("bytes", {}).get("reduction")
+    if r_new is not None and r_old is not None and r_new < r_old * (1 - rel):
+        failures.append(f"REGRESSION: byte reduction {r_new:.1f}x vs "
+                        f"baseline {r_old:.1f}x")
+    return failures
 
 
 if __name__ == "__main__":
@@ -175,10 +400,45 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale CI lane: exit nonzero on NaN/regression")
     ap.add_argument("--sweep-delta", action="store_true")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the machine-readable result document")
+    ap.add_argument("--baseline", default="none", metavar="PATH|auto|none",
+                    help="compare against a previous BENCH_*.json and fail "
+                         "on NaN or >25%% regression ('auto' = newest "
+                         "committed file)")
     args = ap.parse_args()
     if args.sweep_delta:
         sweep_delta(min(args.scale, 10), args.edge_factor)
         sys.exit(0)
-    _, failures = run(args.scale, args.edge_factor, smoke=args.smoke)
-    if args.smoke and failures:
+    base = None
+    if args.baseline == "auto":
+        path = find_baseline()
+        if path is not None:
+            with open(path) as f:
+                base = (path, json.load(f))
+    elif args.baseline != "none":
+        with open(args.baseline) as f:
+            base = (args.baseline, json.load(f))
+    doc, failures = run(args.scale, args.edge_factor, smoke=args.smoke)
+    for path, v in _walk_numbers(doc):
+        if math.isnan(v):
+            failures.append(f"REGRESSION: NaN at {path}")
+    if base is not None:
+        base_path, base_doc = base
+        cmp_failures = compare_to_baseline(doc, base_doc)
+        print(f"\nbaseline {os.path.basename(base_path)}: "
+              + ("OK" if not cmp_failures else f"{len(cmp_failures)} regressions"))
+        for f in cmp_failures:
+            print(f)
+        failures += cmp_failures
+    elif args.baseline == "auto":
+        print("\nbaseline: none committed yet (first trajectory point)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    # --smoke and --baseline are both gates: any failure (smoke regression
+    # marker, NaN, or baseline regression) exits nonzero under either flag
+    if failures and (args.smoke or args.baseline != "none"):
         sys.exit(1)

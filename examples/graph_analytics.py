@@ -11,8 +11,9 @@ import numpy as np
 
 from repro.core import rmat
 from repro.core.algorithms import (spmv, spmspv, pagerank, bfs, random_walks,
-                                   label_propagation, modularity, ties_sample,
-                                   sssp, connected_components, symmetrize)
+                                   label_propagation, modularity, multilevel,
+                                   ties_sample, sssp, connected_components,
+                                   symmetrize)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=int, default=12)
@@ -39,6 +40,7 @@ lv = timed("BFS", jax.jit(lambda: bfs(g, 0, max_levels=48)))
 wk = timed("Random walks (4096x16)", jax.jit(lambda: random_walks(
     g, jnp.arange(4096) % g.n_rows, 16, key)))
 lab = timed("Louvain (LPA, 8 it)", jax.jit(lambda: label_propagation(g, iters=8)))
+mlab, mscores = timed("Louvain (multi-level)", lambda: multilevel(g))
 dist = timed("SSSP (delta-stepping)", jax.jit(lambda: sssp(g, 0)))
 gsym = symmetrize(g)  # host-side prep for components
 comp = timed("Connected components", jax.jit(lambda: connected_components(
@@ -53,4 +55,7 @@ print(f"  sssp reached           {int(np.isfinite(np.asarray(dist)).sum())}"
 print(f"  components             {len(np.unique(np.asarray(comp)))}")
 print(f"  communities            {len(np.unique(np.asarray(lab)))}")
 print(f"  modularity             {float(modularity(g, lab)):.4f}")
+print(f"  multilevel communities {len(np.unique(np.asarray(mlab)))}")
+print(f"  multilevel modularity  {(mscores[-1] if mscores else 0.0):.4f} "
+      f"over {len(mscores)} levels")
 print(f"  TIES nodes/edges       {int(n_nodes)}/{int(mask.sum())}")

@@ -8,7 +8,8 @@ from .cc import (connected_components, connected_components_distributed,
 from .random_walks import (random_walks, random_walks_distributed,
                            walk_queue_program)
 from .louvain import (label_propagation, label_propagation_distributed,
-                      lpa_program, modularity)
+                      lpa_program, modularity, modularity_distributed,
+                      multilevel, multilevel_distributed, contract_distributed)
 from .sampling import ties_sample, neighbor_sample
 
 __all__ = [
@@ -21,6 +22,7 @@ __all__ = [
     "cc_program", "symmetrize",
     "random_walks", "random_walks_distributed", "walk_queue_program",
     "label_propagation", "label_propagation_distributed", "lpa_program",
-    "modularity",
+    "modularity", "modularity_distributed",
+    "multilevel", "multilevel_distributed", "contract_distributed",
     "ties_sample", "neighbor_sample",
 ]

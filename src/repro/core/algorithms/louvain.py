@@ -1,17 +1,32 @@
 """Community detection (paper: "Louvain Community", 41x / 555x).
 
-Implemented as weighted label propagation — one-level Louvain local-move
-sweeps: every vertex adopts the label with maximal incident edge weight.
-Since PR 2 the sweep is an engine program: the per-vertex weighted vote is
-the engine's ``combine='argmax_weighted'`` structured combine (DESIGN.md §4),
-so this module holds only the two-line message/update rules.  Votes come
-from a vertex's *out*-neighbors, and the engine combines over in-edges, so
-the program runs on the transposed adjacency.
+The local-move sweep is weighted label propagation: every vertex adopts the
+label with maximal incident edge weight.  Since PR 2 the sweep is an engine
+program: the per-vertex weighted vote is the engine's
+``combine='argmax_weighted'`` structured combine (DESIGN.md §4), so this
+module holds only the two-line message/update rules.  Votes come from a
+vertex's *out*-neighbors, and the engine combines over in-edges, so the
+program runs on the transposed adjacency.
 
-Distributed, the votes are owner-routed raw and reduced at the destination
-owner (`offload.remote_scatter_weighted_mode` — the remote-atomic-heavy loop
-the paper benchmarks); full multi-level coarsening is out of scope
-(DESIGN.md §9).
+Since PR 3 the sweeps compose into **multi-level Louvain** (DESIGN.md §11).
+Raw LPA maximizes incident weight with no null-model penalty, which on
+low-structure graphs merges past the modularity optimum — so the multilevel
+local move splits the sweep in two: the engine's argmax combine still picks
+each vertex's heaviest neighbor community, but only as a *candidate*
+(:func:`louvain_candidate_program`), and a vectorized gain gate accepts the
+move only when the exact directed-modularity delta is positive (and the
+target label is smaller — synchronous moves with a strictly decreasing label
+order cannot swap-cycle).  :func:`multilevel` runs gated sweeps until
+modularity stalls, contracts the communities (`graph.contract` — supernodes,
+intra-community weight into self-loops), and repeats on
+`engine.run_multilevel`'s level pipeline, accepting a level only while
+modularity keeps improving.  Distributed, the sweep keeps votes at the
+voter's owner (edges are sharded by source), reads remote labels with
+`dgas_gather`, accumulates in-side sums with the `remote_scatter_add` remote
+atomic, modularity is a pair of psum'd segment reductions
+(:func:`modularity_distributed`), and contraction reshards each level's
+surviving coarse edges to their new owner with `RouteByteCounter` accounting
+(:func:`contract_distributed`).
 """
 from __future__ import annotations
 
@@ -19,15 +34,32 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
 
-from .. import engine, offload
+from .. import engine, offload, traffic
 from ..dgas import ATT, block_rule
-from ..graph import CSR
-from .distgraph import shard_graph, shard_vertex_array
+from ..graph import CSR, contract
+from .distgraph import (ShardedGraph, shard_graph, shard_vertex_array,
+                        unshard_vertex_array)
 
 __all__ = ["label_propagation", "label_propagation_distributed",
-           "lpa_program", "modularity"]
+           "lpa_program", "louvain_candidate_program",
+           "modularity", "modularity_distributed",
+           "multilevel", "multilevel_distributed", "contract_distributed",
+           "partition_equal"]
+
+
+def partition_equal(a, b) -> bool:
+    """True iff two labelings induce the same partition (bijective label
+    correspondence) — the equivalence the distributed drivers promise, since
+    renumbering order is the only freedom they have."""
+    m1, m2 = {}, {}
+    for x, y in zip(np.asarray(a).tolist(), np.asarray(b).tolist()):
+        if m1.setdefault(x, y) != y or m2.setdefault(y, x) != x:
+            return False
+    return True
 
 
 def lpa_program() -> engine.VertexProgram:
@@ -109,3 +141,463 @@ def modularity(csr: CSR, labels: jnp.ndarray) -> jnp.ndarray:
     c_out = jax.ops.segment_sum(deg_out, labels, num_segments=csr.n_rows)
     c_in = jax.ops.segment_sum(deg_in, labels, num_segments=csr.n_rows)
     return e_in - jnp.sum(c_out * c_in) / (m * m)
+
+
+# Compiled shard_map callables are cached per structural signature: the
+# multilevel drivers call these once per sweep, and re-tracing/compiling an
+# identical program every sweep dominates wall clock on a forced-multi-device
+# host.  Keyed by mesh (hashable), axis, the ATT semantics and edge padding.
+# FIFO-bounded: every level of every graph is a distinct key, so an unbounded
+# dict would pin one compiled executable (plus its mesh/ATT closure) per
+# level forever in a long-lived process.
+_MAPPED_CACHE: dict = {}
+_MAPPED_CACHE_MAX = 64
+
+
+def _att_key(att: ATT):
+    return (att.kind, att.n_global, att.n_shards,
+            tuple(np.asarray(att.boundaries).tolist()))
+
+
+def _cached_mapped(kind: str, mesh, axis, att: ATT, m: int, build):
+    try:
+        hash(mesh)
+        mesh_key = mesh
+    except TypeError:
+        mesh_key = id(mesh)
+    key = (kind, mesh_key, axis if isinstance(axis, str) else tuple(axis),
+           _att_key(att), m)
+    fn = _MAPPED_CACHE.get(key)
+    if fn is None:
+        while len(_MAPPED_CACHE) >= _MAPPED_CACHE_MAX:
+            _MAPPED_CACHE.pop(next(iter(_MAPPED_CACHE)))
+        fn = _MAPPED_CACHE[key] = build()
+    return fn
+
+
+def modularity_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
+                           labels: jnp.ndarray, *, axis=None) -> jnp.ndarray:
+    """Distributed Newman modularity (directed form), psum'd across shards.
+
+    `g` is edge-sharded by source owner under `att` and `labels` is the
+    stacked (S, per) vertex labeling (global label ids in [0, n)).  Each
+    shard reads its sources' labels locally, fetches destination labels with
+    the fine-grained `dgas_gather`, reduces its partial (intra-community
+    weight, per-community out/in degree) sums, and three psums assemble the
+    global quantities — every shard returns the same Q.
+    """
+    axis = axis if axis is not None else mesh.axis_names[0]
+    axes = [axis] if isinstance(axis, str) else list(axis)
+    spec = P(axis) if isinstance(axis, str) else P(tuple(axis))
+    n = att.n_global
+    m_edges = g.edges_per_shard
+
+    def shard_fn(src, dst, val, lab):
+        src, dst, val, lab = src[0], dst[0], val[0], lab[0]
+        local_src = jnp.where(src >= 0, att.local(jnp.maximum(src, 0)), -1)
+        lab_src = offload.dma_gather(lab, local_src, fill=-1)
+        lab_dst = offload.dgas_gather(lab, jnp.where(src >= 0, dst, -1), att,
+                                      axis, capacity=m_edges, fill=-1)
+        valid = (src >= 0) & (lab_src >= 0) & (lab_dst >= 0)
+        w = jnp.where(valid, val, 0.0)
+        m_tot = offload.hierarchical_psum(jnp.sum(w), axes)
+        e_in = offload.hierarchical_psum(
+            jnp.sum(jnp.where(lab_src == lab_dst, w, 0.0)), axes)
+        c_out = offload.dma_scatter_add(jnp.zeros((n,), jnp.float32),
+                                        jnp.where(valid, lab_src, -1), w)
+        c_in = offload.dma_scatter_add(jnp.zeros((n,), jnp.float32),
+                                       jnp.where(valid, lab_dst, -1), w)
+        c_out = offload.hierarchical_psum(c_out, axes)
+        c_in = offload.hierarchical_psum(c_in, axes)
+        q = e_in / m_tot - jnp.sum(c_out * c_in) / (m_tot * m_tot)
+        return q[None]
+
+    mapped = _cached_mapped(
+        "modularity", mesh, axis, att, m_edges,
+        lambda: jax.jit(shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * 4,
+                                  out_specs=spec, check_rep=False)))
+    return mapped(g.src, g.dst, g.val, labels.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Multi-level Louvain (gain-gated local moves + contraction on the pipeline)
+# ---------------------------------------------------------------------------
+
+def louvain_candidate_program() -> engine.VertexProgram:
+    """Record (not adopt) each vertex's heaviest neighbor-community candidate.
+
+    Same ``argmax_weighted`` combine as :func:`lpa_program`, but the update
+    *stores* the (weight, label) winner in the state instead of switching to
+    it — the modularity gain gate outside the engine decides the move
+    (phase 1 of true Louvain, DESIGN.md §11).  One recording pass per sweep:
+    ``max_iters=1`` with a drained next frontier.
+    """
+
+    def msg_fn(state, frontier):
+        return jnp.where(frontier > 0, state["label"], -1)
+
+    def update_fn(state, acc, frontier, it):
+        cand_w, cand_l = acc
+        return ({"label": state["label"], "cand_w": cand_w, "cand_l": cand_l},
+                jnp.zeros_like(frontier))
+
+    return engine.VertexProgram(edge_op="mul", combine="argmax_weighted",
+                                msg_fn=msg_fn, update_fn=update_fn)
+
+
+def _vote_transpose(csr: CSR) -> CSR:
+    """A^T of the self-loop-free voting graph (host prep, once per level).
+
+    Self-loops stay in the *level graph* (they carry contracted
+    intra-community weight and feed modularity / degrees) but must not vote:
+    a supernode's self-vote is the 'stay' option, whose gain is zero by
+    definition in the gate."""
+    rows = np.asarray(csr.row_ids())
+    cols = np.asarray(csr.indices)
+    vals = (np.asarray(csr.values) if csr.values is not None
+            else np.ones_like(cols, np.float32))
+    keep = rows != cols
+    return CSR.from_coo(cols[keep], rows[keep], vals[keep],
+                        csr.n_rows, csr.n_cols)
+
+
+def _gate_moves(lab, cand_w, cand_l, w_in_b, w_out_same, w_in_same,
+                kout, kin, out_c, in_c, w_tot, down_only):
+    """The shared gain-gate tail (see :func:`_gain_gate` for the math).  The
+    local and distributed sweeps both end here, which is what keeps their
+    move decisions — and therefore `multilevel` vs `multilevel_distributed`
+    partitions — in lock-step."""
+    w_to_b = jnp.where(cand_l >= 0, cand_w, 0.0)
+    b = jnp.where(cand_l >= 0, cand_l, lab)
+    d_e = (w_to_b + w_in_b) - (w_out_same + w_in_same)
+    d_pen = (kout * (jnp.take(in_c, b) - jnp.take(in_c, lab))
+             + kin * (jnp.take(out_c, b) - jnp.take(out_c, lab))
+             + 2.0 * kout * kin)
+    dq = d_e / w_tot - d_pen / (w_tot * w_tot)
+    # `down_only` is traced so one compiled sweep serves both parities
+    move = (b != lab) & (dq > 0) & ((down_only == 0) | (b < lab))
+    return jnp.where(move, b, lab)
+
+
+def _gain_gate(csr: CSR, lab: jnp.ndarray, cand_w: jnp.ndarray,
+               cand_l: jnp.ndarray, kout: jnp.ndarray, kin: jnp.ndarray,
+               w_tot, down_only) -> jnp.ndarray:
+    """Accept candidate moves whose exact directed-modularity delta is > 0.
+
+    For v moving from community A to B the delta of
+    ``Q = sum_c e_c/W - sum_c out_c*in_c/W^2`` is::
+
+        d_e   = [w(v->B) + w(B->v)] - [w(v->A\\v) + w(A\\v->v)]
+        d_pen = kout_v*(in_B - in_A) + kin_v*(out_B - out_A) + 2*kout_v*kin_v
+        dQ    = d_e/W - d_pen/W^2
+
+    (self-loops cancel — they stay intra-community either way; A's aggregates
+    include v).  All terms are edge-parallel segment reductions; w(v->B) is
+    the candidate's vote weight straight from the engine combine.
+
+    ``down_only`` restricts moves to B < A: under a strictly decreasing
+    label order, simultaneous (synchronous) moves cannot swap-cycle, so the
+    sweep is safe without coloring.  The local-move phase alternates
+    down-only sweeps with free ones (which can undo a down-move that walled
+    a vertex off from its best community); free sweeps *can* oscillate, but
+    the phase keeps a sweep only if measured modularity improves, so an
+    oscillation is discarded rather than applied.
+    """
+    n = csr.n_rows
+    rows, cols = csr.row_ids(), csr.indices
+    vals = (csr.values if csr.values is not None
+            else jnp.ones_like(cols, jnp.float32))
+    ns = rows != cols
+    lab_r, lab_c = jnp.take(lab, rows), jnp.take(lab, cols)
+    same = ns & (lab_r == lab_c)
+    w_same = jnp.where(same, vals, 0.0)
+    w_out_same = jax.ops.segment_sum(w_same, rows, num_segments=n)
+    w_in_same = jax.ops.segment_sum(w_same, cols, num_segments=n)
+    bl_safe = jnp.where(cand_l >= 0, cand_l, -2)
+    to_b = ns & (lab_r == jnp.take(bl_safe, cols))
+    w_in_b = jax.ops.segment_sum(jnp.where(to_b, vals, 0.0), cols,
+                                 num_segments=n)
+    out_c = jax.ops.segment_sum(kout, lab, num_segments=n)
+    in_c = jax.ops.segment_sum(kin, lab, num_segments=n)
+    return _gate_moves(lab, cand_w, cand_l, w_in_b, w_out_same, w_in_same,
+                       kout, kin, out_c, in_c, w_tot, down_only)
+
+
+@jax.jit
+def _sweep_jit(vote_t: CSR, csr: CSR, lab, kout, kin, w_tot, down_only):
+    """One compiled local-move sweep.  Module-level (graphs ride in as pytree
+    arguments, their shapes/aux as the jit cache key) so repeated multilevel
+    runs over the same level shapes reuse the compilation."""
+    n = csr.n_rows
+    state0 = {"label": lab, "cand_w": jnp.zeros((n,), jnp.float32),
+              "cand_l": jnp.full((n,), -1, jnp.int32)}
+    st = engine.run(vote_t, louvain_candidate_program(), state0,
+                    jnp.ones((n,), jnp.int32), max_iters=1, mode="pull")
+    return _gain_gate(csr, lab, st["cand_w"], st["cand_l"], kout, kin,
+                      w_tot, down_only)
+
+
+def _hill_climb(step_fn, score_fn, x0, q0, max_steps: int, tol: float):
+    """Greedy improving-only loop shared by the local and distributed sweep
+    phases: ``step_fn(x, s)`` proposes, ``score_fn(cand)`` measures, a
+    proposal is kept only if it improves by more than ``tol``, and the climb
+    stops once two proposals in a row fail (the sweeps alternate down-only /
+    free parity, so both must stall).  Returns ``(x, best_score)``."""
+    x, q_best, stale = x0, q0, 0
+    for s in range(max_steps):
+        cand = step_fn(x, s)
+        q = float(score_fn(cand))
+        if np.isfinite(q) and q > q_best + tol:
+            x, q_best, stale = cand, q, 0
+        else:
+            stale += 1
+            if stale >= 2:
+                break
+    return x, q_best
+
+
+def louvain_local_moves(csr: CSR, *, max_sweeps: int = 30,
+                        sweep_tol: float = 1e-6):
+    """Louvain phase 1 on one (coarse) graph: gain-gated local moves until
+    modularity stalls.
+
+    Each sweep runs the engine candidate program (one argmax-combine pass on
+    the voting transpose) and the :func:`_gain_gate` — even sweeps down-only,
+    odd sweeps free; the :func:`_hill_climb` keeps a sweep only if it
+    improves :func:`modularity` by more than ``sweep_tol``, so the phase is
+    a monotone climb from the singleton labeling.  Returns ``(labels, q)``.
+    """
+    n = csr.n_rows
+    vote_t = _vote_transpose(csr)
+    rows, cols = csr.row_ids(), csr.indices
+    vals = (csr.values if csr.values is not None
+            else jnp.ones_like(cols, jnp.float32))
+    kout = jax.ops.segment_sum(vals, rows, num_segments=n)
+    kin = jax.ops.segment_sum(vals, cols, num_segments=n)
+    w_tot = jnp.sum(vals)
+
+    lab0 = jnp.arange(n, dtype=jnp.int32)
+    return _hill_climb(
+        lambda lab, s: _sweep_jit(vote_t, csr, lab, kout, kin, w_tot,
+                                  jnp.int32(s % 2 == 0)),
+        lambda lab: modularity(csr, lab),
+        lab0, float(modularity(csr, lab0)), max_sweeps, sweep_tol)
+
+
+def multilevel(csr: CSR, *, max_levels: int = 10, max_sweeps: int = 30,
+               tol: float = 1e-4, sweep_tol: float = 1e-6):
+    """Multi-level Louvain: gain-gated engine sweeps + community contraction
+    until modularity stalls.
+
+    Each level runs :func:`louvain_local_moves` on the current (coarse)
+    graph, contracts the resulting communities with `graph.contract` and
+    scores the assignment with :func:`modularity` — which contraction leaves
+    invariant, so a level's score *is* the level-0 modularity of the
+    projected labels.  `engine.run_multilevel` owns the loop and the stall
+    criterion (a level is kept only if it improves Q by more than ``tol``),
+    so the returned score trace is strictly increasing.
+
+    Returns ``(labels, scores)``: the (n,) int32 community labels on the
+    original graph and the accepted levels' modularity trace.
+    """
+
+    def level_fn(g, level):
+        return louvain_local_moves(g, max_sweeps=max_sweeps,
+                                   sweep_tol=sweep_tol)[0]
+
+    labels, _, scores = engine.run_multilevel(
+        csr, level_fn, contract, modularity, max_levels=max_levels, tol=tol)
+    return labels, scores
+
+
+def contract_distributed(g: ShardedGraph, att: ATT, labels, *,
+                         counter: Optional[traffic.RouteByteCounter] = None):
+    """Contract an edge-sharded graph along a global labeling, routing each
+    surviving coarse edge to its new owner shard.
+
+    Per shard: relabel the owned edge partition ((u, v, w) ->
+    (label[u], label[v], w)) and pre-reduce duplicate coarse pairs locally
+    (the sender-side segment combine), then ship every pre-reduced edge whose
+    coarse source falls under a *different* owner in the coarse block rule —
+    only those cross the network, and ``counter.contract_level`` charges them
+    at `traffic.CONTRACT_PAYLOAD_BYTES` apiece.  The repartition itself is
+    host work (coarse shapes are data-dependent), like `shard_graph`.
+
+    Returns ``(coarse_csr, coarse_g, coarse_att, renumber, n_routed)``.
+    """
+    S = g.n_shards
+    lab = jnp.asarray(labels).astype(jnp.int32)
+    dense_dev, n_c_dev = offload.compact_labels(lab)
+    dense = np.asarray(dense_dev)
+    n_c = int(n_c_dev)
+    coarse_att = block_rule(n_c, S)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    val = np.asarray(g.val)
+    n_routed = 0
+    parts = []
+    for s in range(S):
+        live = src[s] >= 0
+        csrc, cdst = dense[src[s][live]], dense[dst[s][live]]
+        w = val[s][live]
+        # sender-side pre-reduction: one summed weight per coarse pair
+        key = csrc.astype(np.int64) * n_c + cdst
+        uniq, inv = np.unique(key, return_inverse=True)
+        w_red = np.bincount(inv, weights=w, minlength=uniq.size)
+        usrc = (uniq // n_c).astype(np.int64)
+        udst = (uniq % n_c).astype(np.int64)
+        new_owner = np.asarray(coarse_att.owner(jnp.asarray(usrc)))
+        n_routed += int((new_owner != s).sum())
+        parts.append((usrc, udst, w_red))
+    if counter is not None:
+        counter.contract_level(n_routed)
+    rows = np.concatenate([p[0] for p in parts])
+    cols = np.concatenate([p[1] for p in parts])
+    vals = np.concatenate([p[2] for p in parts]).astype(np.float32)
+    coarse = CSR.from_coo(rows, cols, vals, n_c, n_c, sum_duplicates=True)
+    coarse_g, _ = shard_graph(coarse, S, row_att=coarse_att)
+    return coarse, coarse_g, coarse_att, dense_dev, n_routed
+
+
+def _louvain_sweep_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
+                               labels: jnp.ndarray, kout: jnp.ndarray,
+                               kin: jnp.ndarray, w_tot: jnp.ndarray, *,
+                               axis=None,
+                               down_only: bool = True) -> jnp.ndarray:
+    """One distributed gain-gated local-move sweep; labels stacked (S, per).
+
+    Edges are sharded by *voter* (source) owner, so the candidate vote is a
+    local :func:`offload.segment_weighted_mode` — only the label reads cross
+    the network (`dgas_gather`) and the in-side weight sums return via the
+    `remote_scatter_add` remote atomic; the community aggregates (out_c,
+    in_c) are psum-replicated.  The level-invariant degree operands ride in
+    pre-sharded (``kout``/``kin`` stacked (S, per), ``w_tot`` (S,)) so the
+    sweep loop does not re-route them every sweep.  Same gate and
+    ``down_only`` move order as the local :func:`_gain_gate`, so the sweep
+    is value-equivalent shard count aside.
+    """
+    axis = axis if axis is not None else mesh.axis_names[0]
+    axes = [axis] if isinstance(axis, str) else list(axis)
+    spec = P(axis) if isinstance(axis, str) else P(tuple(axis))
+    n = att.n_global
+    per = att.per_shard
+    m = g.edges_per_shard
+
+    def shard_fn(src, dst, val, lab, down, kout, kin, w_tot):
+        src, dst, val, lab = src[0], dst[0], val[0], lab[0]
+        down, kout, kin, w_tot = down[0], kout[0], kin[0], w_tot[0]
+        live = src >= 0
+        local_src = jnp.where(live, att.local(jnp.maximum(src, 0)), -1)
+        lab_src = offload.dma_gather(lab, local_src, fill=-1)
+        gdst = jnp.where(live, dst, -1)
+        lab_dst = offload.dgas_gather(lab, gdst, att, axis, capacity=m,
+                                      fill=-1)
+        ns = live & (src != dst)
+        # candidate: heaviest neighbor community, reduced at the voter
+        cand_w, cand_l = offload.segment_weighted_mode(
+            jnp.where(ns, local_src, -1), lab_dst, val, per)
+        same = ns & (lab_src == lab_dst)
+        w_same = jnp.where(same, val, 0.0)
+        zeros = jnp.zeros((per,), jnp.float32)
+        w_out_same = offload.dma_scatter_add(
+            zeros, jnp.where(same, local_src, -1), w_same)
+        w_in_same = offload.remote_scatter_add(
+            zeros, jnp.where(same, dst, -1), w_same, att, axis, capacity=m)
+        cl_dst = offload.dgas_gather(cand_l, gdst, att, axis, capacity=m,
+                                     fill=-2)
+        to_b = ns & (lab_src == cl_dst)
+        w_in_b = offload.remote_scatter_add(
+            zeros, jnp.where(to_b, dst, -1), jnp.where(to_b, val, 0.0),
+            att, axis, capacity=m)
+        out_c = offload.hierarchical_psum(
+            offload.dma_scatter_add(jnp.zeros((n,), jnp.float32), lab, kout),
+            axes)
+        in_c = offload.hierarchical_psum(
+            offload.dma_scatter_add(jnp.zeros((n,), jnp.float32), lab, kin),
+            axes)
+        return _gate_moves(lab, cand_w, cand_l, w_in_b, w_out_same,
+                           w_in_same, kout, kin, out_c, in_c, w_tot,
+                           down)[None]
+
+    mapped = _cached_mapped(
+        "sweep", mesh, axis, att, m,
+        lambda: jax.jit(shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * 8,
+                                  out_specs=spec, check_rep=False)))
+    down = jnp.full((att.n_shards,), int(down_only), jnp.int32)
+    return mapped(g.src, g.dst, g.val, labels.astype(jnp.int32), down,
+                  kout, kin, w_tot)
+
+
+def multilevel_distributed(csr: CSR, mesh: Mesh, *, axis=None,
+                           max_levels: int = 10, max_sweeps: int = 30,
+                           tol: float = 1e-4, sweep_tol: float = 1e-6,
+                           counter: Optional[traffic.RouteByteCounter] = None):
+    """Distributed multi-level Louvain: `engine.run_multilevel`'s exact level
+    pipeline with every stage a sharded closure.
+
+    ``level_fn`` is the :func:`_hill_climb` over
+    :func:`_louvain_sweep_distributed` scored by
+    :func:`modularity_distributed`; ``contract_fn`` is
+    :func:`contract_distributed` (installing the coarse shards for the next
+    level and charging `counter` with the routed edges); ``score_fn`` is the
+    psum'd modularity.  Because the loop, gate and stall rules are literally
+    the single-device ones, the result matches :func:`multilevel` labels
+    (same partition; float reduction order is the only freedom).
+
+    Returns ``(labels, scores)`` with global (n,) labels on the input graph.
+    """
+    axis = axis if axis is not None else mesh.axis_names[0]
+    names = [axis] if isinstance(axis, str) else list(axis)
+    S = 1
+    for a in names:
+        S *= int(mesh.shape[a])
+
+    cur = {}
+
+    def prepare(g):
+        if cur.get("g") is not g:
+            att = block_rule(g.n_rows, S)
+            gsh, _ = shard_graph(g, S, row_att=att)
+            cur.update(g=g, att=att, gsh=gsh)
+
+    def score_fn(g, labels):
+        prepare(g)
+        lab_sh = shard_vertex_array(np.asarray(labels), cur["att"])
+        return float(np.asarray(modularity_distributed(
+            cur["gsh"], cur["att"], mesh, lab_sh, axis=axis))[0])
+
+    def level_fn(g, level):
+        prepare(g)
+        gsh, att = cur["gsh"], cur["att"]
+        # level-invariant degree operands, hoisted out of the sweep loop
+        rows, cols = g.row_ids(), g.indices
+        vals = (g.values if g.values is not None
+                else jnp.ones_like(cols, jnp.float32))
+        kout = shard_vertex_array(np.asarray(
+            jax.ops.segment_sum(vals, rows, num_segments=g.n_rows)), att)
+        kin = shard_vertex_array(np.asarray(
+            jax.ops.segment_sum(vals, cols, num_segments=g.n_rows)), att)
+        w_tot = jnp.full((S,), float(jnp.sum(vals)), jnp.float32)
+        lab0 = shard_vertex_array(np.arange(g.n_rows, dtype=np.int32), att)
+        lab_sh, _ = _hill_climb(
+            lambda lab, s: _louvain_sweep_distributed(
+                gsh, att, mesh, lab, kout, kin, w_tot, axis=axis,
+                down_only=s % 2 == 0),
+            lambda lab: np.asarray(modularity_distributed(
+                gsh, att, mesh, lab, axis=axis))[0],
+            lab0,
+            float(np.asarray(modularity_distributed(
+                gsh, att, mesh, lab0, axis=axis))[0]),
+            max_sweeps, sweep_tol)
+        return unshard_vertex_array(lab_sh, att)
+
+    def contract_fn(g, assign):
+        prepare(g)
+        coarse, gsh, att, renumber, _ = contract_distributed(
+            cur["gsh"], cur["att"], jnp.asarray(assign), counter=counter)
+        cur.update(g=coarse, att=att, gsh=gsh)
+        return coarse, renumber
+
+    labels, _, scores = engine.run_multilevel(
+        csr, level_fn, contract_fn, score_fn, max_levels=max_levels, tol=tol)
+    return labels, scores

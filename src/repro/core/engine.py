@@ -77,6 +77,7 @@ __all__ = [
     "VertexProgram", "run", "run_distributed", "spmv_pass",
     "build_pull_operand", "tile_active", "sample_neighbors",
     "QueueProgram", "run_queue", "frontier_edge_capacity",
+    "Hierarchy", "run_multilevel",
 ]
 
 _COMBINE_IDENTITY = {"add": 0.0, "min": float("inf"), "max": float("-inf")}
@@ -397,6 +398,87 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
 
 
 # ---------------------------------------------------------------------------
+# Multi-level pipeline (hierarchy of coarsened graphs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """A chain of coarsening maps from a :func:`run_multilevel` run.
+
+    ``maps[l]`` is the (n_l,) int32 map from level-l vertex to its level-(l+1)
+    supernode, so the hierarchy is itself a graph-of-graphs: the level-(l+1)
+    graph is the level-l graph contracted along ``maps[l]``.
+    """
+
+    maps: tuple
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.maps)
+
+    def project(self, top: jnp.ndarray) -> jnp.ndarray:
+        """Pull a per-vertex array at the *top* (coarsest) level down to level
+        0 by composing the maps: out[v] = top[maps[-1][... maps[0][v]]]."""
+        x = jnp.asarray(top)
+        for m in reversed(self.maps):
+            x = jnp.take(x, jnp.asarray(m), axis=0)
+        return x
+
+
+def run_multilevel(csr: CSR, level_fn: Callable, contract_fn: Callable,
+                   score_fn: Callable, *, max_levels: int = 10,
+                   tol: float = 1e-4):
+    """Generic cluster-then-contract level pipeline (multi-level Louvain's
+    loop shape, program-agnostic — the distributed driver runs this same
+    loop with sharded closures).
+
+    Per level: ``level_fn(g, level) -> (n_l,) assignment`` (typically an
+    engine :func:`run` whose VertexProgram state re-seeds from the coarse
+    identity labeling — the level pipeline reuses one program across every
+    level), ``score_fn(g, assign) -> float`` scores the raw assignment (for
+    Louvain: modularity, invariant to both label renumbering and
+    contraction, so the per-level score *is* the level-0 score of the
+    projected labels), and — only if the level is accepted —
+    ``contract_fn(g, assign) -> (coarse_g, renumber)`` collapses it.
+
+    Stall criterion: a level is **accepted only if it improves the score by
+    more than ``tol``** over the previous accepted level (level 0 must beat
+    the singleton baseline ``score_fn(csr, arange)``); the first
+    non-improving level is discarded — without paying for its contraction —
+    and the loop stops, so the returned per-level score trace is strictly
+    increasing by construction.  Also stops when a level no longer shrinks
+    the graph.
+
+    Host-driven loop (each level's shapes are data-dependent); the per-level
+    work inside ``level_fn`` stays jitted engine machinery.
+
+    Returns ``(labels0, hierarchy, scores)``: the level-0 projection of the
+    final clustering, the :class:`Hierarchy` of accepted coarsening maps, and
+    the accepted levels' scores.
+    """
+    g = csr
+    maps, scores = [], []
+    q_prev = float(score_fn(g, jnp.arange(g.n_rows, dtype=jnp.int32)))
+    for level in range(max_levels):
+        assign = level_fn(g, level)
+        q = float(score_fn(g, assign))
+        if not np.isfinite(q) or q <= q_prev + tol:
+            break
+        coarse, renumber = contract_fn(g, assign)
+        maps.append(renumber)
+        scores.append(q)
+        q_prev = q
+        no_shrink = coarse.n_rows >= g.n_rows
+        g = coarse
+        if no_shrink:
+            break
+    hier = Hierarchy(tuple(maps))
+    n_top = g.n_rows if maps else csr.n_rows
+    labels0 = hier.project(jnp.arange(n_top, dtype=jnp.int32))
+    return labels0, hier, scores
+
+
+# ---------------------------------------------------------------------------
 # Distributed engine (owns the shard_map/ATT boilerplate)
 # ---------------------------------------------------------------------------
 
@@ -524,7 +606,8 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                     *, axis: Optional[AxisName] = None, max_iters: int,
                     g_rev: Optional[ShardedGraph] = None, mode: str = "push",
                     switch_frac: float = 1 / 32,
-                    push_edge_capacity: Optional[int] = None):
+                    push_edge_capacity: Optional[int] = None,
+                    return_stats: bool = False):
     """Distributed loop; `state0`/`frontier0` are stacked (S, per) per `att`.
 
     mode: 'push' (every level scatters via remote atomics — the seed
@@ -538,6 +621,10 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
       the full edge partition; overflowing levels fall back to full-capacity
       routing.  None derives `frontier_edge_capacity(m, switch_frac)`; 0
       disables compaction (the seed behavior).
+    return_stats: also return {'iters', 'pushes', 'pulls', 'fallbacks'} —
+      (S,) int32 arrays, identical on every shard (globally reduced);
+      'fallbacks' counts the push levels whose active-edge count overflowed
+      the compacted capacity (the §7 fallback rate's numerator).
     Returns the final state pytree, stacked (S, per).
     """
     if mode not in ("auto", "push", "pull"):
@@ -578,14 +665,15 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
 
         def push(msg, frontier):
             if not compact:
-                return push_full(msg)
+                return push_full(msg), jnp.int32(0)
             active = _active_edge_mask(src, frontier, att)
             # every shard must take the same branch: reduce the overflow flag
             over = offload.hierarchical_psum(
                 (active.astype(jnp.int32).sum() > edge_cap
                  ).astype(jnp.int32), axes)
-            return lax.cond(over == 0, lambda: push_compact(msg, active),
-                            lambda: push_full(msg))
+            acc = lax.cond(over == 0, lambda: push_compact(msg, active),
+                           lambda: push_full(msg))
+            return acc, (over > 0).astype(jnp.int32)
 
         def pull(msg):
             # g_rev rows: src = output vertex (owned here), dst = input vertex
@@ -597,26 +685,36 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
             return offload.hierarchical_psum(f.astype(jnp.int32).sum(), axes)
 
         def cond(carry):
-            state, frontier, it, alive = carry
+            state, frontier, it, alive, _ = carry
             return jnp.logical_and(alive > 0, it < max_iters)
 
         def body(carry):
-            state, frontier, it, alive = carry
+            state, frontier, it, alive, stats = carry
             msg = prog.msg_fn(state, frontier)
             if mode == "push":
-                acc = push(msg, frontier)
+                acc, fb = push(msg, frontier)
+                was_push = jnp.int32(1)
             elif mode == "pull":
-                acc = pull(msg)
+                acc, fb, was_push = pull(msg), jnp.int32(0), jnp.int32(0)
             else:
-                acc = lax.cond(alive <= switch_count,
-                               lambda: push(msg, frontier), lambda: pull(msg))
+                acc, fb, was_push = lax.cond(
+                    alive <= switch_count,
+                    lambda: push(msg, frontier) + (jnp.int32(1),),
+                    lambda: (pull(msg), jnp.int32(0), jnp.int32(0)))
             state, frontier = prog.update_fn(state, acc, frontier, it)
+            n_push, n_pull, n_fb = stats
             # one collective per level: the new count rides the loop carry
-            return state, frontier, it + 1, count(frontier)
+            return (state, frontier, it + 1, count(frontier),
+                    (n_push + was_push, n_pull + (1 - was_push), n_fb + fb))
 
-        state, frontier, _, _ = lax.while_loop(
-            cond, body, (state, frontier, jnp.int32(0), count(frontier)))
-        return tuple(l[None] for l in jax.tree.leaves(state))
+        zero = jnp.int32(0)
+        state, frontier, it, _, (n_push, n_pull, n_fb) = lax.while_loop(
+            cond, body,
+            (state, frontier, zero, count(frontier), (zero, zero, zero)))
+        out = tuple(l[None] for l in jax.tree.leaves(state))
+        if return_stats:
+            out = out + tuple(s[None] for s in (it, n_push, n_pull, n_fb))
+        return out
 
     if not use_rev:  # placeholder operands keep the shard_map arity static
         z = jnp.full((att.n_shards, 1), -1, jnp.int32)
@@ -625,13 +723,18 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
         rsrc, rdst, rval = g_rev.src, g_rev.dst, g_rev.val
 
     n_in = 7 + n_state
+    n_out = n_state + (4 if return_stats else 0)
     # check_rep=False: this jax has no replication rule for while_loop with a
     # psum in its cond; outputs are per-shard anyway (out_specs fully sharded).
     mapped = shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * n_in,
-                       out_specs=(spec,) * n_state, check_rep=False)
+                       out_specs=(spec,) * n_out, check_rep=False)
     out = mapped(g.src, g.dst, g.val, rsrc, rdst, rval, frontier0,
                  *state_leaves)
-    return jax.tree.unflatten(state_def, list(out))
+    state = jax.tree.unflatten(state_def, list(out[:n_state]))
+    if return_stats:
+        keys = ("iters", "pushes", "pulls", "fallbacks")
+        return state, dict(zip(keys, out[n_state:]))
+    return state
 
 
 def spmv_pass(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CSR", "rmat", "uniform_random_graph", "to_padded_ell", "to_bbcsr", "BBCSR"]
+__all__ = ["CSR", "rmat", "uniform_random_graph", "to_padded_ell", "to_bbcsr", "BBCSR",
+           "contract"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -78,6 +79,10 @@ class CSR:
         return CSR.from_coo(cols, rows, vals, self.n_cols, self.n_rows,
                             device=False)
 
+    def contract(self, labels) -> tuple["CSR", jnp.ndarray]:
+        """Collapse label groups into supernodes; see :func:`contract`."""
+        return contract(self, labels)
+
     @staticmethod
     def from_coo(rows, cols, vals, n_rows, n_cols, *, sum_duplicates: bool = False,
                  device: bool = True) -> "CSR":
@@ -106,6 +111,55 @@ class CSR:
             int(n_rows),
             int(n_cols),
         )
+
+
+def contract(csr: CSR, labels) -> tuple[CSR, jnp.ndarray]:
+    """Collapse communities into a coarsened graph (multi-level Louvain's
+    level step; PAPERS: Gill et al. hinge community-detection throughput on
+    cheap contraction between levels).
+
+    ``labels`` is any (n_rows,) int assignment.  The labels are renumbered to
+    dense coarse vertex ids with :func:`offload.compact_labels`, every edge
+    (u, v, w) becomes (label[u], label[v], w), and parallel coarse edges are
+    merged by a segment-sum over the lex-sorted (src_label, dst_label) pairs
+    — the same fused run-reduction the engine's structured combines use.
+    Intra-community edges accumulate into self-loops (they carry the
+    community's internal weight, which keeps modularity invariant under
+    contraction: Q(coarse, identity) == Q(fine, labels)).
+
+    Returns (coarse CSR (n_c x n_c, weighted), renumber (n_rows,) int32
+    mapping each fine vertex to its coarse vertex id).  Host-boundary op:
+    the coarse shapes are data-dependent, so like `CSR.transpose` the result
+    is concrete (usable for deriving the next level's static budgets), not a
+    jit-traceable value.
+    """
+    from . import offload
+
+    lab = jnp.asarray(labels).astype(jnp.int32)
+    if lab.shape[0] != csr.n_rows:
+        raise ValueError(f"labels must be ({csr.n_rows},), got {lab.shape}")
+    dense, n_c_dev = offload.compact_labels(lab)
+    n_c = int(n_c_dev) if csr.n_rows else 0
+    m = csr.nnz
+    if m == 0:
+        return CSR(jnp.zeros((n_c + 1,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                   jnp.zeros((0,), jnp.float32), n_c, n_c), dense
+    vals = (csr.values if csr.values is not None
+            else jnp.ones((m,), jnp.float32))
+    rows = offload.dma_gather(dense, csr.row_ids())
+    cols = offload.dma_gather(dense, csr.indices)
+    # segment-sum of edge weights over (src_label, dst_label) runs
+    order = jnp.lexsort((cols, rows))
+    sr, sc = jnp.take(rows, order), jnp.take(cols, order)
+    sv = jnp.take(vals, order)
+    is_start, run_id = offload.run_starts(sr, sc)
+    run_w = jax.ops.segment_sum(sv, run_id, num_segments=m)
+    starts = np.asarray(is_start)
+    n_runs = int(starts.sum())
+    sr_h, sc_h = np.asarray(sr)[starts], np.asarray(sc)[starts]
+    w_h = np.asarray(run_w)[:n_runs]
+    coarse = CSR.from_coo(sr_h, sc_h, w_h, n_c, n_c)
+    return coarse, dense
 
 
 def rmat(scale: int, edge_factor: int = 16, *, a=0.57, b=0.19, c=0.19, seed: int = 0,

@@ -38,7 +38,7 @@ AxisName = Union[str, Sequence[str]]
 __all__ = [
     "dma_gather", "dma_scatter_add", "dma_strided_copy",
     "axis_size", "my_shard",
-    "segment_argmax", "segment_weighted_mode",
+    "segment_argmax", "segment_weighted_mode", "compact_labels", "run_starts",
     "dgas_gather", "remote_scatter_add", "remote_scatter_combine",
     "remote_scatter_weighted_mode",
     "all_gather_gather",
@@ -105,6 +105,20 @@ def segment_argmax(idx: jnp.ndarray, score: jnp.ndarray, payload: jnp.ndarray,
     return best, jnp.where(pick == pad, -1, pick)
 
 
+def run_starts(*sorted_keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run detection over a lex-sorted key stream (nonempty): returns
+    (is_start (m,) bool, run_id (m,) — the exclusive count of starts).  The
+    shared reduction behind :func:`segment_weighted_mode`,
+    :func:`compact_labels` and `graph.contract`: a run is a maximal stretch
+    where every key matches its predecessor."""
+    neq = None
+    for k in sorted_keys:
+        d = k[1:] != k[:-1]
+        neq = d if neq is None else (neq | d)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), neq])
+    return is_start, jnp.cumsum(is_start) - 1
+
+
 def segment_weighted_mode(idx: jnp.ndarray, labels: jnp.ndarray,
                           weights: jnp.ndarray, n: int
                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -129,12 +143,31 @@ def segment_weighted_mode(idx: jnp.ndarray, labels: jnp.ndarray,
     si, sl = jnp.take(si, order), jnp.take(sl, order)
     sw = jnp.where(jnp.take(valid, order),
                    jnp.take(weights, order), jnp.zeros((), weights.dtype))
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), (si[1:] != si[:-1]) | (sl[1:] != sl[:-1])])
-    run_id = jnp.cumsum(is_start) - 1
+    is_start, run_id = run_starts(si, sl)
     run_w = jax.ops.segment_sum(sw, run_id, num_segments=m)
     rep_idx = jnp.where(is_start & (si < n), si, -1)
     return segment_argmax(rep_idx, jnp.take(run_w, run_id), sl, n)
+
+
+def compact_labels(labels: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Renumber arbitrary int labels into dense ids [0, n_c), order-preserving.
+
+    The graph-contraction step (collapse communities into supernodes) needs
+    community ids that double as coarse vertex ids.  Same run-detection
+    machinery as :func:`segment_weighted_mode`: sort, mark run starts, prefix
+    sum the starts — a segment scan, not a host-side unique.  Returns
+    (dense (n,) int32, n_c () int32); the smallest original label maps to 0,
+    so the renumbering is deterministic and monotone in the original ids.
+    """
+    n = int(labels.shape[0])
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32)
+    order = jnp.argsort(labels, stable=True)
+    sl = jnp.take(labels, order)
+    _, run_id = run_starts(sl)
+    rank = run_id.astype(jnp.int32)
+    dense = jnp.zeros((n,), jnp.int32).at[order].set(rank)
+    return dense, rank[-1] + 1
 
 
 # ---------------------------------------------------------------------------

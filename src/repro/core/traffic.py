@@ -23,7 +23,8 @@ from typing import Dict
 
 __all__ = ["Machine", "XEON", "PIUMA_NODE", "AccessProfile", "SPMV_PROFILES",
            "APP_PROFILES", "time_per_elem", "speedup", "multinode_time_per_elem",
-           "ROUTE_PAYLOAD_BYTES", "push_level_route_bytes", "RouteByteCounter"]
+           "ROUTE_PAYLOAD_BYTES", "CONTRACT_PAYLOAD_BYTES",
+           "push_level_route_bytes", "RouteByteCounter"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +102,9 @@ SPMV_PROFILES: Dict[str, AccessProfile] = {
 # one routed push item: int32 local index + f32 value + validity flag
 ROUTE_PAYLOAD_BYTES = 4 + 4 + 1
 
+# one routed contraction edge: coarse src + coarse dst ids + f32 summed weight
+CONTRACT_PAYLOAD_BYTES = 4 + 4 + 4
+
 
 def push_level_route_bytes(n_shards: int, per_peer_capacity: int,
                            payload_bytes: int = ROUTE_PAYLOAD_BYTES) -> int:
@@ -143,6 +147,17 @@ class RouteByteCounter:
         self.total_bytes += int(gather_bytes)
         self.levels += 1
         return int(gather_bytes)
+
+    def contract_level(self, n_routed_edges: int,
+                       payload_bytes: int = CONTRACT_PAYLOAD_BYTES) -> int:
+        """One multi-level contraction: `n_routed_edges` locally pre-reduced
+        coarse edges change owner shard (unlike the fixed-capacity push
+        exchange, contraction ships exactly the surviving edges — the
+        between-levels repartition is host-driven, not a static all_to_all)."""
+        b = int(n_routed_edges) * payload_bytes
+        self.total_bytes += b
+        self.levels += 1
+        return b
 
 
 def time_per_elem(m: Machine, p: AccessProfile) -> float:

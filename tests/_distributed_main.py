@@ -179,6 +179,57 @@ lpa = label_propagation_distributed(g, mesh, axis="cores", iters=5)
 got = np.asarray(unshard_vertex_array(lpa, lpa_att))
 check("label_propagation_distributed", np.array_equal(got, lpa_local))
 
+# --- engine runtime stats: compacted-push fallback counter -------------------
+st_tiny, d_stats = eng.run_distributed(gsh2, att2, mesh, bfs_program(), st0, f0,
+                                       axis="cores", max_iters=64, mode="push",
+                                       push_edge_capacity=16, return_stats=True)
+d_stats = {k: int(np.asarray(v)[0]) for k, v in d_stats.items()}
+got = np.asarray(unshard_vertex_array(st_tiny["level"], att2))
+check("run_distributed_stats/fallbacks",
+      np.array_equal(got, lv_local) and d_stats["fallbacks"] > 0
+      and d_stats["pushes"] == d_stats["iters"] and d_stats["pulls"] == 0)
+
+# --- multi-level Louvain: modularity, contraction, full pipeline -------------
+from repro.core import traffic
+from repro.core.graph import contract
+from repro.core.algorithms.louvain import (modularity, modularity_distributed,
+                                           contract_distributed, multilevel,
+                                           multilevel_distributed,
+                                           partition_equal)
+
+ml_att = dgas.block_rule(g.n_rows, S)
+g_ml, _ = shard_graph(g, S, row_att=ml_att)
+lab_rand = rng.integers(0, 40, g.n_rows).astype(np.int32)
+q_loc = float(modularity(g, jnp.asarray(lab_rand)))
+q_dist = float(np.asarray(modularity_distributed(
+    g_ml, ml_att, mesh, shard_vertex_array(lab_rand, ml_att), axis="cores"))[0])
+check("modularity_distributed", abs(q_loc - q_dist) < 1e-4)
+
+ctr = traffic.RouteByteCounter(S, payload_bytes=traffic.CONTRACT_PAYLOAD_BYTES)
+coarse_d, _, _, ren_d, routed = contract_distributed(
+    g_ml, ml_att, jnp.asarray(lab_rand), counter=ctr)
+coarse_l, ren_l = contract(g, lab_rand)
+check("contract_distributed/renumber",
+      np.array_equal(np.asarray(ren_d), np.asarray(ren_l)))
+check("contract_distributed/weights",
+      np.allclose(np.asarray(coarse_d.to_dense()),
+                  np.asarray(coarse_l.to_dense()), atol=1e-3))
+check("contract_distributed/route_bytes",
+      routed > 0 and ctr.total_bytes == routed * traffic.CONTRACT_PAYLOAD_BYTES)
+
+
+ml_local, ml_scores = multilevel(g)
+ctr2 = traffic.RouteByteCounter(S, payload_bytes=traffic.CONTRACT_PAYLOAD_BYTES)
+ml_dist, ml_scores_d = multilevel_distributed(g, mesh, axis="cores",
+                                              counter=ctr2)
+check("multilevel_distributed/partition", partition_equal(ml_local, ml_dist))
+check("multilevel_distributed/scores",
+      len(ml_scores) == len(ml_scores_d) and len(ml_scores_d) >= 1
+      and all(abs(a - b) < 1e-3 for a, b in zip(ml_scores, ml_scores_d))
+      and all(b > a for a, b in zip(ml_scores_d, ml_scores_d[1:])))
+check("multilevel_distributed/contract_traffic",
+      ctr2.levels == len(ml_scores_d) and ctr2.total_bytes > 0)
+
 # queue-engine walks: walker count deliberately NOT divisible by S (the
 # queue balancer owns the load spreading now, not a reshape)
 walks = np.asarray(random_walks_distributed(g, jnp.arange(S * 4 + 3), 6,

@@ -1,0 +1,207 @@
+"""Multi-level Louvain: graph contraction vs a pure-NumPy reference, the
+engine-level hierarchy pipeline, modularity invariance/monotonicity, and the
+gain-gated local-move sweep."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, offload, rmat, uniform_random_graph
+from repro.core.graph import CSR, contract
+from repro.core.algorithms import (label_propagation, modularity, multilevel)
+from repro.core.algorithms.louvain import louvain_local_moves
+from repro.core import traffic
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# contraction vs numpy reference
+# ---------------------------------------------------------------------------
+
+def _np_contract(csr, labels):
+    """Reference: dense (n_c, n_c) weight accumulation + unique renumbering."""
+    uniq, dense = np.unique(labels, return_inverse=True)
+    nc = uniq.size
+    rows, cols = np.asarray(csr.row_ids()), np.asarray(csr.indices)
+    vals = (np.asarray(csr.values) if csr.values is not None
+            else np.ones_like(cols, np.float32))
+    out = np.zeros((nc, nc))
+    np.add.at(out, (dense[rows], dense[cols]), vals)
+    return out, dense
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_contract_matches_numpy_reference(seed):
+    g = uniform_random_graph(120, 5, seed=seed)
+    labels = RNG.integers(0, 17, g.n_rows) * 7 + 3  # sparse, unordered ids
+    coarse, renumber = contract(g, labels)
+    ref_dense, ref_renumber = _np_contract(g, labels)
+    np.testing.assert_array_equal(np.asarray(renumber), ref_renumber)
+    assert coarse.n_rows == ref_dense.shape[0]
+    np.testing.assert_allclose(np.asarray(coarse.to_dense()), ref_dense,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_contract_unweighted_counts_edges():
+    g = uniform_random_graph(60, 4, seed=3, weighted=False)
+    labels = RNG.integers(0, 5, g.n_rows)
+    coarse, _ = contract(g, labels)
+    ref_dense, _ = _np_contract(g, labels)
+    np.testing.assert_allclose(np.asarray(coarse.to_dense()), ref_dense,
+                               atol=1e-6)
+
+
+def test_contract_self_loops_accumulate_intra_weight():
+    # two 3-cliques: contracting each clique must put all intra weight on the
+    # diagonal and the single cross edge off-diagonal
+    rows, cols = [], []
+    for c in range(2):
+        for i in range(3):
+            for j in range(3):
+                if i != j:
+                    rows.append(c * 3 + i)
+                    cols.append(c * 3 + j)
+    rows.append(0)
+    cols.append(3)
+    g = CSR.from_coo(rows, cols, np.ones(len(rows), np.float32), 6, 6)
+    coarse, renumber = contract(g, np.array([0, 0, 0, 1, 1, 1]))
+    d = np.asarray(coarse.to_dense())
+    np.testing.assert_allclose(d, np.array([[6.0, 1.0], [0.0, 6.0]]))
+    np.testing.assert_array_equal(np.asarray(renumber), [0, 0, 0, 1, 1, 1])
+
+
+def test_contract_modularity_invariant():
+    g = rmat(8, 6, seed=5)
+    labels = RNG.integers(0, 30, g.n_rows)
+    coarse, renumber = contract(g, labels)
+    q_fine = float(modularity(g, jnp.asarray(np.asarray(renumber))))
+    q_coarse = float(modularity(coarse, jnp.arange(coarse.n_rows)))
+    assert abs(q_fine - q_coarse) < 1e-5
+
+
+def test_compact_labels_dense_and_monotone():
+    lab = jnp.asarray(np.array([30, 5, 30, 7, 5, 99], np.int32))
+    dense, n_c = offload.compact_labels(lab)
+    np.testing.assert_array_equal(np.asarray(dense), [2, 0, 2, 1, 0, 3])
+    assert int(n_c) == 4
+
+
+# ---------------------------------------------------------------------------
+# engine hierarchy pipeline
+# ---------------------------------------------------------------------------
+
+def test_hierarchy_projects_through_levels():
+    maps = (jnp.asarray([0, 0, 1, 1, 2]), jnp.asarray([0, 1, 1]))
+    hier = engine.Hierarchy(maps)
+    top = jnp.asarray([10, 20])
+    np.testing.assert_array_equal(np.asarray(hier.project(top)),
+                                  [10, 10, 20, 20, 20])
+    assert hier.n_levels == 2
+
+
+def test_run_multilevel_rejects_non_improving_levels():
+    g = uniform_random_graph(80, 4, seed=2)
+    calls = []
+
+    def level_fn(gl, level):
+        calls.append(level)
+        return jnp.arange(gl.n_rows, dtype=jnp.int32)  # identity: no merge
+
+    labels, hier, scores = engine.run_multilevel(
+        g, level_fn, contract, modularity, max_levels=5)
+    # identity assignment cannot improve Q -> zero accepted levels, one call
+    assert scores == [] and hier.n_levels == 0 and calls == [0]
+    np.testing.assert_array_equal(np.asarray(labels), np.arange(80))
+
+
+# ---------------------------------------------------------------------------
+# multi-level Louvain quality
+# ---------------------------------------------------------------------------
+
+def test_local_moves_monotone_and_beat_singletons():
+    g = uniform_random_graph(300, 6, seed=4)
+    labels, q = louvain_local_moves(g)
+    assert q > float(modularity(g, jnp.arange(g.n_rows)))
+    assert abs(float(modularity(g, labels)) - q) < 1e-5
+
+
+def test_multilevel_scores_strictly_increase():
+    g = uniform_random_graph(1 << 9, 8, seed=0)
+    labels, scores = multilevel(g)
+    assert len(scores) >= 1
+    assert all(b > a for a, b in zip(scores, scores[1:]))
+    assert abs(float(modularity(g, labels)) - scores[-1]) < 1e-5
+
+
+def test_multilevel_beats_single_lpa_sweep_rmat10():
+    """Acceptance criterion: strictly higher modularity than one LPA sweep
+    on an RMAT-10 graph."""
+    g = rmat(10, 8, seed=0)
+    q_sweep = float(modularity(g, label_propagation(g, iters=1)))
+    labels, scores = multilevel(g)
+    assert scores, "multilevel accepted no level"
+    assert scores[-1] > q_sweep
+    # and by a wide margin, not a tie-break artifact
+    assert scores[-1] > 5 * abs(q_sweep)
+
+
+def test_multilevel_two_cliques_exact():
+    rows, cols = [], []
+    for c in range(2):
+        for i in range(8):
+            for j in range(8):
+                if i != j:
+                    rows.append(c * 8 + i)
+                    cols.append(c * 8 + j)
+    rows += [0, 8]
+    cols += [8, 0]
+    g = CSR.from_coo(rows, cols, np.ones(len(rows), np.float32), 16, 16)
+    labels, scores = multilevel(g)
+    lab = np.asarray(labels)
+    assert len(set(lab[:8])) == 1 and len(set(lab[8:])) == 1
+    assert lab[0] != lab[8]
+    assert scores[-1] > 0.4
+
+
+# ---------------------------------------------------------------------------
+# contraction byte ledger
+# ---------------------------------------------------------------------------
+
+def test_route_byte_counter_contract_level():
+    c = traffic.RouteByteCounter(8, payload_bytes=traffic.CONTRACT_PAYLOAD_BYTES)
+    b = c.contract_level(100)
+    assert b == 100 * traffic.CONTRACT_PAYLOAD_BYTES
+    assert c.total_bytes == b and c.levels == 1
+    c.push_level(10)  # mixed ledgers still accumulate
+    assert c.levels == 2
+
+
+# ---------------------------------------------------------------------------
+# bench JSON artifact (satellite: machine-readable bench + baseline compare)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_bench_engine_writes_json_artifact(tmp_path):
+    out = tmp_path / "BENCH_test.json"
+    root = os.path.join(os.path.dirname(__file__), "..")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "benchmarks", "bench_engine.py"),
+         "--scale", "6", "--smoke", "--json", str(out)],
+        capture_output=True, text=True, timeout=1200,
+        env={**os.environ, "PYTHONPATH": os.path.join(root, "src")})
+    sys.stdout.write(proc.stdout[-2000:])
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0
+    doc = json.loads(out.read_text())
+    assert doc["meta"]["scale"] == 6
+    assert "bfs/auto" in doc["timings_ms"]
+    assert np.isfinite(doc["modularity"]["multilevel"])
+    assert doc["modularity"]["multilevel"] > doc["modularity"]["single_sweep"]
+    assert 0.0 <= doc["fallback"]["rate"] <= 1.0
+    assert doc["bytes"]["reduction"] >= 1.0
