@@ -31,11 +31,17 @@ Also reported:
   route bytes, and the *measured* fallback count from
   `engine.run_distributed(return_stats=True)`;
 * ``--sweep-delta`` — delta-stepping bucket-width sweep on RMAT and
-  uniform-weight graphs against the histogram auto-tune (DESIGN.md §8).
+  uniform-weight graphs against the histogram auto-tune (DESIGN.md §8);
+* the **graph query service** section (always at RMAT-12, whatever
+  ``--scale``): the MS-BFS amortization ratio (per-query time at B=256 vs a
+  sequential bfs — the PR-4 acceptance bar is < 0.15) and, per batch budget
+  B ∈ {1, 32, 256}, serving queries/sec, batch occupancy, modeled route
+  bytes per query, and the cache hit rate on a resubmitted stream
+  (DESIGN.md §13).
 
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--scale 12]
       PYTHONPATH=src python benchmarks/bench_engine.py --scale 7 --smoke \
-          --json BENCH_pr3.json --baseline auto
+          --json BENCH_pr4.json --baseline auto
       PYTHONPATH=src python benchmarks/bench_engine.py --sweep-delta
 
 ``--smoke`` (the `scripts/ci.sh bench` lane) checks the outputs for NaN and
@@ -216,6 +222,86 @@ def distributed_report(scale, smoke_failures, n_shards=8):
             "measured_pushes": stats["pushes"]}
 
 
+def service_report(smoke_failures, budgets=(1, 32, 256), scale=12,
+                   edge_factor=8):
+    """Graph query service throughput + the MS-BFS amortization ratio.
+
+    Runs at a *fixed* RMAT-12 regardless of ``--scale`` so the trajectory
+    point (and the PR-4 acceptance ratio: batched per-query time at B=256
+    must be < 0.15x one sequential bfs) stays comparable across lanes.
+    Per budget B: queries/sec over a fresh random reachability stream
+    (compiled runner pre-warmed — qps measures serving, not compilation),
+    batch occupancy, route bytes per query (batched §13 byte model), and the
+    cache hit rate when the same stream is resubmitted.
+    """
+    from repro.core import GraphService, Reachability
+    from repro.core.algorithms import msbfs
+
+    g = rmat(scale, edge_factor, seed=0)
+    n = g.n_rows
+    B = 256
+    srcs = np.arange(B, dtype=np.int32) % n
+    # sequential per-query cost = mean over a sample of the *actual* batch
+    # sources (source 0 alone is the densest hub on RMAT — using only it
+    # would flatter the ratio); one compile, source as a traced argument
+    bfs_one = jax.jit(lambda s: bfs(g, s))
+    sample = srcs[:: max(1, B // 16)]
+    jax.block_until_ready(bfs_one(int(sample[0])))  # compile
+    t0 = time.perf_counter()
+    for s in sample:
+        jax.block_until_ready(bfs_one(int(s)))
+    t1 = (time.perf_counter() - t0) * 1e3 / len(sample)
+    tB = _t(jax.jit(lambda: msbfs(g, srcs)))
+    ratio = (tB / B) / t1
+    print(f"\nservice (RMAT-{scale}): bfs {t1:.2f} ms/query sequential "
+          f"(mean of {len(sample)} sources), msbfs B={B} {tB:.2f} ms total "
+          f"= {tB / B:.4f} ms/query (amortization ratio {ratio:.4f}, "
+          f"target < 0.15)")
+    if not np.isfinite(ratio) or ratio >= 0.15:
+        smoke_failures.append(
+            f"REGRESSION: msbfs amortization ratio {ratio:.3f} >= 0.15")
+    doc = {"scale": scale, "bfs_ms_per_query": t1, "msbfs_b256_ms": tB,
+           "amortization_ratio": ratio, "budgets": {}}
+    rng = np.random.default_rng(0)
+    for budget in budgets:
+        n_q = min(512, max(64, 2 * budget))
+        svc = GraphService(g, batch_budget=budget, cache_capacity=4 * n_q)
+        svc.query(Reachability(0, 1))   # compile the (kind, budget) runner
+        svc.reset_stats()
+        stream = [Reachability(int(s), int(t))
+                  for s, t in zip(rng.integers(0, n, n_q),
+                                  rng.integers(0, n, n_q))]
+        for q in stream:
+            svc.submit(q)
+        svc.flush()
+        cold = svc.stats.as_dict()
+        svc.reset_stats()               # isolate the resubmission pass
+        for q in stream:                # resubmission: pure cache hits
+            svc.submit(q)
+        svc.flush()
+        warm = svc.stats.as_dict()
+        row = {"n_queries": n_q, "qps": cold["qps"],
+               "occupancy": cold["occupancy"],
+               "route_bytes_per_query": cold["route_bytes_per_query"],
+               "hit_rate_resubmit": warm["hit_rate"]}
+        doc["budgets"][str(budget)] = row
+        print(f"  B={budget:<4d} {cold['qps']:>9.1f} q/s  occupancy "
+              f"{cold['occupancy']:.2f}  {cold['route_bytes_per_query']:>9.0f}"
+              f" route B/q  resubmit hit rate {warm['hit_rate']:.2f}")
+        if not (np.isfinite(cold["qps"]) and cold["qps"] > 0):
+            smoke_failures.append(f"REGRESSION: service qps at B={budget} "
+                                  "not positive")
+        if not 0 < cold["occupancy"] <= 1:
+            smoke_failures.append(f"REGRESSION: service occupancy at "
+                                  f"B={budget} out of range")
+        # second pass re-submits the identical stream: every query must hit
+        # (capacity 4 * n_q rules out evictions)
+        if warm["hit_rate"] < 0.999:
+            smoke_failures.append(f"REGRESSION: resubmitted stream hit rate "
+                                  f"{warm['hit_rate']:.2f} < 1.0 at B={budget}")
+    return doc
+
+
 def sweep_delta(scale: int = 10, edge_factor: int = 8):
     """Delta sweep (satellite): RMAT + uniform weights vs the histogram rule."""
     print("\ndelta-stepping sweep (iters = bucket expansions; ms best-of-3)")
@@ -282,6 +368,7 @@ def run(scale: int = 12, edge_factor: int = 8, smoke: bool = False):
     louvain_doc = louvain_report(g, failures)
     fallback_doc = fallback_report(scale)
     dist_doc = distributed_report(min(scale, 8), failures)
+    service_doc = service_report(failures)
 
     # --- smoke checks (ci.sh bench): NaN + regression markers ---------------
     for mode in ("push", "pull"):
@@ -313,8 +400,12 @@ def run(scale: int = 12, edge_factor: int = 8, smoke: bool = False):
         "bytes": bytes_doc,
         "modularity": louvain_doc,
         "fallback": fallback_doc,
+        "service": service_doc,
     }
     doc["timings_ms"]["louvain/multilevel"] = louvain_doc["ms"]
+    # msbfs_b256_ms stays inside doc["service"] (not timings_ms): wall-clock
+    # of a 100-300 ms batch swings well past the 25% gate run-to-run; the
+    # gated form is the amortization ratio
     if dist_doc is not None:
         doc["distributed"] = dist_doc
 
@@ -390,6 +481,20 @@ def compare_to_baseline(doc, base, rel=0.25, ms_floor=2.0):
     if r_new is not None and r_old is not None and r_new < r_old * (1 - rel):
         failures.append(f"REGRESSION: byte reduction {r_new:.1f}x vs "
                         f"baseline {r_old:.1f}x")
+    # service: only the amortization *ratio* gates vs baseline — both of its
+    # sides are measured within one run, so it is robust to host *load*,
+    # unlike raw qps (observed ~1.7x swings between otherwise-identical
+    # runs; qps stays a reported trajectory number, service_report's own
+    # smoke checks gate positivity/occupancy/hit-rate and the absolute 0.15
+    # bar).  It is still hardware-*shape* dependent (batched vs sequential
+    # amortize differently per core count), so like the wall-clock timings
+    # it only compares same-host.
+    a_new = doc.get("service", {}).get("amortization_ratio")
+    a_old = base.get("service", {}).get("amortization_ratio")
+    if (same_host and a_new is not None and a_old is not None
+            and a_new > a_old * (1 + rel) + 0.01):
+        failures.append(f"REGRESSION: msbfs amortization ratio {a_new:.3f} "
+                        f"vs baseline {a_old:.3f}")
     return failures
 
 

@@ -7,8 +7,11 @@
 #                               driver enforces; the PR gate).
 #   scripts/ci.sh bench       — engine benchmark smoke lane: bench_engine.py
 #                               at tiny scale under 8 forced host devices (so
-#                               the distributed multilevel section runs),
-#                               writes ${BENCH_OUT:-BENCH_pr3.json} and fails
+#                               the distributed multilevel section runs; the
+#                               query-service smoke — B ∈ {1,32,256} on
+#                               RMAT-12 with the msbfs amortization gate —
+#                               always runs at its own fixed scale),
+#                               writes ${BENCH_OUT:-BENCH_pr4.json} and fails
 #                               on NaN / regression markers / >25% regression
 #                               vs the newest committed BENCH_*.json.
 #   scripts/ci.sh fast bench  — multiple lanes: each runs even if an earlier
@@ -29,7 +32,7 @@ run_lane() {
     bench)
       XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
         python benchmarks/bench_engine.py --scale 7 --smoke \
-          --json "${BENCH_OUT:-BENCH_pr3.json}" --baseline auto
+          --json "${BENCH_OUT:-BENCH_pr4.json}" --baseline auto
       ;;
     all)
       python -m pytest -x -q

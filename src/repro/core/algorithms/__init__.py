@@ -1,8 +1,11 @@
 from .spmv import spmv, spmv_ell, spmv_bbcsr, spmv_distributed
 from .spmspv import spmspv, spmspv_ell
-from .pagerank import pagerank, pagerank_distributed
-from .bfs import bfs, bfs_distributed, bfs_program
-from .sssp import sssp, sssp_distributed, sssp_program, auto_delta
+from .pagerank import (pagerank, pagerank_distributed, ppr, ppr_batched,
+                       ppr_topk)
+from .bfs import (bfs, bfs_distributed, bfs_program, msbfs, msbfs_distributed,
+                  msbfs_program)
+from .sssp import (sssp, sssp_distributed, sssp_program, auto_delta,
+                   sssp_batched, sssp_batched_distributed)
 from .cc import (connected_components, connected_components_distributed,
                  cc_program, symmetrize)
 from .random_walks import (random_walks, random_walks_distributed,
@@ -15,9 +18,11 @@ from .sampling import ties_sample, neighbor_sample
 __all__ = [
     "spmv", "spmv_ell", "spmv_bbcsr", "spmv_distributed",
     "spmspv", "spmspv_ell",
-    "pagerank", "pagerank_distributed",
+    "pagerank", "pagerank_distributed", "ppr", "ppr_batched", "ppr_topk",
     "bfs", "bfs_distributed", "bfs_program",
+    "msbfs", "msbfs_distributed", "msbfs_program",
     "sssp", "sssp_distributed", "sssp_program", "auto_delta",
+    "sssp_batched", "sssp_batched_distributed",
     "connected_components", "connected_components_distributed",
     "cc_program", "symmetrize",
     "random_walks", "random_walks_distributed", "walk_queue_program",

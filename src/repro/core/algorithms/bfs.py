@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from .. import engine
@@ -20,7 +21,8 @@ from ..dgas import ATT
 from ..graph import CSR, BBCSR
 from .distgraph import ShardedGraph
 
-__all__ = ["bfs", "bfs_distributed", "bfs_program"]
+__all__ = ["bfs", "bfs_distributed", "bfs_program",
+           "msbfs", "msbfs_distributed", "msbfs_program"]
 
 
 def bfs_program() -> engine.VertexProgram:
@@ -55,6 +57,87 @@ def bfs(csr: CSR, source: int, *, max_levels: int | None = None,
     state = engine.run(csr, bfs_program(), state0, frontier0,
                        max_iters=max_levels, mode=mode, kernel_bb=kernel_bb)
     return state["level"]
+
+
+def msbfs_program(n_lanes: int) -> engine.VertexProgram:
+    """Multi-source BFS (MS-BFS, Then et al.): one bit lane per source.
+
+    The frontier is the bit-packed (n, W) uint32 word array; ``seen`` is the
+    OR-accumulated visited mask, and a destination's new lanes are
+    ``acc & ~seen`` — B traversals advance per edge scan.  Levels are kept
+    unpacked (B, n) so they read out exactly like B separate `bfs` runs.
+    """
+
+    def msg_fn(state, frontier):
+        return frontier
+
+    def update_fn(state, acc, frontier, it):
+        new = acc & ~state["seen"]
+        newb = engine.unpack_lanes(new, n_lanes)
+        level = jnp.where(newb > 0, it + 1, state["level"])
+        return {"seen": state["seen"] | new, "level": level}, new
+
+    return engine.VertexProgram(edge_op="copy", combine="or",
+                                msg_fn=msg_fn, update_fn=update_fn)
+
+
+def msbfs(csr: CSR, sources, *, max_levels: int | None = None,
+          mode: str = "auto", return_stats: bool = False):
+    """Levels (B, n) int32 for B concurrent BFS traversals; unreachable = -1.
+
+    Row b is bit-identical to ``bfs(csr, sources[b])`` — the lanes share
+    every edge scan but never interact.  Duplicate sources are allowed (their
+    lanes evolve identically).
+    """
+    n = csr.n_rows
+    src = jnp.asarray(sources, jnp.int32)
+    B = int(src.shape[0])
+    max_levels = max_levels or n
+    lanes = jnp.arange(B)
+    bits0 = jnp.zeros((B, n), jnp.int32).at[lanes, src].set(1)
+    f0 = engine.pack_lanes(bits0)
+    state0 = {"seen": f0,
+              "level": jnp.full((B, n), -1, jnp.int32).at[lanes, src].set(0)}
+    out = engine.run_batched(csr, msbfs_program(B), state0, f0,
+                             max_iters=max_levels, mode=mode,
+                             return_stats=return_stats)
+    if return_stats:
+        state, stats = out
+        return state["level"], stats
+    return out["level"]
+
+
+def msbfs_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh, *,
+                      axis=None, max_levels: int = 64,
+                      push_edge_capacity: Optional[int] = None,
+                      return_stats: bool = False):
+    """Batched-lane BFS on the distributed push pipeline.
+
+    Returns levels stacked (S, B, per_shard) under the `att` layout — slice
+    ``[:, b, :]`` is bit-identical to ``bfs_distributed(g, att, sources[b],
+    mesh)``.  One compacted exchange per level carries all B lanes as packed
+    words (`offload.remote_scatter_or`).
+    """
+    S, per = att.n_shards, att.per_shard
+    src = np.asarray(sources, np.int64)
+    B = src.shape[0]
+    W = engine.lane_words(B)
+    owner = np.asarray(att.owner(jnp.asarray(src)))
+    local = np.asarray(att.local(jnp.asarray(src)))
+    words0 = np.zeros((S, per, W), np.uint32)
+    level0 = np.full((S, B, per), -1, np.int32)
+    for b in range(B):
+        words0[owner[b], local[b], b // 32] |= np.uint32(1) << np.uint32(b % 32)
+        level0[owner[b], b, local[b]] = 0
+    state0 = {"seen": jnp.asarray(words0), "level": jnp.asarray(level0)}
+    out = engine.run_batched_distributed(
+        g, att, mesh, msbfs_program(B), state0, jnp.asarray(words0),
+        axis=axis, max_iters=max_levels,
+        push_edge_capacity=push_edge_capacity, return_stats=return_stats)
+    if return_stats:
+        state, stats = out
+        return state["level"], stats
+    return out["level"]
 
 
 def bfs_distributed(g: ShardedGraph, att: ATT, source: int, mesh: Mesh, *,

@@ -31,7 +31,8 @@ from ..dgas import ATT
 from ..graph import CSR
 from .distgraph import ShardedGraph
 
-__all__ = ["sssp", "sssp_distributed", "sssp_program", "auto_delta"]
+__all__ = ["sssp", "sssp_distributed", "sssp_program", "auto_delta",
+           "sssp_batched", "sssp_batched_distributed"]
 
 _INF = jnp.float32(jnp.inf)
 
@@ -119,6 +120,70 @@ def sssp(csr: CSR, source: int, *, delta: Optional[float] = None,
         state, stats = out
         return state["dist"], stats
     return out["dist"]
+
+
+def sssp_batched(csr: CSR, sources, *, delta: Optional[float] = None,
+                 max_iters: Optional[int] = None, mode: str = "auto",
+                 kernel_bb=None, return_stats: bool = False):
+    """Distances (B, n) float32 for B concurrent single-source runs.
+
+    The *same* ``sssp_program`` drives every lane (the engine vmaps it), so
+    row b is bit-identical to ``sssp(csr, sources[b], delta=delta)`` — each
+    lane keeps its own bucket bound and drains independently while the
+    (min, +) relaxations of all lanes ride one shared edge scan.  ``delta``
+    must be shared across the batch (it is a graph-level constant under
+    :func:`auto_delta` anyway — the service layer's compatibility rule).
+    kernel_bb: optional weighted BBCSR of A^T (``engine.build_pull_operand``)
+      to run the relaxations on the Pallas masked-select min combine.
+    """
+    n = csr.n_rows
+    src = jnp.asarray(sources, jnp.int32)
+    B = int(src.shape[0])
+    delta = delta if delta is not None else auto_delta(csr)
+    max_iters = max_iters if max_iters is not None else 4 * n
+    lanes = jnp.arange(B)
+    state0 = {
+        "dist": jnp.full((B, n), _INF).at[lanes, src].set(0.0),
+        "pending": jnp.zeros((B, n), bool).at[lanes, src].set(True),
+        "bound": jnp.full((B,), delta, jnp.float32),
+    }
+    frontier0 = jnp.zeros((B, n), jnp.int32).at[lanes, src].set(1)
+    out = engine.run_batched(csr, sssp_program(delta), state0, frontier0,
+                             max_iters=max_iters, mode=mode,
+                             kernel_bb=kernel_bb, return_stats=return_stats)
+    if return_stats:
+        state, stats = out
+        return state["dist"], stats
+    return out["dist"]
+
+
+def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
+                             *, axis=None, delta: float = 1.0,
+                             max_iters: int = 256) -> jnp.ndarray:
+    """Batched distances stacked (S, B, per_shard) under `att`; slice
+    ``[:, b, :]`` matches ``sssp_distributed(g, att, sources[b], mesh,
+    delta=delta)`` — all B lanes' remote atomic-min relaxations share each
+    level's compacted exchange, and the per-lane bucket bounds are agreed
+    with one (lane-batched) collective min."""
+    axis = axis if axis is not None else mesh.axis_names[0]
+    ax = axis if isinstance(axis, str) else tuple(axis)
+    S, per = att.n_shards, att.per_shard
+    src = jnp.asarray(sources, jnp.int32)
+    B = int(src.shape[0])
+    owner = att.owner(src)
+    local = att.local(src)
+    lanes = jnp.arange(B)
+    prog = sssp_program(delta, global_min=lambda x: lax.pmin(x, ax))
+    state0 = {
+        "dist": jnp.full((S, B, per), _INF).at[owner, lanes, local].set(0.0),
+        "pending": jnp.zeros((S, B, per), bool).at[owner, lanes, local].set(True),
+        "bound": jnp.full((S, B), delta, jnp.float32),
+    }
+    frontier0 = jnp.zeros((S, B, per), jnp.int32).at[owner, lanes, local].set(1)
+    state = engine.run_batched_distributed(g, att, mesh, prog, state0,
+                                           frontier0, axis=axis,
+                                           max_iters=max_iters)
+    return state["dist"]
 
 
 def sssp_distributed(g: ShardedGraph, att: ATT, source: int, mesh: Mesh, *,

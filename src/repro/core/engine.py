@@ -57,6 +57,7 @@ the sparse frontier names").
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
@@ -78,9 +79,12 @@ __all__ = [
     "build_pull_operand", "tile_active", "sample_neighbors",
     "QueueProgram", "run_queue", "frontier_edge_capacity",
     "Hierarchy", "run_multilevel",
+    "run_batched", "run_batched_distributed",
+    "lane_words", "pack_lanes", "unpack_lanes",
 ]
 
-_COMBINE_IDENTITY = {"add": 0.0, "min": float("inf"), "max": float("-inf")}
+_COMBINE_IDENTITY = {"add": 0.0, "min": float("inf"), "max": float("-inf"),
+                     "or": 0}
 _STRUCTURED_COMBINES = ("argmax_weighted", "sample")
 
 
@@ -93,7 +97,9 @@ class VertexProgram:
       combine:   destination-side reduction: 'add' | 'min' | 'max', or a
                  structured combine 'argmax_weighted' | 'sample' (the message
                  is then an int32 payload, -1 = inactive, and `acc` is the
-                 (score, payload) pair — see the module docstring).
+                 (score, payload) pair — see the module docstring), or the
+                 batched-only bitwise combine 'or' (messages are bit-packed
+                 uint32 lane words, :func:`run_batched`; edge_op 'copy').
       msg_fn:    (state, frontier) -> (n,) messages; MUST emit `identity` for
                  vertices outside the frontier (that makes push == pull).
       update_fn: (state, acc, frontier, it) -> (state, next_frontier).
@@ -116,6 +122,10 @@ class VertexProgram:
             raise ValueError(f"combine {self.combine!r} takes its weight from "
                              "the edge value: edge_op must be 'mul' (weighted)"
                              " or 'copy' (unit)")
+        if self.combine == "or" and self.edge_op != "copy":
+            raise ValueError("combine 'or' reduces bit-packed lane words — "
+                             "edge values cannot weigh in: edge_op must be "
+                             "'copy'")
 
     @property
     def structured(self) -> bool:
@@ -142,16 +152,47 @@ def _apply_edge(em: jnp.ndarray, ev: jnp.ndarray, edge_op: str) -> jnp.ndarray:
 
 def _scatter_combine(dest: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
                      combine: str, identity) -> jnp.ndarray:
-    """Scatter-{add,min,max} with out-of-range indices dropped."""
+    """Scatter-{add,min,max} with out-of-range indices dropped.  ``vals`` may
+    carry trailing lane dims beyond ``idx`` (the batched engine's (m, B)
+    payloads); ``dest`` then carries the same trailing shape."""
     valid = (idx >= 0) & (idx < dest.shape[0])
     safe = jnp.where(valid, idx, 0)
     neutral = jnp.asarray(identity, dest.dtype)
-    masked = jnp.where(valid, vals.astype(dest.dtype), neutral)
+    vmask = valid.reshape(valid.shape + (1,) * (vals.ndim - valid.ndim))
+    masked = jnp.where(vmask, vals.astype(dest.dtype), neutral)
     if combine == "add":
         return dest.at[safe].add(masked)
     if combine == "min":
         return dest.at[safe].min(masked)
     return dest.at[safe].max(masked)
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed lanes (batched boolean frontiers, MS-BFS style)
+# ---------------------------------------------------------------------------
+
+def lane_words(n_lanes: int) -> int:
+    """uint32 words needed to bit-pack ``n_lanes`` boolean lanes."""
+    return -(-n_lanes // 32)
+
+
+def pack_lanes(bits: jnp.ndarray) -> jnp.ndarray:
+    """(B, n) lane indicators -> (n, W) uint32 words; lane b lives at bit
+    b % 32 of word b // 32."""
+    B, n = bits.shape
+    W = lane_words(B)
+    b = (jnp.asarray(bits) != 0).astype(jnp.uint32)
+    b = jnp.pad(b, ((0, W * 32 - B), (0, 0))).reshape(W, 32, n)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    # lanes occupy disjoint bits, so the sum is the OR
+    return (b << shifts).sum(axis=1, dtype=jnp.uint32).T
+
+
+def unpack_lanes(words: jnp.ndarray, n_lanes: int) -> jnp.ndarray:
+    """(n, W) uint32 words -> (B, n) int32 {0, 1} lane indicators."""
+    lanes = jnp.arange(n_lanes)
+    bits = (words[:, lanes // 32] >> (lanes % 32).astype(jnp.uint32)) & 1
+    return bits.T.astype(jnp.int32)
 
 
 def _acc_init(n: int, prog: VertexProgram, dtype) -> jnp.ndarray:
@@ -264,6 +305,32 @@ def _sparse_step(indptr, indices, vals, msg, frontier, n, C, k,
                             contrib.reshape(-1), prog.combine, prog.ident)
 
 
+def _check_kernel_operand(prog: VertexProgram, kernel_bb: BBCSR) -> None:
+    """Validate a Pallas operand against the program's semiring: 'add'
+    accumulates val*msg on the MXU; 'min'/'max' relax msg + w with the
+    masked-select tile combine ((min,+)/(max,+) — the distance semirings)."""
+    if prog.combine == "add":
+        if prog.edge_op == "add":
+            raise ValueError("the 'add'-combine kernels compute val*msg; "
+                             "edge_op 'add' has no kernel path")
+        if prog.edge_op == "copy":
+            v = np.asarray(kernel_bb.vals)
+            if not bool(np.all((v == 0) | (v == 1))):
+                raise ValueError(
+                    "edge_op 'copy' needs a unit-valued kernel operand — "
+                    "build it with build_pull_operand(csr, unit_values=True)")
+    elif prog.combine in ("min", "max"):
+        if prog.edge_op != "add":
+            raise ValueError("the min/max tile combines relax msg + w: "
+                             "edge_op must be 'add'")
+        if kernel_bb.tile_cnt is None:
+            raise ValueError("min/max tile combines need the BBCSR per-tile "
+                             "padding counts — rebuild the operand with "
+                             "to_bbcsr")
+    else:
+        raise ValueError(f"no kernel path for combine {prog.combine!r}")
+
+
 def _max_degree(indptr) -> int:
     # static max degree for gather budgets; derived with numpy from the
     # (concrete) indptr so the callers stay usable under jit
@@ -328,6 +395,9 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
     """
     if mode not in ("auto", "push", "pull"):
         raise ValueError(f"mode must be 'auto', 'push' or 'pull', got {mode!r}")
+    if prog.combine == "or":
+        raise ValueError("combine='or' is the batched bitwise combine: run it "
+                         "through run_batched")
     if prog.combine == "sample" and key is None:
         raise ValueError("combine='sample' draws keyed priorities: pass key=")
     n = csr.n_rows
@@ -342,30 +412,26 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
         push_capacity = n if mode == "push" else max(1, n // 32)
     C = min(push_capacity, n)
     if kernel_bb is not None:
-        if prog.combine != "add":
-            raise ValueError("the Pallas path accumulates on the MXU: combine "
-                             "must be 'add'")
-        if prog.edge_op == "add":
-            raise ValueError("the Pallas kernels compute val*msg; edge_op "
-                             "'add' has no kernel path")
-        if prog.edge_op == "copy":
-            v = np.asarray(kernel_bb.vals)
-            if not bool(np.all((v == 0) | (v == 1))):
-                raise ValueError(
-                    "edge_op 'copy' needs a unit-valued kernel operand — "
-                    "build it with build_pull_operand(csr, unit_values=True)")
+        _check_kernel_operand(prog, kernel_bb)
 
     def dense(msg, frontier, it_key):
         if kernel_bb is not None:
             from ..kernels import ops as kops
-            return kops.spmv_dma(kernel_bb, msg, interpret=interpret)[:n]
+            if prog.combine == "add":
+                return kops.spmv_dma(kernel_bb, msg, interpret=interpret)[:n]
+            # min/max: the SpMSpV kernel with every tile active is the dense
+            # pass (there is no separate dense-combine kernel)
+            all_active = jnp.ones((kernel_bb.n_tiles,), jnp.int32)
+            return kops.spmspv_dma(kernel_bb, msg, all_active,
+                                   combine=prog.combine,
+                                   interpret=interpret)[:n]
         return _dense_step(rows, cols, vals, msg, n, prog, it_key)
 
     def sparse(msg, frontier, it_key):
         if kernel_bb is not None:
             from ..kernels import ops as kops
             return kops.spmspv_dma(kernel_bb, msg, tile_active(kernel_bb, frontier),
-                                   interpret=interpret)[:n]
+                                   combine=prog.combine, interpret=interpret)[:n]
         return _sparse_step(csr.indptr, csr.indices, vals, msg, frontier,
                             n, C, k, prog, it_key)
 
@@ -395,6 +461,201 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
     if return_stats:
         return state, {"iters": it, "pushes": n_push, "pulls": n_pull}
     return state
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-source execution (B concurrent traversals, one edge scan)
+# ---------------------------------------------------------------------------
+
+_DST_SORTED_CACHE: dict = {}
+
+
+def _dst_sorted_stream(csr: CSR):
+    """(src, dst) edge stream sorted by destination — the packed dense step's
+    presorted segment_or input.  Graph-only data, so the O(m log m) host sort
+    is memoized per CSR (eager callers would otherwise pay it every call);
+    derived from indptr/indices with numpy — concrete even under jit, like
+    _max_degree's indptr (row_ids() would trace).  The cache holds *numpy*
+    arrays: device arrays materialized inside a jit trace are constants of
+    that trace, and caching those leaks tracers into later traces.  Keyed by
+    object identity with a weakref guard, so entries die with their graph
+    and a recycled id cannot alias."""
+    key = id(csr)
+    hit = _DST_SORTED_CACHE.get(key)
+    if hit is None or hit[0]() is not csr:
+        indptr_np = np.asarray(csr.indptr)
+        cols_np = np.asarray(csr.indices)
+        rows_np = np.repeat(np.arange(csr.n_rows, dtype=np.int32),
+                            np.diff(indptr_np))
+        order = np.argsort(cols_np, kind="stable")
+        hit = (None, rows_np[order], cols_np[order].astype(np.int32))
+        try:
+            ref = weakref.ref(csr,
+                              lambda _, k=key: _DST_SORTED_CACHE.pop(k, None))
+            hit = (ref,) + hit[1:]
+            _DST_SORTED_CACHE[key] = hit
+        except TypeError:
+            pass  # un-weakrefable: skip caching rather than leak
+    return jnp.asarray(hit[1]), jnp.asarray(hit[2])
+
+def run_batched(csr: CSR, prog: VertexProgram, state0: Any,
+                frontier0: jnp.ndarray, *, max_iters: int, mode: str = "auto",
+                push_capacity: Optional[int] = None,
+                kernel_bb: Optional[BBCSR] = None,
+                interpret: Optional[bool] = None, return_stats: bool = False):
+    """Run ``prog`` for a *batch* of sources in one pass over the graph.
+
+    PIUMA hides latency by keeping many traversals in flight per core; the
+    bulk-array re-expression is MS-BFS-style lane batching: per iteration the
+    engine scans the edges touched by the **union frontier** once and carries
+    all B lanes' payloads through that single scan, so the irregular-access
+    cost (gathers, compaction, routing) is amortized B ways.  Two lane
+    representations:
+
+    * ``combine='or'`` — **bit-packed boolean lanes**: frontier and messages
+      are (n, W) uint32 words, W = ceil(B/32); the destination combine is a
+      bitwise OR (:func:`offload.segment_or`).  The program is written
+      against packed words (state may keep unpacked per-lane planes — see
+      ``bfs.msbfs_program``).
+    * any scalar combine — **vmapped valued lanes**: frontier/state leaves
+      are (B, n) and ``msg_fn``/``update_fn`` are the *single-source*
+      functions, vmapped over the lane axis; the per-edge work is one fused
+      (m, B) pass.  Results are bit-identical to B separate :func:`run`
+      calls: each lane sees the same per-edge arithmetic, and lanes whose
+      frontier has emptied emit combine identities (no-ops) until the whole
+      batch drains.
+
+    mode: as :func:`run`; 'auto' switches on the union frontier's population
+      count.  kernel_bb routes the valued dense/sparse steps through the
+      Pallas kernels (combine 'add', or 'min'/'max' via the masked-select
+      tile combine), one lane per kernel launch under ``lax.map`` with the
+      union-frontier tile schedule shared across lanes.
+    Returns the final state (leaves (B, n)); ``return_stats`` adds
+    {'iters', 'pushes', 'pulls'}.
+    """
+    if mode not in ("auto", "push", "pull"):
+        raise ValueError(f"mode must be 'auto', 'push' or 'pull', got {mode!r}")
+    if prog.structured:
+        raise NotImplementedError(
+            "structured combines are not lane-batched: sampling is already "
+            "batch-shaped (sample_neighbors), label modes are one-shot")
+    packed = prog.combine == "or"
+    n = csr.n_rows
+    rows, cols = csr.row_ids(), csr.indices
+    vals = csr.values
+    if prog.edge_op == "copy":
+        vals = None
+    elif vals is None:
+        vals = jnp.ones_like(csr.indices, jnp.float32)
+    k = _max_degree(csr.indptr) if mode != "pull" else 1
+    if push_capacity is None:
+        push_capacity = n if mode == "push" else max(1, n // 32)
+    C = min(push_capacity, n)
+    if kernel_bb is not None:
+        if packed:
+            raise ValueError("the Pallas path carries f32 payloads: bit-packed"
+                             " 'or' lanes have no kernel combine")
+        _check_kernel_operand(prog, kernel_bb)
+    if packed:
+        p_src, p_dst = _dst_sorted_stream(csr)
+
+    def union(frontier):
+        if packed:
+            return (frontier != 0).any(axis=1)
+        return (frontier > 0).any(axis=0)
+
+    def dense(msg, frontier):
+        if packed:
+            return offload.segment_or(p_dst, jnp.take(msg, p_src, axis=0), n,
+                                      presorted=True)
+        if kernel_bb is not None:
+            return _kernel_lanes(kernel_bb, msg, prog,
+                                 jnp.ones((kernel_bb.n_tiles,), jnp.int32),
+                                 interpret)
+        em = jnp.take(msg, rows, axis=1)                       # (B, m)
+        ev = _apply_edge(em, vals[None, :], prog.edge_op) if vals is not None \
+            else em
+        if prog.combine == "add":
+            return jax.ops.segment_sum(ev.T, cols, num_segments=n).T
+        acc = jnp.full((n, ev.shape[0]), prog.ident, msg.dtype)
+        return _scatter_combine(acc, cols, ev.T, prog.combine, prog.ident).T
+
+    def sparse(msg, frontier):
+        if kernel_bb is not None:
+            uf = union(frontier).astype(jnp.int32)
+            return _kernel_lanes(kernel_bb, msg, prog,
+                                 tile_active(kernel_bb, uf), interpret)
+        ids, = jnp.nonzero(union(frontier), size=C, fill_value=-1)
+        ecols, w, valid, _ = _gather_rows(
+            csr.indptr, csr.indices, vals, ids, k)
+        safe = jnp.maximum(ids, 0)
+        idx = jnp.where(valid, ecols, -1).reshape(-1)          # (C*k,)
+        if packed:
+            em = jnp.take(msg, safe, axis=0)                   # (C, W)
+            words = jnp.broadcast_to(em[:, None, :],
+                                     (C, k, em.shape[1]))
+            return offload.segment_or(idx, words.reshape(C * k, -1), n)
+        em = jnp.take(msg, safe, axis=1)                       # (B, C)
+        contrib = _apply_edge(em[:, :, None], w[None, :, :], prog.edge_op) \
+            if prog.edge_op != "copy" else jnp.broadcast_to(
+                em[:, :, None], (em.shape[0], C, k))
+        contrib = jnp.where(valid[None, :, :], contrib,
+                            jnp.asarray(prog.ident, msg.dtype))
+        B = em.shape[0]
+        acc = jnp.full((n, B), prog.ident, msg.dtype)
+        return _scatter_combine(acc, idx, contrib.reshape(B, C * k).T,
+                                prog.combine, prog.ident).T
+
+    def msg_of(state, frontier):
+        if packed:
+            return prog.msg_fn(state, frontier)
+        return jax.vmap(prog.msg_fn)(state, frontier)
+
+    def update(state, acc, frontier, it):
+        if packed:
+            return prog.update_fn(state, acc, frontier, it)
+        return jax.vmap(prog.update_fn, in_axes=(0, 0, 0, None))(
+            state, acc, frontier, it)
+
+    def cond(carry):
+        state, frontier, it, _, _ = carry
+        return jnp.logical_and(jnp.any(frontier != 0), it < max_iters)
+
+    def body(carry):
+        state, frontier, it, n_push, n_pull = carry
+        msg = msg_of(state, frontier)
+        if mode == "pull":
+            acc, was_push = dense(msg, frontier), jnp.int32(0)
+        else:
+            small = union(frontier).astype(jnp.int32).sum() <= C
+            acc = lax.cond(small, lambda: sparse(msg, frontier),
+                           lambda: dense(msg, frontier))
+            was_push = small.astype(jnp.int32)
+        state, frontier = update(state, acc, frontier, it)
+        return (state, frontier, it + 1, n_push + was_push,
+                n_pull + (1 - was_push))
+
+    carry0 = (state0, frontier0, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    state, _, it, n_push, n_pull = lax.while_loop(cond, body, carry0)
+    if return_stats:
+        return state, {"iters": it, "pushes": n_push, "pulls": n_pull}
+    return state
+
+
+def _kernel_lanes(bb: BBCSR, msg: jnp.ndarray, prog: VertexProgram,
+                  tile_sched: jnp.ndarray, interpret) -> jnp.ndarray:
+    """One Pallas SpMV/SpMSpV launch per lane (lax.map keeps it a single
+    compilation), sharing the union-frontier tile schedule: a tile inactive
+    for every lane is skipped for all of them, and lanes inactive on an
+    active tile contribute combine identities."""
+    from ..kernels import ops as kops
+    n = bb.n_rows
+
+    def one(msg_b):
+        return kops.spmspv_dma(bb, msg_b, tile_sched, combine=prog.combine,
+                               interpret=interpret)[:n]
+
+    return lax.map(one, msg)
 
 
 # ---------------------------------------------------------------------------
@@ -629,6 +890,9 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
     """
     if mode not in ("auto", "push", "pull"):
         raise ValueError(f"mode must be 'auto', 'push' or 'pull', got {mode!r}")
+    if prog.combine == "or":
+        raise ValueError("combine='or' is the batched bitwise combine: run it "
+                         "through run_batched_distributed")
     axis = axis if axis is not None else mesh.axis_names[0]
     spec = _spec(axis)
     axes = _axes_list(axis)
@@ -730,6 +994,152 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                        out_specs=(spec,) * n_out, check_rep=False)
     out = mapped(g.src, g.dst, g.val, rsrc, rdst, rval, frontier0,
                  *state_leaves)
+    state = jax.tree.unflatten(state_def, list(out[:n_state]))
+    if return_stats:
+        keys = ("iters", "pushes", "pulls", "fallbacks")
+        return state, dict(zip(keys, out[n_state:]))
+    return state
+
+
+def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
+                            prog: VertexProgram, state0: Any,
+                            frontier0: jnp.ndarray, *,
+                            axis: Optional[AxisName] = None, max_iters: int,
+                            switch_frac: float = 1 / 32,
+                            push_edge_capacity: Optional[int] = None,
+                            return_stats: bool = False):
+    """Distributed batched loop: B concurrent traversals, one push pipeline.
+
+    Lane layouts (leading dim S = shard, matching :func:`run_batched`):
+
+    * packed (``combine='or'``): frontier0 is (S, per, W) uint32 words and
+      the program operates on per-shard (per, W) words directly; the remote
+      combine is :func:`offload.remote_scatter_or` at the dst owner.
+    * valued: frontier0 is (S, B, per) int32, state leaves (S, B, ...), and
+      the single-source ``msg_fn``/``update_fn`` are vmapped over the lane
+      axis (collectives inside the program — e.g. SSSP's global bucket min —
+      batch elementwise across lanes).
+
+    Every level runs the push direction with the §7 active-edge compaction
+    driven by the **union** frontier, so one compacted exchange carries all
+    B lanes: a routed item is (idx, validity, B-lane payload) —
+    `traffic.batched_payload_bytes` is the byte model, vs B single-source
+    exchanges at `ROUTE_PAYLOAD_BYTES` each.  Levels whose active-edge count
+    overflows the capacity fall back to full-capacity routing (counted in
+    ``stats['fallbacks']``), exactly as in :func:`run_distributed`.
+
+    Returns the final state pytree stacked (S, ...); ``return_stats`` adds
+    {'iters', 'pushes', 'pulls', 'fallbacks'} ((S,) int32, identical on
+    every shard; 'pulls' is always 0 — the batched distributed engine is
+    push-only).
+    """
+    if prog.structured:
+        raise NotImplementedError(
+            "structured combines are not lane-batched: sampling is already "
+            "batch-shaped (sample_neighbors / run_queue)")
+    packed = prog.combine == "or"
+    axis = axis if axis is not None else mesh.axis_names[0]
+    spec = _spec(axis)
+    axes = _axes_list(axis)
+    m_fwd = g.edges_per_shard
+    if push_edge_capacity is None:
+        edge_cap = frontier_edge_capacity(m_fwd, switch_frac)
+    else:
+        edge_cap = int(push_edge_capacity)
+    compact = 0 < edge_cap < m_fwd
+    state_leaves, state_def = jax.tree.flatten(state0)
+    n_state = len(state_leaves)
+
+    def shard_fn(src, dst, val, frontier, *leaves):
+        src, dst, val = src[0], dst[0], val[0]
+        frontier = frontier[0]
+        state = jax.tree.unflatten(state_def, [l[0] for l in leaves])
+
+        def union(f):
+            if packed:
+                return (f != 0).any(axis=-1).astype(jnp.int32)
+            return (f > 0).any(axis=0).astype(jnp.int32)
+
+        def msg_of(state, f):
+            if packed:
+                return prog.msg_fn(state, f)              # (per, W) words
+            return jax.vmap(prog.msg_fn)(state, f)        # (B, per)
+
+        def update(state, acc, f, it):
+            if packed:
+                return prog.update_fn(state, acc, f, it)
+            return jax.vmap(prog.update_fn, in_axes=(0, 0, 0, None))(
+                state, acc, f, it)
+
+        def push_with(csrc, cdst, cval, msg, cap):
+            gidx = jnp.where(csrc >= 0, cdst, -1)
+            lsrc = jnp.where(csrc >= 0, att.local(jnp.maximum(csrc, 0)), -1)
+            if packed:
+                em = offload.dma_gather(msg, lsrc, fill=0).astype(jnp.uint32)
+                return offload.remote_scatter_or(att.per_shard, gidx, em,
+                                                 att, axis, capacity=cap)
+            em = offload.dma_gather(msg.T, lsrc, fill=prog.ident)  # (m, B)
+            ev = _apply_edge(em, cval[:, None], prog.edge_op) \
+                if prog.edge_op != "copy" else em
+            ev = jnp.where((csrc >= 0)[:, None], ev,
+                           jnp.asarray(prog.ident, em.dtype))
+            B = msg.shape[0]
+            if prog.combine == "add":
+                acc = offload.remote_scatter_add(
+                    jnp.zeros((att.per_shard, B), msg.dtype), gidx, ev,
+                    att, axis, capacity=cap)
+            else:
+                acc = offload.remote_scatter_combine(
+                    jnp.full((att.per_shard, B), prog.ident, msg.dtype),
+                    gidx, ev, att, axis, combine=prog.combine,
+                    identity=prog.ident, capacity=cap)
+            return acc.T                                   # (B, per)
+
+        def push(msg, f):
+            if not compact:
+                return push_with(src, dst, val, msg, m_fwd), jnp.int32(0)
+            active = _active_edge_mask(src, union(f), att)
+            over = offload.hierarchical_psum(
+                (active.astype(jnp.int32).sum() > edge_cap
+                 ).astype(jnp.int32), axes)
+
+            def compacted():
+                csrc, cdst, cval = _compact_active_edges(src, dst, val,
+                                                         active, edge_cap)
+                return push_with(csrc, cdst, cval, msg, edge_cap)
+
+            acc = lax.cond(over == 0, compacted,
+                           lambda: push_with(src, dst, val, msg, m_fwd))
+            return acc, (over > 0).astype(jnp.int32)
+
+        def count(f):
+            return offload.hierarchical_psum(union(f).sum(), axes)
+
+        def cond(carry):
+            state, f, it, alive, _ = carry
+            return jnp.logical_and(alive > 0, it < max_iters)
+
+        def body(carry):
+            state, f, it, alive, stats = carry
+            msg = msg_of(state, f)
+            acc, fb = push(msg, f)
+            state, f = update(state, acc, f, it)
+            n_push, n_fb = stats
+            return state, f, it + 1, count(f), (n_push + 1, n_fb + fb)
+
+        zero = jnp.int32(0)
+        state, f, it, _, (n_push, n_fb) = lax.while_loop(
+            cond, body, (state, frontier, zero, count(frontier), (zero, zero)))
+        out = tuple(l[None] for l in jax.tree.leaves(state))
+        if return_stats:
+            out = out + tuple(s[None] for s in (it, n_push, zero, n_fb))
+        return out
+
+    n_in = 4 + n_state
+    n_out = n_state + (4 if return_stats else 0)
+    mapped = shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * n_in,
+                       out_specs=(spec,) * n_out, check_rep=False)
+    out = mapped(g.src, g.dst, g.val, frontier0, *state_leaves)
     state = jax.tree.unflatten(state_def, list(out[:n_state]))
     if return_stats:
         keys = ("iters", "pushes", "pulls", "fallbacks")

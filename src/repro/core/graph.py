@@ -240,6 +240,14 @@ class BBCSR:
     vals                    : (n_tiles, tile_nnz) f32 (0 on padding)
     tile_rb / tile_cb       : (n_tiles,) int32 — owning row/col block
     tile_init               : (n_tiles,) int32 — 1 on first tile of a row block
+    tile_cnt                : (n_tiles,) int32 — real (non-padding) nonzeros
+                              in the tile; padding is always the tile's tail,
+                              so `slot < tile_cnt` is the validity mask the
+                              min/max tile combines need (a padded (0, 0, 0.0)
+                              entry is indistinguishable from a real
+                              zero-weight edge at the block origin).  None on
+                              operands built before the field existed;
+                              `to_bbcsr` always fills it.
     """
 
     rows_local: jnp.ndarray
@@ -253,15 +261,16 @@ class BBCSR:
     block_rows: int
     block_cols: int
     tile_nnz: int
+    tile_cnt: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
         return (self.rows_local, self.cols_local, self.vals, self.tile_rb,
-                self.tile_cb, self.tile_init), (
+                self.tile_cb, self.tile_init, self.tile_cnt), (
             self.n_rows, self.n_cols, self.block_rows, self.block_cols, self.tile_nnz)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(*children[:6], *aux, tile_cnt=children[6])
 
     @property
     def n_tiles(self) -> int:
@@ -289,6 +298,7 @@ def to_bbcsr(csr: CSR, *, block_rows: int = 256, block_cols: int = 512,
 
     n_rb = -(-csr.n_rows // block_rows)
     tiles_r, tiles_c, tiles_v, tiles_rb, tiles_cb = [], [], [], [], []
+    tiles_m = []
     key = rb * (1 << 32) + cb
     if rows.size:
         starts = np.concatenate([[0], np.nonzero(key[1:] != key[:-1])[0] + 1,
@@ -308,9 +318,13 @@ def to_bbcsr(csr: CSR, *, block_rows: int = 256, block_cols: int = 512,
         r = np.concatenate([rows[s:e] - g_rb * block_rows, np.zeros(pad, np.int64)])
         c = np.concatenate([cols[s:e] - g_cb * block_cols, np.zeros(pad, np.int64)])
         v = np.concatenate([vals[s:e], np.zeros(pad, np.float32)])
+        # padding sits at each tile's tail: full tiles, then the remainder
+        m = np.full(n_t, tile_nnz, np.int64)
+        m[-1] = cnt - (n_t - 1) * tile_nnz
         tiles_r.append(r.reshape(n_t, tile_nnz))
         tiles_c.append(c.reshape(n_t, tile_nnz))
         tiles_v.append(v.reshape(n_t, tile_nnz))
+        tiles_m.append(m)
         tiles_rb.append(np.full(n_t, g_rb, np.int64))
         tiles_cb.append(np.full(n_t, g_cb, np.int64))
     for b in range(n_rb):
@@ -318,15 +332,18 @@ def to_bbcsr(csr: CSR, *, block_rows: int = 256, block_cols: int = 512,
             tiles_r.append(np.zeros((1, tile_nnz), np.int64))
             tiles_c.append(np.zeros((1, tile_nnz), np.int64))
             tiles_v.append(np.zeros((1, tile_nnz), np.float32))
+            tiles_m.append(np.zeros(1, np.int64))
             tiles_rb.append(np.full(1, b, np.int64))
             tiles_cb.append(np.zeros(1, np.int64))
     t_r = np.concatenate(tiles_r)
     t_c = np.concatenate(tiles_c)
     t_v = np.concatenate(tiles_v)
+    t_m = np.concatenate(tiles_m)
     t_rb = np.concatenate(tiles_rb)
     t_cb = np.concatenate(tiles_cb)
     order = np.argsort(t_rb, kind="stable")
-    t_r, t_c, t_v, t_rb, t_cb = (a[order] for a in (t_r, t_c, t_v, t_rb, t_cb))
+    t_r, t_c, t_v, t_m, t_rb, t_cb = (
+        a[order] for a in (t_r, t_c, t_v, t_m, t_rb, t_cb))
     init = np.ones(t_rb.shape[0], np.int64)
     init[1:] = t_rb[1:] != t_rb[:-1]
     return BBCSR(
@@ -334,4 +351,5 @@ def to_bbcsr(csr: CSR, *, block_rows: int = 256, block_cols: int = 512,
         jnp.asarray(t_v, jnp.float32), jnp.asarray(t_rb, jnp.int32),
         jnp.asarray(t_cb, jnp.int32), jnp.asarray(init, jnp.int32),
         csr.n_rows, csr.n_cols, block_rows, block_cols, tile_nnz,
+        tile_cnt=jnp.asarray(t_m, jnp.int32),
     )

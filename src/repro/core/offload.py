@@ -39,8 +39,9 @@ __all__ = [
     "dma_gather", "dma_scatter_add", "dma_strided_copy",
     "axis_size", "my_shard",
     "segment_argmax", "segment_weighted_mode", "compact_labels", "run_starts",
+    "segment_or",
     "dgas_gather", "remote_scatter_add", "remote_scatter_combine",
-    "remote_scatter_weighted_mode",
+    "remote_scatter_weighted_mode", "remote_scatter_or",
     "all_gather_gather",
     "QueueState", "queue_make", "queue_balance",
     "hierarchical_psum", "barrier", "prefix_scan",
@@ -147,6 +148,48 @@ def segment_weighted_mode(idx: jnp.ndarray, labels: jnp.ndarray,
     run_w = jax.ops.segment_sum(sw, run_id, num_segments=m)
     rep_idx = jnp.where(is_start & (si < n), si, -1)
     return segment_argmax(rep_idx, jnp.take(run_w, run_id), sl, n)
+
+
+def segment_or(idx: jnp.ndarray, words: jnp.ndarray, n: int, *,
+               presorted: bool = False) -> jnp.ndarray:
+    """Per-destination bitwise OR of packed lane words (MS-BFS's combine).
+
+    ``idx`` (m,) int32 destinations (out-of-range ignored), ``words`` (m, W)
+    uint32 bit-packed lane payloads.  Returns (n, W) uint32 with out[v] = OR
+    of all words whose idx == v (0 where no items land).
+
+    HBM scatters have no native OR, and bit-packed words cannot ride the
+    add/min/max scatters (carries / monotonicity), so the reduction is a
+    *segmented scan*: sort by destination (skipped when the caller's stream
+    is already destination-sorted, e.g. the engine's host-presorted pull
+    stream), run a segmented inclusive OR-scan — the collective engine's
+    prefix-scan machinery applied within runs — and keep each run's last
+    element.  O(m log m) work, fully vectorized over the W lane words.
+    """
+    m = int(idx.shape[0])
+    W = int(words.shape[1])
+    if m == 0:
+        return jnp.zeros((n, W), jnp.uint32)
+    valid = (idx >= 0) & (idx < n)
+    key = jnp.where(valid, idx, n).astype(jnp.int32)
+    w = jnp.where(valid[:, None], words.astype(jnp.uint32), jnp.uint32(0))
+    if not presorted:
+        order = jnp.argsort(key)  # OR is commutative: stability not needed
+        key = jnp.take(key, order)
+        w = jnp.take(w, order, axis=0)
+    first = jnp.concatenate([jnp.ones((1,), bool), key[1:] != key[:-1]])
+
+    def op(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb[..., None], vb, va | vb)
+
+    _, scanned = lax.associative_scan(op, (first, w), axis=0)
+    is_end = jnp.concatenate([key[1:] != key[:-1], jnp.ones((1,), bool)])
+    # one writer per run: scatter the run totals; the n sentinel (and any
+    # non-end position) is dropped by the out-of-bounds scatter rule
+    end_key = jnp.where(is_end, key, n)
+    return jnp.zeros((n, W), jnp.uint32).at[end_key].set(scanned)
 
 
 def compact_labels(labels: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -332,14 +375,39 @@ def remote_scatter_combine(local: jnp.ndarray, gidx: jnp.ndarray,
     # empty slots are zero-filled by _route and masked to `identity` here.
     (ridx, rvals), recvv, _, _ = _route((local_idx, vals), owner, axis_name, C)
     ridx = jnp.where(recvv, ridx, -1)
-    rvals = jnp.where(recvv, rvals, neutral)
+    trail = (1,) * (rvals.ndim - 1)  # vals may carry lanes: (m, B) and beyond
+    rvals = jnp.where(recvv.reshape((-1,) + trail), rvals, neutral)
     valid = (ridx >= 0) & (ridx < local.shape[0])
     safe = jnp.where(valid, ridx, 0)
-    masked = jnp.where(valid, rvals.astype(local.dtype),
+    masked = jnp.where(valid.reshape((-1,) + trail), rvals.astype(local.dtype),
                        jnp.asarray(identity, local.dtype))
     if combine == "min":
         return local.at[safe].min(masked)
     return local.at[safe].max(masked)
+
+
+def remote_scatter_or(per_shard_n: int, gidx: jnp.ndarray, words: jnp.ndarray,
+                      att: ATT, axis_name: AxisName, *,
+                      capacity: Optional[int] = None) -> jnp.ndarray:
+    """Remote atomic OR of bit-packed lane words, executed at the owner.
+
+    The batched engine's push step for bitwise (MS-BFS-style) programs: each
+    shard contributes (global vertex, (W,) uint32 lane words) pairs; the
+    owner reduces arrivals with :func:`segment_or`.  One routed item carries
+    all B lanes in ceil(B/32) words — the amortization PIUMA's concurrent
+    traversals exploit, `traffic.batched_payload_bytes` charges it.
+    Returns the (per_shard_n, W) uint32 OR-accumulator.
+    """
+    n = gidx.shape[0]
+    S = axis_size(axis_name)
+    C = capacity if capacity is not None else min(n, 2 * (-(-n // S)))
+    in_range = (gidx >= 0) & (gidx < att.n_global)
+    owner = jnp.where(in_range, att.owner(jnp.maximum(gidx, 0)), -1).astype(jnp.int32)
+    local_idx = jnp.where(in_range, att.local(jnp.maximum(gidx, 0)), -1).astype(jnp.int32)
+    (ridx, rwords), recvv, _, _ = _route(
+        (local_idx, words.astype(jnp.uint32)), owner, axis_name, C)
+    ridx = jnp.where(recvv, ridx, -1)
+    return segment_or(ridx, rwords, per_shard_n)
 
 
 def remote_scatter_weighted_mode(per_shard_n: int, gidx: jnp.ndarray,

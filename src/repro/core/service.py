@@ -1,0 +1,487 @@
+"""Graph query service: micro-batched multi-source traversal serving.
+
+PIUMA's concurrency story is *many traversals in flight at once* — the
+single-query engine reproduces the memory/network story (DESIGN.md §3–§7),
+this module reproduces the serving story on top of the batched engine
+(`engine.run_batched`): a typed query API, an admission queue that
+micro-batches compatible queries into one batched engine pass, an LRU result
+cache keyed by (graph epoch, query), and a stats ledger
+(queries/sec, batch occupancy, cache hit rate, modeled route bytes/query).
+
+Queries and their results
+-------------------------
+
+=====================  =============================  =====================
+query                  engine pass                    result
+=====================  =============================  =====================
+:class:`Reachability`  bit-packed MS-BFS lane         bool
+:class:`Distance`      batched delta-stepping lane    float (inf = no path)
+:class:`PPRTopK`       vmapped personalized-PR lane   (ids (k,), scores (k,))
+:class:`NeighborSample` keyed one-hop sample slots    ids (fanout,)
+=====================  =============================  =====================
+
+Micro-batching policy (DESIGN.md §13): the admission queue is FIFO; each
+round takes the *kind* of the oldest pending query and collects queries of
+that kind — in submission order, leaving other kinds queued — until the
+batch budget of lanes is full.  Traversal queries occupying the same source
+share a lane (dedup), sample queries occupy ``fanout`` slots.  Batches are
+padded to the full budget so each (kind, budget) pair compiles exactly once;
+padding lanes replay lane 0 and are discarded.
+
+Cache keying rule: ``(epoch, query)`` — the query dataclasses are frozen and
+hashable, and ``update_graph`` bumps the epoch, so a mutated graph can never
+serve stale results while an unchanged graph keeps its whole cache.  Sampled
+results are cached too (a repeated NeighborSample query returns the *same*
+draw until evicted or the epoch moves — the draw is keyed by
+(seed, epoch, query), not by batch composition, so identical resubmissions
+after eviction also redraw identically).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine, traffic
+from .graph import CSR
+from .algorithms.bfs import msbfs
+from .algorithms.pagerank import ppr_topk
+from .algorithms.sssp import auto_delta, sssp_batched
+
+__all__ = [
+    "Reachability", "Distance", "PPRTopK", "NeighborSample",
+    "ServiceStats", "GraphService",
+]
+
+
+# ---------------------------------------------------------------------------
+# Typed queries (frozen => hashable => cache keys)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Reachability:
+    """Is `target` reachable from `source`?  Served by an MS-BFS lane."""
+
+    source: int
+    target: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Distance:
+    """Shortest weighted distance source -> target (inf if unreachable).
+    Served by a batched delta-stepping lane (the graph-level `auto_delta`)."""
+
+    source: int
+    target: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PPRTopK:
+    """Top-k personalized-PageRank neighborhood of `source`.  k may vary per
+    query up to the service's ``ppr_k_max``; every batch computes
+    ``ppr_k_max`` candidates and slices each query's k (one compile per
+    (kind, budget))."""
+
+    source: int
+    k: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class NeighborSample:
+    """`fanout` independent one-hop neighbor draws from `vertex` (uniform
+    over out-edges; sinks return the vertex itself).  `seed` salts the draw
+    so distinct queries on one vertex stay independent."""
+
+    vertex: int
+    fanout: int = 1
+    seed: int = 0
+
+
+_KIND = {Reachability: "reach", Distance: "dist", PPRTopK: "ppr",
+         NeighborSample: "sample"}
+
+
+# ---------------------------------------------------------------------------
+# Stats ledger
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Counters over a service's lifetime (or since `reset_stats`).
+
+    route_bytes is the §7/§13 *model* of what a distributed deployment would
+    move: per batched push level one compacted exchange at the derived
+    capacity whose items carry all B lanes (`traffic.batched_payload_bytes`),
+    per dense level a full-partition gather of the lane payloads — computed
+    from the run's measured push/pull trace, n_model_shards wide.
+    """
+
+    budget: int
+    n_model_shards: int = 8
+    queries: int = 0
+    cache_hits: int = 0
+    batches: int = 0
+    lanes_used: int = 0
+    busy_s: float = 0.0
+    route_bytes: int = 0
+    push_levels: int = 0
+    pull_levels: int = 0
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.busy_s if self.busy_s > 0 else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of the lane budget a batch actually fills."""
+        return self.lanes_used / (self.batches * self.budget) \
+            if self.batches else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.queries if self.queries else 0.0
+
+    @property
+    def route_bytes_per_query(self) -> float:
+        return self.route_bytes / self.queries if self.queries else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "queries": self.queries, "cache_hits": self.cache_hits,
+            "batches": self.batches, "lanes_used": self.lanes_used,
+            "busy_s": self.busy_s, "route_bytes": self.route_bytes,
+            "push_levels": self.push_levels, "pull_levels": self.pull_levels,
+            "qps": self.qps, "occupancy": self.occupancy,
+            "hit_rate": self.hit_rate,
+            "route_bytes_per_query": self.route_bytes_per_query,
+        }
+
+    def __str__(self) -> str:
+        return (f"ServiceStats(queries={self.queries}, qps={self.qps:.1f}, "
+                f"occupancy={self.occupancy:.2f}, "
+                f"hit_rate={self.hit_rate:.2f}, "
+                f"route_B/query={self.route_bytes_per_query:.0f}, "
+                f"batches={self.batches})")
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+class GraphService:
+    """Serve typed graph queries from one (mutable-by-epoch) graph.
+
+    batch_budget: lanes per micro-batch — the B the batched engine runs at.
+    cache_capacity: LRU entries; 0 disables caching.
+    results_capacity: completed-but-unclaimed results kept for
+      :meth:`result`; the oldest are dropped beyond this (a fire-and-forget
+      client must not leak the service's memory).
+    ppr_iters / damping / mode / ppr_k_max: engine knobs shared by every
+      query (part of the compatibility rule: everything but the
+      source/k/fanout is service-level, so same-kind queries always batch —
+      every PPR batch computes ``ppr_k_max`` candidates and slices each
+      query's k, keeping one compile per (kind, budget)).
+    n_model_shards: width of the route-byte model (see ServiceStats).
+    """
+
+    def __init__(self, csr: CSR, *, batch_budget: int = 32,
+                 cache_capacity: int = 4096, results_capacity: int = 65536,
+                 ppr_iters: int = 20, damping: float = 0.85,
+                 mode: str = "auto", ppr_k_max: int = 64,
+                 n_model_shards: int = 8, seed: int = 0):
+        if batch_budget < 1:
+            raise ValueError("batch_budget must be >= 1")
+        self.budget = int(batch_budget)
+        self.cache_capacity = int(cache_capacity)
+        self.results_capacity = int(results_capacity)
+        self.ppr_k_max = int(ppr_k_max)
+        self.ppr_iters = ppr_iters
+        self.damping = damping
+        self.mode = mode
+        self.seed = seed
+        self.epoch = 0
+        self.stats = ServiceStats(budget=self.budget,
+                                  n_model_shards=n_model_shards)
+        self._cache: "collections.OrderedDict[Tuple, Any]" = \
+            collections.OrderedDict()
+        self._queue: "collections.deque[Tuple[int, Any]]" = collections.deque()
+        self._results: "collections.OrderedDict[int, Any]" = \
+            collections.OrderedDict()
+        self._next_ticket = 0
+        self._set_graph(csr)
+
+    # -- graph epoch -------------------------------------------------------
+
+    def _set_graph(self, csr: CSR) -> None:
+        self.csr = csr
+        self.delta = auto_delta(csr)
+        self._ppr_k = min(self.ppr_k_max, csr.n_rows)
+        self._runners: Dict[Tuple, Any] = {}
+        m_per = -(-csr.nnz // self.stats.n_model_shards)
+        self._edge_cap = engine.frontier_edge_capacity(m_per, 1 / 32)
+        self._m_per_shard = m_per
+
+    def update_graph(self, csr: CSR) -> int:
+        """Swap the served graph; bumps the epoch (old cache entries can
+        never be served again) and drops the compiled runners.  Pending
+        queries were *admitted* (and bounds-validated) against the old graph,
+        so they are flushed against it first — a query never executes on a
+        different graph than the one it was accepted for."""
+        if self._queue:
+            self.flush()
+        self.epoch += 1
+        self._set_graph(csr)
+        # keys embed the epoch, so stale entries are unreachable — purge them
+        # eagerly rather than letting them age out of the LRU
+        self._cache.clear()
+        return self.epoch
+
+    def reset_stats(self) -> None:
+        self.stats = ServiceStats(budget=self.budget,
+                                  n_model_shards=self.stats.n_model_shards)
+
+    # -- cache -------------------------------------------------------------
+
+    def _cache_get(self, q) -> Tuple[bool, Any]:
+        key = (self.epoch, q)
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return True, self._cache[key]
+        return False, None
+
+    def _cache_put(self, q, value) -> None:
+        if self.cache_capacity <= 0:
+            return
+        key = (self.epoch, q)
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_capacity:
+            self._cache.popitem(last=False)
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, q) -> int:
+        """Enqueue a query; returns a ticket for :meth:`result`."""
+        if type(q) not in _KIND:
+            raise TypeError(f"unknown query type {type(q).__name__}")
+        if isinstance(q, NeighborSample) and not 0 < q.fanout <= self.budget:
+            raise ValueError(f"fanout {q.fanout} outside [1, {self.budget}] "
+                             "(one batch slot per draw)")
+        n = self.csr.n_rows
+        for field in ("source", "target", "vertex"):
+            v = getattr(q, field, None)
+            if v is not None and not 0 <= v < n:
+                raise ValueError(f"{type(q).__name__}.{field}={v} outside "
+                                 f"[0, {n})")
+        if isinstance(q, PPRTopK) and not 0 < q.k <= self._ppr_k:
+            raise ValueError(f"PPRTopK.k={q.k} outside [1, {self._ppr_k}] "
+                             "(raise ppr_k_max to serve larger k)")
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((t, q))
+        return t
+
+    def result(self, ticket: int):
+        if ticket not in self._results:
+            if 0 <= ticket < self._next_ticket and \
+                    not any(t == ticket for t, _ in self._queue):
+                raise KeyError(f"ticket {ticket} was claimed already or "
+                               "evicted (results_capacity bounds unclaimed "
+                               "results)")
+            raise KeyError(f"ticket {ticket} has no result (flush pending "
+                           "queries first)")
+        return self._results.pop(ticket)
+
+    def query(self, q):
+        """Submit + flush + return: the synchronous convenience path."""
+        t = self.submit(q)
+        self.flush()
+        return self.result(t)
+
+    def flush(self) -> List[int]:
+        """Drain the admission queue; returns the processed tickets in
+        submission order.  Each round micro-batches the oldest pending
+        query's kind (FIFO within the kind) up to the lane budget."""
+        done: List[int] = []
+        t0 = time.perf_counter()
+        while self._queue:
+            kind = _KIND[type(self._queue[0][1])]
+            batch, lanes = self._collect(kind, done)
+            done.extend(t for t, _ in batch)
+            self._execute(kind, batch, lanes)
+            if batch:
+                self.stats.batches += 1
+        self.stats.busy_s += time.perf_counter() - t0
+        return sorted(done)
+
+    def _collect(self, kind: str, done: List[int]):
+        """Pull same-kind queries from the queue (submission order) until the
+        lane budget fills.  Returns ([(ticket, query)], ordered lane keys) —
+        traversal queries dedupe on source, sample queries take fanout
+        slots."""
+        batch: List[Tuple[int, Any]] = []
+        lanes: List[int] = []
+        slots = 0
+        keep: List[Tuple[int, Any]] = []
+        while self._queue:
+            t, q = self._queue.popleft()
+            if _KIND[type(q)] != kind:
+                keep.append((t, q))
+                continue
+            hit, val = self._cache_get(q)
+            if hit:
+                self._store_result(t, val)
+                done.append(t)
+                self.stats.queries += 1
+                self.stats.cache_hits += 1
+                continue
+            if kind == "sample":
+                need = q.fanout
+                if slots + need > self.budget and slots > 0:
+                    keep.append((t, q))
+                    break
+                slots += min(need, self.budget)
+            else:
+                src = q.source
+                if src not in lanes:
+                    if len(lanes) >= self.budget:
+                        keep.append((t, q))
+                        break
+                    lanes.append(src)
+            batch.append((t, q))
+        self._queue.extendleft(reversed(keep))
+        return batch, lanes
+
+    # -- execution ---------------------------------------------------------
+
+    def _pad(self, xs: List[int]) -> np.ndarray:
+        out = np.zeros((self.budget,), np.int32)
+        out[: len(xs)] = xs
+        if xs:
+            out[len(xs):] = xs[0]
+        return out
+
+    def _runner(self, key, build):
+        fn = self._runners.get(key)
+        if fn is None:
+            fn = self._runners[key] = build()
+        return fn
+
+    def _charge(self, n_lanes: int, pushes: int, pulls: int, *,
+                packed: bool) -> None:
+        """Route-byte model of the batch (see ServiceStats).  Push levels
+        move routed items (index + validity header + lanes) at the compacted
+        capacity; dense pull levels gather the bare lane payload for the
+        full edge partition — no routing header."""
+        st = self.stats
+        item = traffic.batched_payload_bytes(n_lanes, packed=packed)
+        lane_bytes = item - (4 + 1)
+        ctr = traffic.RouteByteCounter(st.n_model_shards)
+        for _ in range(int(pushes)):
+            ctr.push_level(self._edge_cap, payload_bytes=item)
+        for _ in range(int(pulls)):
+            ctr.pull_level(self._m_per_shard * lane_bytes)
+        st.route_bytes += ctr.total_bytes
+        st.push_levels += int(pushes)
+        st.pull_levels += int(pulls)
+
+    def _execute(self, kind: str, batch, lanes: List[int]) -> None:
+        if not batch:
+            return
+        if kind == "sample":
+            self._execute_sample(batch)
+            return
+        srcs = jnp.asarray(self._pad(lanes))
+        lane_of = {s: i for i, s in enumerate(lanes)}
+        if kind == "reach":
+            run = self._runner(("reach", self.budget), lambda: jax.jit(
+                lambda s: msbfs(self.csr, s, mode=self.mode,
+                                return_stats=True)))
+            levels, stats = run(srcs)
+            levels = np.asarray(levels)
+            for t, q in batch:
+                self._finish(t, q, bool(levels[lane_of[q.source],
+                                               q.target] >= 0))
+            self._charge(self.budget, stats["pushes"], stats["pulls"],
+                         packed=True)
+        elif kind == "dist":
+            run = self._runner(("dist", self.budget), lambda: jax.jit(
+                lambda s: sssp_batched(self.csr, s, delta=self.delta,
+                                       mode=self.mode, return_stats=True)))
+            dist, stats = run(srcs)
+            dist = np.asarray(dist)
+            for t, q in batch:
+                self._finish(t, q, float(dist[lane_of[q.source], q.target]))
+            self._charge(self.budget, stats["pushes"], stats["pulls"],
+                         packed=False)
+        elif kind == "ppr":
+            # every batch computes ppr_k_max candidates and slices per query:
+            # compiles stay one per (kind, budget), not per observed k
+            k = self._ppr_k
+            run = self._runner(("ppr", self.budget), lambda: jax.jit(
+                lambda s: ppr_topk(self.csr, s, k, damping=self.damping,
+                                   iters=self.ppr_iters)))
+            vals, ids = run(srcs)
+            vals, ids = np.asarray(vals), np.asarray(ids)
+            for t, q in batch:
+                ln = lane_of[q.source]
+                self._finish(t, q, (ids[ln, : q.k].copy(),
+                                    vals[ln, : q.k].copy()))
+            self._charge(self.budget, 0, self.ppr_iters, packed=False)
+        self.stats.lanes_used += len(lanes)
+        self.stats.queries += len(batch)
+
+    def _execute_sample(self, batch) -> None:
+        verts = np.zeros((self.budget,), np.int32)
+        salts = np.zeros((self.budget,), np.uint32)
+        spans: List[Tuple[int, int]] = []
+        pos = 0
+        for t, q in batch:
+            take = q.fanout
+            # _collect's slot accounting and submit's fanout bound guarantee
+            # the batch fits; fail loudly (not by truncating-and-caching a
+            # wrong-shaped result) if that invariant ever regresses
+            assert pos + take <= self.budget, (pos, take, self.budget)
+            verts[pos: pos + take] = q.vertex
+            # the draw is keyed by (epoch, query, slot) — batch-composition
+            # independent, so cached and recomputed answers agree
+            qh = np.uint32(hash((q.vertex, q.fanout, q.seed)) & 0x7FFFFFFF)
+            salts[pos: pos + take] = qh + np.arange(take, dtype=np.uint32)
+            spans.append((pos, take))
+            pos += take
+
+        def build():
+            base = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                      self.epoch)
+            def run(v, s):
+                keys = jax.vmap(lambda si: jax.random.fold_in(base, si))(s)
+                return jax.vmap(
+                    lambda kk, vv: engine.sample_neighbors(
+                        self.csr, vv[None], kk)[0])(keys, v)
+            return jax.jit(run)
+
+        run = self._runner(("sample", self.budget), build)
+        nbrs = np.asarray(run(jnp.asarray(verts), jnp.asarray(salts)))
+        for (t, q), (s, take) in zip(batch, spans):
+            self._finish(t, q, nbrs[s: s + take].copy())
+        ctr = traffic.RouteByteCounter(self.stats.n_model_shards)
+        ctr.push_level(self.budget,
+                       payload_bytes=traffic.ROUTE_PAYLOAD_BYTES)
+        self.stats.route_bytes += ctr.total_bytes
+        self.stats.push_levels += 1
+        self.stats.lanes_used += pos
+        self.stats.queries += len(batch)
+
+    def _store_result(self, ticket: int, value) -> None:
+        self._results[ticket] = value
+        while len(self._results) > self.results_capacity:
+            self._results.popitem(last=False)  # oldest unclaimed ticket
+
+    def _finish(self, ticket: int, q, value) -> None:
+        self._store_result(ticket, value)
+        self._cache_put(q, value)

@@ -19,12 +19,12 @@ the reproduction, the constants are not fitted per-row.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 __all__ = ["Machine", "XEON", "PIUMA_NODE", "AccessProfile", "SPMV_PROFILES",
            "APP_PROFILES", "time_per_elem", "speedup", "multinode_time_per_elem",
            "ROUTE_PAYLOAD_BYTES", "CONTRACT_PAYLOAD_BYTES",
-           "push_level_route_bytes", "RouteByteCounter"]
+           "push_level_route_bytes", "batched_payload_bytes", "RouteByteCounter"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +106,22 @@ ROUTE_PAYLOAD_BYTES = 4 + 4 + 1
 CONTRACT_PAYLOAD_BYTES = 4 + 4 + 4
 
 
+def batched_payload_bytes(n_lanes: int, *, packed: bool = False) -> int:
+    """Bytes of one routed item in a *batched* push level.
+
+    A batched frontier routes one item per active edge carrying **all B
+    lanes**: int32 local index + validity flag + the lane payload — 4 B per
+    lane for valued programs, or ``ceil(B/32)`` uint32 words for bit-packed
+    boolean frontiers.  The amortization PIUMA's concurrent traversals buy is
+    visible directly here: B single-source runs route B full items per edge
+    (B * ROUTE_PAYLOAD_BYTES), the batch routes one item of this size.
+    """
+    if n_lanes < 1:
+        raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+    lane_bytes = 4 * (-(-n_lanes // 32)) if packed else 4 * n_lanes
+    return 4 + 1 + lane_bytes
+
+
 def push_level_route_bytes(n_shards: int, per_peer_capacity: int,
                            payload_bytes: int = ROUTE_PAYLOAD_BYTES) -> int:
     """Bytes one shard injects per push level through `offload._route`.
@@ -136,9 +152,13 @@ class RouteByteCounter:
     total_bytes: int = 0
     levels: int = 0
 
-    def push_level(self, per_peer_capacity: int) -> int:
-        b = push_level_route_bytes(self.n_shards, per_peer_capacity,
-                                   self.payload_bytes)
+    def push_level(self, per_peer_capacity: int,
+                   payload_bytes: Optional[int] = None) -> int:
+        """One sparse level; ``payload_bytes`` overrides the counter's default
+        per-item size (e.g. `batched_payload_bytes(B)` for a batched level)."""
+        b = push_level_route_bytes(
+            self.n_shards, per_peer_capacity,
+            self.payload_bytes if payload_bytes is None else payload_bytes)
         self.total_bytes += b
         self.levels += 1
         return b

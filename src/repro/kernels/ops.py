@@ -38,10 +38,14 @@ def spmv_dma(bb: BBCSR, x: jnp.ndarray, *, interpret: Optional[bool] = None) -> 
 
 
 def spmspv_dma(bb: BBCSR, x: jnp.ndarray, tile_active: jnp.ndarray, *,
+               combine: str = "add",
                interpret: Optional[bool] = None) -> jnp.ndarray:
-    """y = A @ x for sparse x; tiles whose column block is inactive (per
-    `tile_active`, see `core.engine.tile_active`) skip compute."""
-    return _spmv.spmspv_bbcsr_kernel_call(bb, x, tile_active,
+    """y = A ⊕ x for sparse x; tiles whose column block is inactive (per
+    `tile_active`, see `core.engine.tile_active`) skip compute.  combine:
+    'add' (val * x[col], MXU one-hot path) or 'min' / 'max' (x[col] + val,
+    masked-select tile combine — the distance semirings; needs
+    bb.tile_cnt)."""
+    return _spmv.spmspv_bbcsr_kernel_call(bb, x, tile_active, combine=combine,
                                           interpret=_interp(interpret))
 
 

@@ -129,6 +129,80 @@ def _spmspv_kernel(rb_ref, cb_ref, init_ref, act_ref, rows_ref, cols_ref,
             y_ref[0, :] += yblk[0]
 
 
+def _tile_yblk_select(rows_ref, cols_ref, vals_ref, x_ref, cnt, *,
+                      block_rows: int, block_cols: int, tile_nnz: int,
+                      combine: str):
+    """One tile's output block for the min/max combines, by masked select.
+
+    The MXU one-hot matmuls only implement *additive* gather/scatter (0 * x
+    annihilates, + accumulates) — and a one-hot gather of a vector holding
+    the min-identity +inf would produce 0 * inf = NaN.  So the min/max tile
+    combine stays on the VPU as two masked-select reductions:
+
+    * gather:  sel[t, c] = x[c] where cols[t] == c else identity; row-min
+      picks x[cols[t]] exactly (one live column per row).
+    * relax:   contrib = gathered + vals — the (min,+)/(max,+) semirings'
+      edge op; slots past ``cnt`` (padding is always a tile's tail) park at
+      the identity (a padded (0, 0, 0.0) slot is otherwise indistinguishable
+      from a real edge).
+    * scatter: y[r] = reduce_t contrib[t] where rows[t] == r else identity —
+      the same select pattern transposed.
+    """
+    cols = cols_ref[0, :]
+    rows = rows_ref[0, :]
+    vals = vals_ref[0, :]
+    xblk = x_ref[0, :]
+    ident = jnp.float32(jnp.inf if combine == "min" else -jnp.inf)
+    red = jnp.min if combine == "min" else jnp.max
+
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_nnz, block_cols), 1)
+    sel = jnp.where(cols[:, None] == col_iota, xblk[None, :], ident)
+    gathered = jnp.min(sel, axis=1) if combine == "min" else jnp.max(sel, axis=1)
+
+    slot = jax.lax.broadcasted_iota(jnp.int32, (tile_nnz, 1), 0)[:, 0]
+    contrib = jnp.where(slot < cnt, gathered + vals, ident)     # (T,)
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_nnz, block_rows), 1)
+    scat = jnp.where(rows[:, None] == row_iota, contrib[:, None], ident)
+    return red(scat, axis=0)[None, :]                           # (1, R)
+
+
+def _spmspv_select_kernel(rb_ref, cb_ref, init_ref, act_ref, cnt_ref,
+                          rows_ref, cols_ref, vals_ref, x_ref, y_ref, *,
+                          block_rows: int, block_cols: int, tile_nnz: int,
+                          combine: str):
+    """SpMSpV with a min/max destination combine: same tile schedule as the
+    'add' kernel (inactive tiles skip compute and their x DMA is collapsed),
+    but blocks initialize to the combine identity and revisits reduce with
+    min/max instead of accumulating.  ``cnt_ref`` is the scalar-prefetched
+    per-tile real-nonzero count (`BBCSR.tile_cnt`)."""
+    i = pl.program_id(0)
+    act = act_ref[i]
+    ident = jnp.float32(jnp.inf if combine == "min" else -jnp.inf)
+
+    @pl.when(jnp.logical_and(init_ref[i] == 1, act == 0))
+    def _ident():
+        y_ref[0, :] = jnp.full((block_rows,), ident, jnp.float32)
+
+    @pl.when(act == 1)
+    def _compute():
+        yblk = _tile_yblk_select(rows_ref, cols_ref, vals_ref, x_ref,
+                                 cnt_ref[i],
+                                 block_rows=block_rows, block_cols=block_cols,
+                                 tile_nnz=tile_nnz, combine=combine)
+
+        @pl.when(init_ref[i] == 1)
+        def _init():
+            y_ref[0, :] = yblk[0]
+
+        @pl.when(init_ref[i] == 0)
+        def _acc():
+            if combine == "min":
+                y_ref[0, :] = jnp.minimum(y_ref[0, :], yblk[0])
+            else:
+                y_ref[0, :] = jnp.maximum(y_ref[0, :], yblk[0])
+
+
 def spmv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray, *, interpret: bool = True
                            ) -> jnp.ndarray:
     """Launch the kernel. Returns y (n_rows,) float32."""
@@ -160,39 +234,81 @@ def spmv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray, *, interpret: bool = True
 
 def spmspv_bbcsr_kernel_call(bb: BBCSR, x: jnp.ndarray,
                              tile_active: jnp.ndarray, *,
+                             combine: str = "add",
                              interpret: bool = True) -> jnp.ndarray:
-    """y = A @ x for a sparsely-populated x.
+    """y = A ⊕ x for a sparsely-populated x, ⊕ per ``combine``.
 
     `tile_active` is (n_tiles,) int32 — 1 iff the tile's column block holds a
     nonzero x entry (see `engine.tile_active`).  Inactive tiles skip the
     compute (`pl.when`) *and* the x-block DMA (their index_map entry is
     collapsed onto the previous active tile's block via
-    `collapse_inactive_blocks`), so both MXU work and VMEM traffic scale
+    `collapse_inactive_blocks`), so both tile work and VMEM traffic scale
     with the active column blocks instead of nnz(A).
+
+    combine='add' (default) is the MXU one-hot path computing val * x[col];
+    'min'/'max' run the masked-select tile combine relaxing x[col] + val
+    (the (min,+)/(max,+) distance semirings) — they need ``bb.tile_cnt`` and
+    the caller's "active" convention flips to "x[col] != identity" (the
+    engine's frontier mask covers both).  Untouched rows return the combine
+    identity.
     """
+    if combine not in ("add", "min", "max"):
+        raise ValueError(f"combine must be 'add', 'min' or 'max', got {combine!r}")
     n_rb, n_cb = bb.n_row_blocks, bb.n_col_blocks
-    x_pad = jnp.pad(x.astype(jnp.float32), (0, n_cb * bb.block_cols - x.shape[0]))
+    pad_val = 0.0 if combine == "add" else float("inf") if combine == "min" \
+        else float("-inf")
+    x_pad = jnp.pad(x.astype(jnp.float32),
+                    (0, n_cb * bb.block_cols - x.shape[0]),
+                    constant_values=pad_val)
     x2d = x_pad.reshape(n_cb, bb.block_cols)
     cb_sched = collapse_inactive_blocks(bb.tile_cb, tile_active)
-    kern = functools.partial(_spmspv_kernel, block_rows=bb.block_rows,
-                             block_cols=bb.block_cols, tile_nnz=bb.tile_nnz)
+    if combine == "add":
+        kern = functools.partial(_spmspv_kernel, block_rows=bb.block_rows,
+                                 block_cols=bb.block_cols, tile_nnz=bb.tile_nnz)
+        # tile_rb, tile_cb, tile_init, tile_active
+        scalars = (bb.tile_rb, cb_sched, bb.tile_init,
+                   tile_active.astype(jnp.int32))
+
+        def tile_spec():
+            return pl.BlockSpec((1, bb.tile_nnz),
+                                lambda i, rb, cb, ini, act: (i, 0))
+
+        x_spec = pl.BlockSpec((1, bb.block_cols),
+                              lambda i, rb, cb, ini, act: (cb[i], 0))
+        y_spec = pl.BlockSpec((1, bb.block_rows),
+                              lambda i, rb, cb, ini, act: (rb[i], 0))
+    else:
+        if bb.tile_cnt is None:
+            raise ValueError("min/max combines need the BBCSR per-tile "
+                             "padding counts (mask) — rebuild the operand "
+                             "with to_bbcsr")
+        kern = functools.partial(_spmspv_select_kernel,
+                                 block_rows=bb.block_rows,
+                                 block_cols=bb.block_cols,
+                                 tile_nnz=bb.tile_nnz, combine=combine)
+        # ... + tile_cnt (the padding boundary per tile)
+        scalars = (bb.tile_rb, cb_sched, bb.tile_init,
+                   tile_active.astype(jnp.int32), bb.tile_cnt)
+
+        def tile_spec():
+            return pl.BlockSpec((1, bb.tile_nnz),
+                                lambda i, rb, cb, ini, act, cnt: (i, 0))
+
+        x_spec = pl.BlockSpec((1, bb.block_cols),
+                              lambda i, rb, cb, ini, act, cnt: (cb[i], 0))
+        y_spec = pl.BlockSpec((1, bb.block_rows),
+                              lambda i, rb, cb, ini, act, cnt: (rb[i], 0))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,  # tile_rb, tile_cb, tile_init, tile_active
+        num_scalar_prefetch=len(scalars),
         grid=(bb.n_tiles,),
-        in_specs=[
-            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini, act: (i, 0)),
-            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini, act: (i, 0)),
-            pl.BlockSpec((1, bb.tile_nnz), lambda i, rb, cb, ini, act: (i, 0)),
-            pl.BlockSpec((1, bb.block_cols), lambda i, rb, cb, ini, act: (cb[i], 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bb.block_rows),
-                               lambda i, rb, cb, ini, act: (rb[i], 0)),
+        in_specs=[tile_spec() for _ in range(3)] + [x_spec],
+        out_specs=y_spec,
     )
     y2d = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_rb, bb.block_rows), jnp.float32),
         interpret=interpret,
-    )(bb.tile_rb, cb_sched, bb.tile_init, tile_active.astype(jnp.int32),
-      bb.rows_local, bb.cols_local, bb.vals, x2d)
+    )(*scalars, bb.rows_local, bb.cols_local, bb.vals, x2d)
     return y2d.reshape(-1)[: bb.n_rows]

@@ -112,3 +112,49 @@ def test_traffic_model_orderings():
     assert t["piuma_cache_all"] > t["piuma_base"]
     # PIUMA node beats the Xeon node on every version
     assert speedup(SPMV_PROFILES["piuma_base"]) > 1
+
+
+# ---------------------------------------------------------------------------
+# batched multi-source traversal == per-source loops (PR 4)
+# ---------------------------------------------------------------------------
+
+from repro.core.algorithms import (auto_delta, bfs, msbfs, ppr, ppr_batched,
+                                   sssp, sssp_batched)
+from repro.core import uniform_random_graph as _urg
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(2, 80), deg=st.integers(1, 5),
+       nsrc=st.integers(1, 6), mode=st.sampled_from(["push", "pull", "auto"]))
+@settings(**SETTINGS)
+def test_property_msbfs_equals_bfs_loop(seed, n, deg, nsrc, mode):
+    g = _urg(n, deg, seed=seed)
+    srcs = np.random.default_rng(seed).integers(0, n, nsrc)
+    lv = np.asarray(msbfs(g, srcs, mode=mode))
+    for b, s in enumerate(srcs):
+        np.testing.assert_array_equal(lv[b], np.asarray(bfs(g, int(s),
+                                                            mode=mode)))
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(2, 60), deg=st.integers(1, 4),
+       nsrc=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_property_sssp_batched_equals_sssp_loop(seed, n, deg, nsrc):
+    g = _urg(n, deg, seed=seed)
+    d = auto_delta(g)
+    srcs = np.random.default_rng(seed + 1).integers(0, n, nsrc)
+    db = np.asarray(sssp_batched(g, srcs, delta=d))
+    for b, s in enumerate(srcs):
+        np.testing.assert_array_equal(db[b], np.asarray(sssp(g, int(s),
+                                                             delta=d)))
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(2, 50), deg=st.integers(1, 4),
+       nsrc=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_property_ppr_batched_equals_ppr_loop(seed, n, deg, nsrc):
+    g = _urg(n, deg, seed=seed)
+    srcs = np.random.default_rng(seed + 2).integers(0, n, nsrc)
+    pb = np.asarray(ppr_batched(g, srcs, iters=8))
+    for b, s in enumerate(srcs):
+        np.testing.assert_array_equal(pb[b], np.asarray(ppr(g, int(s),
+                                                            iters=8)))

@@ -1,0 +1,240 @@
+"""Graph query service: result correctness per query kind, micro-batch
+grouping and ordering, lane dedup/occupancy accounting, LRU cache behavior
+across graph epochs, and the route-byte ledger."""
+import numpy as np
+import pytest
+
+from repro.core import (Distance, GraphService, NeighborSample, PPRTopK,
+                        Reachability, rmat, uniform_random_graph)
+from repro.core.algorithms import bfs, ppr, sssp
+
+G = rmat(7, 8, seed=11)
+
+
+def make_service(**kw):
+    kw.setdefault("batch_budget", 4)
+    kw.setdefault("cache_capacity", 32)
+    return GraphService(G, **kw)
+
+
+# ---------------------------------------------------------------------------
+# per-kind correctness against the direct algorithms
+# ---------------------------------------------------------------------------
+
+def test_reachability_matches_bfs():
+    svc = make_service()
+    lv = np.asarray(bfs(G, 3))
+    assert svc.query(Reachability(3, 40)) == bool(lv[40] >= 0)
+    unreachable = int(np.argmin(lv)) if (lv < 0).any() else None
+    if unreachable is not None:
+        assert svc.query(Reachability(3, unreachable)) is False
+
+
+def test_distance_matches_sssp():
+    svc = make_service()
+    d = np.asarray(sssp(G, 5, delta=svc.delta))
+    assert svc.query(Distance(5, 60)) == float(d[60])
+
+
+def test_ppr_topk_matches_ppr():
+    svc = make_service()
+    ids, scores = svc.query(PPRTopK(2, k=5))
+    full = np.asarray(ppr(G, 2, iters=svc.ppr_iters))
+    np.testing.assert_allclose(np.sort(scores)[::-1],
+                               np.sort(full)[::-1][:5], rtol=1e-6)
+    assert ids.shape == (5,) and scores.shape == (5,)
+
+
+def test_neighbor_sample_draws_real_neighbors():
+    svc = make_service()
+    indptr = np.asarray(G.indptr)
+    v = int(np.argmax(np.diff(indptr)))  # a vertex with many neighbors
+    nbrs = np.asarray(G.indices)[indptr[v]: indptr[v + 1]]
+    out = svc.query(NeighborSample(v, fanout=4))
+    assert out.shape == (4,)
+    assert set(out.tolist()) <= set(nbrs.tolist())
+
+
+def test_neighbor_sample_fanout_over_budget_rejected():
+    svc = make_service(batch_budget=2)
+    with pytest.raises(ValueError, match="fanout"):
+        svc.submit(NeighborSample(0, fanout=3))
+
+
+def test_unknown_query_type_rejected():
+    svc = make_service()
+    with pytest.raises(TypeError):
+        svc.submit(("reach", 0, 1))
+
+
+def test_out_of_range_vertex_rejected():
+    svc = make_service()
+    with pytest.raises(ValueError, match="outside"):
+        svc.submit(Reachability(0, G.n_rows))
+    with pytest.raises(ValueError, match="outside"):
+        svc.submit(NeighborSample(-1))
+    with pytest.raises(ValueError, match="PPRTopK.k"):
+        svc.submit(PPRTopK(0, k=svc.ppr_k_max + 1))
+    with pytest.raises(ValueError, match="PPRTopK.k"):
+        svc.submit(PPRTopK(0, k=0))
+    with pytest.raises(ValueError, match="fanout"):
+        svc.submit(NeighborSample(0, fanout=0))
+
+
+def test_update_graph_flushes_pending_against_old_graph():
+    # admitted queries execute on the graph they were validated against
+    small = uniform_random_graph(16, 3, seed=2)
+    svc = make_service()
+    old_delta = svc.delta
+    t = svc.submit(Distance(100, 40))   # valid on G, out of range on `small`
+    svc.update_graph(small)             # must flush t against G first
+    ref = float(np.asarray(sssp(G, 100, delta=old_delta))[40])
+    assert svc.result(t) == ref
+
+
+# ---------------------------------------------------------------------------
+# micro-batching: grouping, ordering, occupancy
+# ---------------------------------------------------------------------------
+
+def test_mixed_stream_results_in_submission_order():
+    svc = make_service(batch_budget=3)
+    queries = [Reachability(0, 5), Distance(1, 9), Reachability(2, 7),
+               PPRTopK(3, k=2), Distance(4, 11), Reachability(6, 1),
+               NeighborSample(0, fanout=2)]
+    tickets = [svc.submit(q) for q in queries]
+    done = svc.flush()
+    assert done == sorted(tickets)
+    # every ticket resolves, and each against its own query's reference
+    for t, q in zip(tickets, queries):
+        r = svc.result(t)
+        if isinstance(q, Reachability):
+            assert r == bool(np.asarray(bfs(G, q.source))[q.target] >= 0)
+        elif isinstance(q, Distance):
+            assert r == float(np.asarray(sssp(G, q.source,
+                                              delta=svc.delta))[q.target])
+
+
+def test_batches_group_by_kind_up_to_budget():
+    svc = make_service(batch_budget=4)
+    for s in range(6):
+        svc.submit(Reachability(s, (s + 1) % G.n_rows))
+    svc.flush()
+    # 6 distinct sources under budget 4 -> 2 batches (4 + 2 lanes)
+    assert svc.stats.batches == 2
+    assert svc.stats.lanes_used == 6
+    assert svc.stats.queries == 6
+    assert 0 < svc.stats.occupancy <= 1
+
+
+def test_duplicate_sources_share_a_lane():
+    svc = make_service(batch_budget=4)
+    for t in range(5):
+        svc.submit(Reachability(7, t))
+    svc.flush()
+    assert svc.stats.batches == 1        # five queries, one lane
+    assert svc.stats.lanes_used == 1
+    assert svc.stats.queries == 5
+
+
+def test_ppr_mixed_k_share_one_runner():
+    svc = make_service(batch_budget=4)
+    t1 = svc.submit(PPRTopK(0, k=2))
+    t2 = svc.submit(PPRTopK(1, k=6))
+    svc.flush()
+    ids1, sc1 = svc.result(t1)
+    ids2, sc2 = svc.result(t2)
+    assert ids1.shape == (2,) and ids2.shape == (6,)
+    svc.query(PPRTopK(2, k=3))  # a third k must not add a runner
+    assert len([k for k in svc._runners if k[0] == "ppr"]) == 1
+
+
+def test_unclaimed_results_are_bounded():
+    svc = make_service(batch_budget=2, results_capacity=3)
+    tickets = [svc.submit(Reachability(s, 0)) for s in range(5)]
+    svc.flush()
+    assert len(svc._results) == 3             # oldest two evicted
+    assert svc.result(tickets[-1]) is not None
+    with pytest.raises(KeyError):
+        svc.result(tickets[0])
+
+
+# ---------------------------------------------------------------------------
+# cache + epochs
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_skips_execution_and_counts():
+    svc = make_service()
+    q = Reachability(1, 8)
+    first = svc.query(q)
+    batches_before = svc.stats.batches
+    again = svc.query(q)
+    assert again == first
+    assert svc.stats.cache_hits == 1
+    assert svc.stats.batches == batches_before  # no new engine pass
+    assert svc.stats.hit_rate > 0
+
+
+def test_cache_invalidated_across_epochs():
+    g2 = uniform_random_graph(G.n_rows, 3, seed=1)
+    svc = make_service()
+    q = Distance(0, 9)
+    r1 = svc.query(q)
+    epoch = svc.update_graph(g2)
+    assert epoch == 1
+    r2 = svc.query(q)
+    ref2 = float(np.asarray(sssp(g2, 0, delta=svc.delta))[9])
+    assert r2 == ref2
+    assert svc.stats.cache_hits == 0  # epoch bump means a true recompute
+    # the old graph's answer is not served, even if it differed
+    if r1 != r2:
+        assert svc.query(q) == r2  # and the *new* answer now caches
+        assert svc.stats.cache_hits == 1
+
+
+def test_cached_sample_is_stable_until_epoch_moves():
+    svc = make_service()
+    q = NeighborSample(2, fanout=3, seed=5)
+    s1 = svc.query(q)
+    s2 = svc.query(q)                  # LRU hit
+    np.testing.assert_array_equal(s1, s2)
+    svc._cache.clear()                 # simulate eviction
+    s3 = svc.query(q)                  # recomputed draw is keyed identically
+    np.testing.assert_array_equal(s1, s3)
+
+
+def test_lru_evicts_oldest():
+    svc = make_service(batch_budget=1, cache_capacity=2)
+    svc.query(Reachability(0, 1))
+    svc.query(Reachability(1, 2))
+    svc.query(Reachability(2, 3))      # evicts (0, 1)
+    hits_before = svc.stats.cache_hits
+    svc.query(Reachability(1, 2))      # still cached
+    assert svc.stats.cache_hits == hits_before + 1
+    svc.query(Reachability(0, 1))      # was evicted -> recompute
+    assert svc.stats.cache_hits == hits_before + 1
+
+
+def test_zero_capacity_disables_cache():
+    svc = make_service(cache_capacity=0)
+    q = Reachability(0, 3)
+    svc.query(q)
+    svc.query(q)
+    assert svc.stats.cache_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# stats ledger
+# ---------------------------------------------------------------------------
+
+def test_stats_ledger_accumulates_and_resets():
+    svc = make_service()
+    svc.query(Reachability(0, 1))
+    svc.query(Distance(0, 1))
+    st = svc.stats
+    assert st.queries == 2 and st.batches == 2
+    assert st.route_bytes > 0 and st.route_bytes_per_query > 0
+    assert st.busy_s > 0 and st.qps > 0
+    d = st.as_dict()
+    assert set(d) >= {"qps", "occupancy", "hit_rate", "route_bytes_per_query"}
+    svc.reset_stats()
+    assert svc.stats.queries == 0 and svc.stats.route_bytes == 0
