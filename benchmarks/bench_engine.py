@@ -37,7 +37,11 @@ Also reported:
   sequential bfs — the PR-4 acceptance bar is < 0.15) and, per batch budget
   B ∈ {1, 32, 256}, serving queries/sec, batch occupancy, modeled route
   bytes per query, and the cache hit rate on a resubmitted stream
-  (DESIGN.md §13).
+  (DESIGN.md §13);
+* the **distributed service** section (PR 5, also fixed RMAT-12, needs >= 8
+  devices): the same budgets served through `run_batched_distributed`
+  behind the facade, with latency p50/p95 and the deadline-miss rate under
+  a 60 s SLO — gated = 0 at B=32 (DESIGN.md §14).
 
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--scale 12]
       PYTHONPATH=src python benchmarks/bench_engine.py --scale 7 --smoke \
@@ -146,9 +150,11 @@ def louvain_report(g, smoke_failures):
     metric: modularity, not output equivalence)."""
     q_single = float(modularity(g, label_propagation(g, iters=1)))
     labels, scores = multilevel(g)  # cold run: correctness + jit warmup
-    t0 = time.perf_counter()
-    multilevel(g)  # warm run: level shapes repeat, so compiles are cached
-    ms = (time.perf_counter() - t0) * 1e3
+    ms = float("inf")
+    for _ in range(3):  # best-of-3 warm runs, like every other bench timing
+        t0 = time.perf_counter()
+        multilevel(g)  # warm: level shapes repeat, so compiles are cached
+        ms = min(ms, (time.perf_counter() - t0) * 1e3)
     q_multi = scores[-1] if scores else float(modularity(g, labels))
     n_comm = int(np.unique(np.asarray(labels)).size)
     print(f"\nlouvain: single LPA sweep Q={q_single:.5f}  multilevel "
@@ -302,6 +308,70 @@ def service_report(smoke_failures, budgets=(1, 32, 256), scale=12,
     return doc
 
 
+def service_distributed_report(smoke_failures, budgets=(1, 32, 256), scale=12,
+                               edge_factor=8, n_shards=8):
+    """The query service on the *sharded* engine (PR 5, DESIGN §14): with a
+    mesh the service serves reach/dist through `run_batched_distributed`, so
+    this section measures end-to-end distributed serving — qps, occupancy,
+    route bytes/query now priced from the *measured* level trace (incl.
+    capacity-overflow fallbacks), and the deadline SLO accounting.  Runs when
+    the host exposes >= n_shards devices (the CI bench lane forces 8); fixed
+    RMAT-12 like `service_report` so the trajectory stays comparable.
+
+    Gates: qps positive at every budget, and the PR-5 acceptance bar —
+    **deadline-miss rate = 0 at B=32** under a generous (60 s) SLO on the
+    pre-warmed runners.
+    """
+    if len(jax.devices()) < n_shards:
+        print(f"\ndistributed service lane skipped ({len(jax.devices())} "
+              f"devices < {n_shards})")
+        return None
+    from repro.core import GraphService, Reachability
+    from repro.launch.mesh import make_cores_mesh
+
+    mesh = make_cores_mesh(n_shards)
+    g = rmat(scale, edge_factor, seed=0)
+    n = g.n_rows
+    rng = np.random.default_rng(1)
+    doc = {"scale": scale, "n_shards": n_shards, "budgets": {}}
+    print(f"\ndistributed service (RMAT-{scale}, S={n_shards}, "
+          f"run_batched_distributed behind the facade):")
+    for budget in budgets:
+        n_q = min(512, max(32, 2 * budget))
+        svc = GraphService(g, batch_budget=budget, mesh=mesh,
+                           cache_capacity=4 * n_q)
+        svc.query(Reachability(0, 1))   # compile the (kind, budget) runner
+        svc.reset_stats()
+        stream = [Reachability(int(s), int(t))
+                  for s, t in zip(rng.integers(0, n, n_q),
+                                  rng.integers(0, n, n_q))]
+        for q in stream:                # 60 s SLO: misses mean a real stall
+            svc.submit(q, deadline=60.0)
+        svc.flush()
+        st = svc.stats.as_dict()
+        row = {"n_queries": n_q, "qps": st["qps"],
+               "occupancy": st["occupancy"],
+               "route_bytes_per_query": st["route_bytes_per_query"],
+               "latency_p50_ms": st["latency_p50_ms"],
+               "latency_p95_ms": st["latency_p95_ms"],
+               "deadline_miss_rate": st["deadline_miss_rate"]}
+        doc["budgets"][str(budget)] = row
+        print(f"  B={budget:<4d} {st['qps']:>9.1f} q/s  occupancy "
+              f"{st['occupancy']:.2f}  {st['route_bytes_per_query']:>11.0f}"
+              f" route B/q  p50/p95 {st['latency_p50_ms']:.0f}/"
+              f"{st['latency_p95_ms']:.0f} ms  miss rate "
+              f"{st['deadline_miss_rate']:.3f}")
+        if not (np.isfinite(st["qps"]) and st["qps"] > 0):
+            smoke_failures.append(f"REGRESSION: distributed service qps at "
+                                  f"B={budget} not positive")
+        if budget == 32 and st["deadline_miss_rate"] != 0.0:
+            smoke_failures.append(
+                f"REGRESSION: deadline-miss rate "
+                f"{st['deadline_miss_rate']:.3f} != 0 at B=32 (acceptance "
+                "bar: the idle sharded engine must meet a 60 s SLO)")
+    return doc
+
+
 def sweep_delta(scale: int = 10, edge_factor: int = 8):
     """Delta sweep (satellite): RMAT + uniform weights vs the histogram rule."""
     print("\ndelta-stepping sweep (iters = bucket expansions; ms best-of-3)")
@@ -369,6 +439,7 @@ def run(scale: int = 12, edge_factor: int = 8, smoke: bool = False):
     fallback_doc = fallback_report(scale)
     dist_doc = distributed_report(min(scale, 8), failures)
     service_doc = service_report(failures)
+    service_dist_doc = service_distributed_report(failures)
 
     # --- smoke checks (ci.sh bench): NaN + regression markers ---------------
     for mode in ("push", "pull"):
@@ -408,6 +479,8 @@ def run(scale: int = 12, edge_factor: int = 8, smoke: bool = False):
     # gated form is the amortization ratio
     if dist_doc is not None:
         doc["distributed"] = dist_doc
+    if service_dist_doc is not None:
+        doc["service_distributed"] = service_dist_doc
 
     for f in failures:
         print(f)

@@ -1,18 +1,22 @@
 #!/usr/bin/env bash
 # CI entry point — three lanes, runnable singly or in sequence:
 #
-#   scripts/ci.sh fast        — pre-commit default: full suite minus the @slow
+#   scripts/ci.sh fast        — pre-commit default: the single-stepping-loop
+#                               guard (scripts/check_single_core.py), then
+#                               the full suite minus the @slow
 #                               subprocess-spawning distributed/dryrun tests.
 #   scripts/ci.sh all         — tier-1: the full pytest suite (what the
 #                               driver enforces; the PR gate).
-#   scripts/ci.sh bench       — engine benchmark smoke lane: bench_engine.py
-#                               at tiny scale under 8 forced host devices (so
-#                               the distributed multilevel section runs; the
+#   scripts/ci.sh bench       — engine benchmark smoke lane: the guard, then
+#                               bench_engine.py at tiny scale under 8 forced
+#                               host devices (so the distributed multilevel
+#                               AND distributed-service sections run; the
 #                               query-service smoke — B ∈ {1,32,256} on
-#                               RMAT-12 with the msbfs amortization gate —
-#                               always runs at its own fixed scale),
-#                               writes ${BENCH_OUT:-BENCH_pr4.json} and fails
-#                               on NaN / regression markers / >25% regression
+#                               RMAT-12 with the msbfs amortization gate and
+#                               the deadline-miss-rate gate — always runs at
+#                               its own fixed scale), writes
+#                               ${BENCH_OUT:-BENCH_pr5.json} and fails on
+#                               NaN / regression markers / >25% regression
 #                               vs the newest committed BENCH_*.json.
 #   scripts/ci.sh fast bench  — multiple lanes: each runs even if an earlier
 #                               one failed; a per-lane summary is printed and
@@ -27,12 +31,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 run_lane() {
   case "$1" in
     fast)
-      python -m pytest -x -q -m "not slow"
+      python scripts/check_single_core.py \
+        && python -m pytest -x -q -m "not slow"
       ;;
     bench)
-      XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-        python benchmarks/bench_engine.py --scale 7 --smoke \
-          --json "${BENCH_OUT:-BENCH_pr4.json}" --baseline auto
+      python scripts/check_single_core.py \
+        && XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+          python benchmarks/bench_engine.py --scale 7 --smoke \
+            --json "${BENCH_OUT:-BENCH_pr5.json}" --baseline auto
       ;;
     all)
       python -m pytest -x -q

@@ -1,0 +1,81 @@
+"""Capture the golden-equivalence grid for the ExecutionCore refactor.
+
+Run ONCE against the PRE-refactor engine (PR 4 tree) to persist every public
+runner's outputs across the (program family x lane representation x mode)
+grid on fixed seeds:
+
+    PYTHONPATH=src python scripts/make_golden_core.py
+
+writes ``tests/golden/core_grid.npz``, which ``tests/test_execution_core.py``
+replays bit-exactly against the refactored engine.  The grid deliberately
+spans every lane representation (scalar, vmapped valued, bit-packed) and
+every direction mode; the distributed placement is covered separately by the
+partition-identity checks in ``tests/_distributed_main.py`` (goldens would
+depend on the forced device count, so they gate there, not here).
+
+Regenerating this file against a post-refactor engine would defeat its
+purpose — only do so when a PR *deliberately* changes numerical behavior,
+and say so in the PR.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, rmat, uniform_random_graph
+from repro.core.algorithms import (auto_delta, bfs, connected_components,
+                                   label_propagation, msbfs, ppr, ppr_batched,
+                                   sssp, sssp_batched)
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "tests", "golden", "core_grid.npz")
+
+SOURCES = np.array([0, 3, 17, 64, 0], dtype=np.int32)  # dup lane on purpose
+
+
+def build_grid():
+    g = rmat(7, 8, seed=11)          # the service test graph's shape class
+    u = uniform_random_graph(150, 4, seed=5)
+    d_g, d_u = auto_delta(g), auto_delta(u)
+    out = {"meta_delta_g": np.float64(d_g), "meta_delta_u": np.float64(d_u)}
+    for mode in ("push", "pull", "auto"):
+        # scalar lanes, local placement
+        out[f"bfs/scalar/{mode}"] = np.asarray(bfs(g, 0, mode=mode))
+        out[f"sssp/scalar/{mode}"] = np.asarray(sssp(g, 0, delta=d_g,
+                                                     mode=mode))
+        out[f"cc/scalar/{mode}"] = np.asarray(
+            connected_components(u, mode=mode))
+        # packed boolean lanes (MS-BFS)
+        out[f"bfs/packed/{mode}"] = np.asarray(msbfs(g, SOURCES, mode=mode))
+        # vmapped valued lanes
+        out[f"sssp/valued/{mode}"] = np.asarray(
+            sssp_batched(g, SOURCES, delta=d_g, mode=mode))
+    # dense-regime programs (mode is pull-only by construction)
+    out["ppr/scalar/pull"] = np.asarray(ppr(g, 3, iters=12))
+    out["ppr/valued/pull"] = np.asarray(ppr_batched(g, SOURCES, iters=12))
+    # structured combine: argmax_weighted (weighted LPA)
+    out["lpa/scalar/auto"] = np.asarray(label_propagation(g, iters=4))
+    # structured combine: sample (keyed, so deterministic given the key)
+    key = jax.random.PRNGKey(7)
+    out["sample/scalar/push"] = np.asarray(engine.sample_neighbors(
+        g, jnp.arange(64, dtype=jnp.int32), key))
+    out["sample/scalar/weighted"] = np.asarray(engine.sample_neighbors(
+        g, jnp.arange(64, dtype=jnp.int32), key, weighted=True))
+    # stats trace: the refactor must preserve the direction decisions too
+    _, st = sssp(g, 0, delta=d_g, return_stats=True)
+    out["sssp/stats/auto"] = np.asarray(
+        [int(st["iters"]), int(st["pushes"]), int(st["pulls"])])
+    lv, st = msbfs(g, SOURCES, return_stats=True)
+    out["msbfs/stats/auto"] = np.asarray(
+        [int(st["iters"]), int(st["pushes"]), int(st["pulls"])])
+    return out
+
+
+if __name__ == "__main__":
+    grid = build_grid()
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez_compressed(OUT, **grid)
+    print(f"wrote {OUT} ({len(grid)} entries)")
+    for k, v in sorted(grid.items()):
+        print(f"  {k:24s} {v.shape} {v.dtype}")

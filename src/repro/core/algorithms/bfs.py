@@ -119,19 +119,23 @@ def msbfs_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh, *,
     words (`offload.remote_scatter_or`).
     """
     S, per = att.n_shards, att.per_shard
-    src = np.asarray(sources, np.int64)
-    B = src.shape[0]
+    src = jnp.asarray(sources, jnp.int32)
+    B = int(src.shape[0])
     W = engine.lane_words(B)
-    owner = np.asarray(att.owner(jnp.asarray(src)))
-    local = np.asarray(att.local(jnp.asarray(src)))
-    words0 = np.zeros((S, per, W), np.uint32)
-    level0 = np.full((S, B, per), -1, np.int32)
-    for b in range(B):
-        words0[owner[b], local[b], b // 32] |= np.uint32(1) << np.uint32(b % 32)
-        level0[owner[b], b, local[b]] = 0
-    state0 = {"seen": jnp.asarray(words0), "level": jnp.asarray(level0)}
+    owner = att.owner(src)
+    local = att.local(src)
+    lanes = jnp.arange(B)
+    # traceable init (sources may be a jit argument — the service's padded
+    # batches): lanes occupy disjoint bits of their word, so the scatter-add
+    # is the bitwise OR even when sources collide on a (shard, vertex, word)
+    bits = jnp.uint32(1) << (lanes % 32).astype(jnp.uint32)
+    words0 = jnp.zeros((S, per, W), jnp.uint32) \
+        .at[owner, local, lanes // 32].add(bits)
+    level0 = jnp.full((S, B, per), -1, jnp.int32) \
+        .at[owner, lanes, local].set(0)
+    state0 = {"seen": words0, "level": level0}
     out = engine.run_batched_distributed(
-        g, att, mesh, msbfs_program(B), state0, jnp.asarray(words0),
+        g, att, mesh, msbfs_program(B), state0, words0,
         axis=axis, max_iters=max_levels,
         push_edge_capacity=push_edge_capacity, return_stats=return_stats)
     if return_stats:

@@ -59,16 +59,22 @@ def cc_program() -> engine.VertexProgram:
 
 def connected_components(csr: CSR, *, max_iters: Optional[int] = None,
                          symmetrize_input: bool = True,
-                         mode: str = "auto") -> jnp.ndarray:
-    """Returns (n,) int32 — each vertex's component id (its min member id)."""
+                         mode: str = "auto", return_stats: bool = False):
+    """Returns (n,) int32 — each vertex's component id (its min member id).
+    ``return_stats`` adds the ExecutionCore's {'iters', 'pushes', 'pulls'}
+    direction trace (dense first sweeps, sparse boundary tail)."""
     g = symmetrize(csr) if symmetrize_input else csr
     n = g.n_rows
     max_iters = max_iters if max_iters is not None else n
     state0 = {"label": jnp.arange(n, dtype=jnp.int32)}
     frontier0 = jnp.ones((n,), jnp.int32)
-    state = engine.run(g, cc_program(), state0, frontier0,
-                       max_iters=max_iters, mode=mode)
-    return state["label"]
+    out = engine.run(g, cc_program(), state0, frontier0,
+                     max_iters=max_iters, mode=mode,
+                     return_stats=return_stats)
+    if return_stats:
+        state, stats = out
+        return state["label"], stats
+    return out["label"]
 
 
 def connected_components_distributed(g: ShardedGraph, att: ATT, mesh: Mesh, *,

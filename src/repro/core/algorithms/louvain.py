@@ -146,33 +146,21 @@ def modularity(csr: CSR, labels: jnp.ndarray) -> jnp.ndarray:
 # Compiled shard_map callables are cached per structural signature: the
 # multilevel drivers call these once per sweep, and re-tracing/compiling an
 # identical program every sweep dominates wall clock on a forced-multi-device
-# host.  Keyed by mesh (hashable), axis, the ATT semantics and edge padding.
-# FIFO-bounded: every level of every graph is a distinct key, so an unbounded
-# dict would pin one compiled executable (plus its mesh/ATT closure) per
-# level forever in a long-lived process.
-_MAPPED_CACHE: dict = {}
-_MAPPED_CACHE_MAX = 64
-
-
-def _att_key(att: ATT):
-    return (att.kind, att.n_global, att.n_shards,
-            tuple(np.asarray(att.boundaries).tolist()))
+# host.  The cache itself is the ExecutionCore's (`engine.cached_mapped`,
+# DESIGN.md §14) — one keying scheme (mesh, axis, ATT semantics, structural
+# signature) for the engine's distributed placements and these sweeps alike.
+# `louvain._MAPPED_CACHE` resolves to the shared store (kept for §11 docs and
+# tooling; lazy because engine is mid-import when this module loads).
+def __getattr__(name):
+    if name == "_MAPPED_CACHE":
+        return engine._MAPPED_CACHE
+    raise AttributeError(name)
 
 
 def _cached_mapped(kind: str, mesh, axis, att: ATT, m: int, build):
-    try:
-        hash(mesh)
-        mesh_key = mesh
-    except TypeError:
-        mesh_key = id(mesh)
-    key = (kind, mesh_key, axis if isinstance(axis, str) else tuple(axis),
-           _att_key(att), m)
-    fn = _MAPPED_CACHE.get(key)
-    if fn is None:
-        while len(_MAPPED_CACHE) >= _MAPPED_CACHE_MAX:
-            _MAPPED_CACHE.pop(next(iter(_MAPPED_CACHE)))
-        fn = _MAPPED_CACHE[key] = build()
-    return fn
+    return engine.cached_mapped(
+        (kind, engine._mesh_key(mesh), engine._axis_key(axis),
+         engine._att_key(att), m), build)
 
 
 def modularity_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,

@@ -80,12 +80,13 @@ def ppr(csr: CSR, source: int, *, damping: float = 0.85,
 
 
 def ppr_batched(csr: CSR, sources, *, damping: float = 0.85,
-                iters: int = 20) -> jnp.ndarray:
+                iters: int = 20, return_stats: bool = False):
     """Personalized PageRank for B sources in one engine pass; (B, n) f32.
 
     Row b is bit-identical to ``ppr(csr, sources[b])``: the vmapped lanes
     share each dense edge scan (PageRank never leaves the pull regime) but
-    personalize the restart vector per lane via the state.
+    personalize the restart vector per lane via the state.  ``return_stats``
+    adds the ExecutionCore's {'iters', 'pushes', 'pulls'} trace.
     """
     n = csr.n_rows
     src = jnp.asarray(sources, jnp.int32)
@@ -93,16 +94,29 @@ def ppr_batched(csr: CSR, sources, *, damping: float = 0.85,
     r = jnp.zeros((B, n), jnp.float32).at[jnp.arange(B), src].set(1.0)
     state0 = {"x": r, "r": r}
     frontier0 = jnp.ones((B, n), jnp.int32)
-    return engine.run_batched(csr, ppr_program(csr, damping), state0,
-                              frontier0, max_iters=iters, mode="pull")["x"]
+    out = engine.run_batched(csr, ppr_program(csr, damping), state0,
+                             frontier0, max_iters=iters, mode="pull",
+                             return_stats=return_stats)
+    if return_stats:
+        state, stats = out
+        return state["x"], stats
+    return out["x"]
 
 
 def ppr_topk(csr: CSR, sources, k: int, *, damping: float = 0.85,
-             iters: int = 20) -> tuple[jnp.ndarray, jnp.ndarray]:
+             iters: int = 20,
+             return_stats: bool = False):
     """Top-k PPR per source: (scores (B, k), vertex ids (B, k)) — the
-    service layer's PPR query shape."""
-    x = ppr_batched(csr, sources, damping=damping, iters=iters)
+    service layer's PPR query shape.  ``return_stats`` appends the
+    ExecutionCore's level trace (all pulls: PPR never leaves the dense
+    regime), so the serving ledger can price PPR batches from the measured
+    run like the traversal kinds."""
+    out = ppr_batched(csr, sources, damping=damping, iters=iters,
+                      return_stats=return_stats)
+    x, stats = out if return_stats else (out, None)
     vals, idx = lax.top_k(x, k)
+    if return_stats:
+        return vals, idx.astype(jnp.int32), stats
     return vals, idx.astype(jnp.int32)
 
 

@@ -159,12 +159,15 @@ def sssp_batched(csr: CSR, sources, *, delta: Optional[float] = None,
 
 def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
                              *, axis=None, delta: float = 1.0,
-                             max_iters: int = 256) -> jnp.ndarray:
+                             max_iters: int = 256,
+                             return_stats: bool = False):
     """Batched distances stacked (S, B, per_shard) under `att`; slice
     ``[:, b, :]`` matches ``sssp_distributed(g, att, sources[b], mesh,
     delta=delta)`` — all B lanes' remote atomic-min relaxations share each
     level's compacted exchange, and the per-lane bucket bounds are agreed
-    with one (lane-batched) collective min."""
+    with one (lane-batched) collective min.  ``return_stats`` adds the
+    engine's {'iters', 'pushes', 'pulls', 'fallbacks'} trace (the service
+    layer's route-byte model input)."""
     axis = axis if axis is not None else mesh.axis_names[0]
     ax = axis if isinstance(axis, str) else tuple(axis)
     S, per = att.n_shards, att.per_shard
@@ -180,10 +183,14 @@ def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
         "bound": jnp.full((S, B), delta, jnp.float32),
     }
     frontier0 = jnp.zeros((S, B, per), jnp.int32).at[owner, lanes, local].set(1)
-    state = engine.run_batched_distributed(g, att, mesh, prog, state0,
-                                           frontier0, axis=axis,
-                                           max_iters=max_iters)
-    return state["dist"]
+    out = engine.run_batched_distributed(g, att, mesh, prog, state0,
+                                         frontier0, axis=axis,
+                                         max_iters=max_iters,
+                                         return_stats=return_stats)
+    if return_stats:
+        state, stats = out
+        return state["dist"], stats
+    return out["dist"]
 
 
 def sssp_distributed(g: ShardedGraph, att: ATT, source: int, mesh: Mesh, *,

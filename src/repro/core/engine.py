@@ -3,13 +3,26 @@
 Every frontier algorithm in this repo (BFS, PageRank, SpMV-as-one-step, SSSP,
 connected components) is the same loop: per-vertex *messages* flow along edges
 and are combined at the destination, then a per-vertex *update* produces the
-next state and the next frontier.  This module owns that loop once — frontier
-representation, push/pull direction choice, and (for the distributed case) the
-``shard_map``/ATT plumbing — so the algorithms shrink to small
-:class:`VertexProgram` definitions, the paper's "programmable offload" story:
-the hardware-ish machinery (DMA gather, remote atomics, collectives, queues)
-is shared and the application supplies only the little per-edge/per-vertex
-functions.
+next state and the next frontier.  This module owns that loop **once** — as
+the :class:`ExecutionCore` (DESIGN.md §14): a single stepping loop
+(:func:`_core_loop`) parameterized by two orthogonal axes,
+
+* **lane representation** — ``scalar`` (one traversal), ``valued`` (B
+  concurrent traversals as vmapped (B, n) lanes), ``packed`` (B boolean
+  traversals bit-packed into (n, ceil(B/32)) uint32 words, MS-BFS style);
+* **placement** — ``local`` (one device) or shard_map-``distributed``
+  (stacked (S, ...) operands, owner-routed exchanges, globally-agreed
+  branches), sharing one ``_MAPPED_CACHE`` keying scheme with the algorithm
+  layer (louvain's compiled sweeps).
+
+The five public runners — :func:`run`, :func:`run_batched`,
+:func:`run_distributed`, :func:`run_batched_distributed`, :func:`run_queue` —
+are thin wrappers that pick a point in that grid (``run_queue`` is the
+queue-program family: its per-iteration body is its own, but it shares the
+compaction, routing and shard_map plumbing).  The algorithms supply only the
+little per-edge/per-vertex functions — the paper's "programmable offload"
+story: the hardware-ish machinery (DMA gather, remote atomics, collectives,
+queues) is shared.
 
 Semiring-lite model.  A program computes, per iteration::
 
@@ -44,9 +57,10 @@ Direction optimization (Beamer-style, re-expressed for bulk arrays):
   combine at dst): work ∝ |E| but with no compaction overhead and perfectly
   vectorized.
 
-The switch is a ``lax.cond`` on the frontier population count — globally
-reduced with :func:`offload.hierarchical_psum` in the distributed engine so
-all shards take the same branch.
+The switch is a ``lax.cond`` on the frontier population count — carried
+through the core loop, and globally reduced with
+:func:`offload.hierarchical_psum` under the distributed placement so all
+shards take the same branch.
 
 When the program's combine is ``add``, both directions can instead run on the
 BBCSR Pallas machinery (``kernels/spmv_dma.py``): the dense step is the SpMV
@@ -75,17 +89,19 @@ from .algorithms.distgraph import ShardedGraph
 AxisName = Union[str, Sequence[str]]
 
 __all__ = [
-    "VertexProgram", "run", "run_distributed", "spmv_pass",
+    "VertexProgram", "ExecutionCore", "run", "run_distributed", "spmv_pass",
     "build_pull_operand", "tile_active", "sample_neighbors",
     "QueueProgram", "run_queue", "frontier_edge_capacity",
     "Hierarchy", "run_multilevel",
     "run_batched", "run_batched_distributed",
     "lane_words", "pack_lanes", "unpack_lanes",
+    "cached_mapped",
 ]
 
 _COMBINE_IDENTITY = {"add": 0.0, "min": float("inf"), "max": float("-inf"),
                      "or": 0}
 _STRUCTURED_COMBINES = ("argmax_weighted", "sample")
+_LANE_REPS = ("scalar", "valued", "packed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,7 +242,7 @@ def tile_active(bb: BBCSR, frontier: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Local engine
+# Per-level step primitives (local placement)
 # ---------------------------------------------------------------------------
 
 def _gather_rows(indptr, indices, vals, ids, k):
@@ -379,92 +395,106 @@ def sample_neighbors(csr: CSR, queries: jnp.ndarray, key: jax.Array, *,
     return jnp.where((deg > 0) & (q >= 0), nbr, q)
 
 
-def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
-        max_iters: int, mode: str = "auto", push_capacity: Optional[int] = None,
-        kernel_bb: Optional[BBCSR] = None, interpret: Optional[bool] = None,
-        key: Optional[jax.Array] = None, return_stats: bool = False):
-    """Run `prog` to frontier exhaustion (or `max_iters`).
+# ---------------------------------------------------------------------------
+# ExecutionCore: THE stepping loop (DESIGN.md §14)
+# ---------------------------------------------------------------------------
 
-    mode: 'auto' (direction-optimizing), 'push' (always sparse), 'pull'
-      (always dense).  'auto' switches on the frontier population count:
-      sparse while it fits `push_capacity` (default n/32), dense otherwise.
-    kernel_bb: BBCSR of A^T (see `build_pull_operand`) — routes both
-      directions through the Pallas SpMV/SpMSpV kernels (combine='add' only).
-    key: PRNG key, required for combine='sample' (folded per iteration).
-    return_stats: also return {'iters', 'pushes', 'pulls'} taken.
+@dataclasses.dataclass(frozen=True)
+class ExecutionCore:
+    """One fully-lowered point of the (lane representation × placement) grid.
+
+    The public runners *plan* (build these four callables), the core *steps*
+    (the single :func:`_core_loop` below), the runners *finish* (unpack
+    state/stats).  Fields:
+
+      msg:    (state, frontier) -> messages — lane-axis handling baked in
+              (vmapped for valued lanes, direct for scalar/packed).
+      step:   (msg, frontier, alive, it_key) -> (acc, was_push, fallback) —
+              the per-level direction decision plus the placement's
+              dense/sparse (local) or push/pull (distributed) step.
+              ``alive`` is the carried global active count, so the decision
+              is one comparison, not a fresh reduction.
+      update: (state, acc, frontier, it) -> (state, next_frontier).
+      count:  frontier -> int32 global active count (psum'd under the
+              distributed placement so every shard agrees).
     """
-    if mode not in ("auto", "push", "pull"):
-        raise ValueError(f"mode must be 'auto', 'push' or 'pull', got {mode!r}")
-    if prog.combine == "or":
-        raise ValueError("combine='or' is the batched bitwise combine: run it "
-                         "through run_batched")
-    if prog.combine == "sample" and key is None:
-        raise ValueError("combine='sample' draws keyed priorities: pass key=")
-    n = csr.n_rows
-    rows, cols = csr.row_ids(), csr.indices
-    vals = csr.values
-    if prog.edge_op == "copy":
-        vals = None
-    elif vals is None:
-        vals = jnp.ones_like(csr.indices, jnp.float32)
-    k = _max_degree(csr.indptr) if mode != "pull" else 1
-    if push_capacity is None:
-        push_capacity = n if mode == "push" else max(1, n // 32)
-    C = min(push_capacity, n)
-    if kernel_bb is not None:
-        _check_kernel_operand(prog, kernel_bb)
 
-    def dense(msg, frontier, it_key):
-        if kernel_bb is not None:
-            from ..kernels import ops as kops
-            if prog.combine == "add":
-                return kops.spmv_dma(kernel_bb, msg, interpret=interpret)[:n]
-            # min/max: the SpMSpV kernel with every tile active is the dense
-            # pass (there is no separate dense-combine kernel)
-            all_active = jnp.ones((kernel_bb.n_tiles,), jnp.int32)
-            return kops.spmspv_dma(kernel_bb, msg, all_active,
-                                   combine=prog.combine,
-                                   interpret=interpret)[:n]
-        return _dense_step(rows, cols, vals, msg, n, prog, it_key)
+    msg: Callable
+    step: Callable
+    update: Callable
+    count: Callable
 
-    def sparse(msg, frontier, it_key):
-        if kernel_bb is not None:
-            from ..kernels import ops as kops
-            return kops.spmspv_dma(kernel_bb, msg, tile_active(kernel_bb, frontier),
-                                   combine=prog.combine, interpret=interpret)[:n]
-        return _sparse_step(csr.indptr, csr.indices, vals, msg, frontier,
-                            n, C, k, prog, it_key)
+
+def _lane_ops(prog: VertexProgram, lanes: str):
+    """The lane-representation axis: how msg/update see the lane dim and how
+    a frontier collapses to the per-vertex union indicator."""
+    if lanes not in _LANE_REPS:
+        raise ValueError(f"unknown lane representation {lanes!r}")
+    if lanes == "valued":
+        return (jax.vmap(prog.msg_fn),
+                jax.vmap(prog.update_fn, in_axes=(0, 0, 0, None)),
+                lambda f: (f > 0).any(axis=0))
+    if lanes == "packed":
+        return prog.msg_fn, prog.update_fn, lambda f: (f != 0).any(axis=-1)
+    return prog.msg_fn, prog.update_fn, lambda f: f
+
+
+def _core_loop(core: ExecutionCore, state0: Any, frontier0: jnp.ndarray, *,
+               max_iters: int, key: Optional[jax.Array] = None):
+    """Run an :class:`ExecutionCore` to frontier exhaustion (or `max_iters`).
+
+    This is the engine's only stepping loop (`scripts/check_single_core.py`
+    guards that it stays that way): every public frontier runner lowers to
+    it.  The carry holds the active-population count so the level's
+    direction decision and the termination test share one reduction per
+    iteration.  Returns ``(state, stats)`` with stats =
+    {'iters', 'pushes', 'pulls', 'fallbacks'} (int32 scalars; wrappers drop
+    the keys their placement cannot produce).
+    """
 
     def cond(carry):
-        state, frontier, it, _, _ = carry
-        return jnp.logical_and(jnp.any(frontier), it < max_iters)
+        _, _, it, alive, _ = carry
+        return jnp.logical_and(alive > 0, it < max_iters)
 
     def body(carry):
-        state, frontier, it, n_push, n_pull = carry
-        msg = prog.msg_fn(state, frontier)
+        state, frontier, it, alive, (n_push, n_pull, n_fb) = carry
+        msg = core.msg(state, frontier)
         it_key = jax.random.fold_in(key, it) if key is not None else None
-        if mode == "pull":
-            acc, was_push = dense(msg, frontier, it_key), jnp.int32(0)
-        else:
-            # 'push' too: a frontier over C would be silently truncated by
-            # the size=C nonzero, so oversized levels fall back to dense
-            # (with push's default C=n the fallback never fires)
-            small = frontier.astype(jnp.int32).sum() <= C
-            acc = lax.cond(small, lambda: sparse(msg, frontier, it_key),
-                           lambda: dense(msg, frontier, it_key))
-            was_push = small.astype(jnp.int32)
-        state, frontier = prog.update_fn(state, acc, frontier, it)
-        return state, frontier, it + 1, n_push + was_push, n_pull + (1 - was_push)
+        acc, was_push, fb = core.step(msg, frontier, alive, it_key)
+        state, frontier = core.update(state, acc, frontier, it)
+        return (state, frontier, it + 1, core.count(frontier),
+                (n_push + was_push, n_pull + (1 - was_push), n_fb + fb))
 
-    carry0 = (state0, frontier0, jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    state, _, it, n_push, n_pull = lax.while_loop(cond, body, carry0)
-    if return_stats:
-        return state, {"iters": it, "pushes": n_push, "pulls": n_pull}
-    return state
+    zero = jnp.int32(0)
+    carry0 = (state0, frontier0, zero, core.count(frontier0),
+              (zero, zero, zero))
+    state, _, it, _, (n_push, n_pull, n_fb) = lax.while_loop(cond, body,
+                                                             carry0)
+    return state, {"iters": it, "pushes": n_push, "pulls": n_pull,
+                   "fallbacks": n_fb}
+
+
+def _direction_step(dense, sparse, mode: str, threshold):
+    """The shared direction-switch plumbing: 'pull' always takes the dense
+    step; 'push'/'auto' take the sparse step while the carried active count
+    fits ``threshold`` (a frontier over the push capacity would be silently
+    truncated by the size=C nonzero, so oversized levels fall back to dense —
+    with push's default capacity C=n the fallback never fires)."""
+    if mode == "pull":
+        def step(msg, frontier, alive, it_key):
+            return dense(msg, frontier, it_key), jnp.int32(0), jnp.int32(0)
+        return step
+
+    def step(msg, frontier, alive, it_key):
+        small = alive <= threshold
+        acc = lax.cond(small, lambda: sparse(msg, frontier, it_key),
+                       lambda: dense(msg, frontier, it_key))
+        return acc, small.astype(jnp.int32), jnp.int32(0)
+    return step
 
 
 # ---------------------------------------------------------------------------
-# Batched multi-source execution (B concurrent traversals, one edge scan)
+# Local placement
 # ---------------------------------------------------------------------------
 
 _DST_SORTED_CACHE: dict = {}
@@ -498,6 +528,154 @@ def _dst_sorted_stream(csr: CSR):
             pass  # un-weakrefable: skip caching rather than leak
     return jnp.asarray(hit[1]), jnp.asarray(hit[2])
 
+
+def _local_core(csr: CSR, prog: VertexProgram, lanes: str, *, mode: str,
+                C: int, k: int, kernel_bb: Optional[BBCSR],
+                interpret) -> ExecutionCore:
+    """Plan the local placement: lower (prog, lanes, mode) to an
+    :class:`ExecutionCore` whose dense/sparse steps run on this device."""
+    msg_of, update, union = _lane_ops(prog, lanes)
+    n = csr.n_rows
+    rows, cols = csr.row_ids(), csr.indices
+    vals = csr.values
+    if prog.edge_op == "copy":
+        vals = None
+    elif vals is None:
+        vals = jnp.ones_like(csr.indices, jnp.float32)
+    if lanes == "packed":
+        p_src, p_dst = _dst_sorted_stream(csr)
+
+    if lanes == "scalar":
+        def dense(msg, frontier, it_key):
+            if kernel_bb is not None:
+                from ..kernels import ops as kops
+                if prog.combine == "add":
+                    return kops.spmv_dma(kernel_bb, msg,
+                                         interpret=interpret)[:n]
+                # min/max: the SpMSpV kernel with every tile active is the
+                # dense pass (there is no separate dense-combine kernel)
+                all_active = jnp.ones((kernel_bb.n_tiles,), jnp.int32)
+                return kops.spmspv_dma(kernel_bb, msg, all_active,
+                                       combine=prog.combine,
+                                       interpret=interpret)[:n]
+            return _dense_step(rows, cols, vals, msg, n, prog, it_key)
+
+        def sparse(msg, frontier, it_key):
+            if kernel_bb is not None:
+                from ..kernels import ops as kops
+                return kops.spmspv_dma(kernel_bb, msg,
+                                       tile_active(kernel_bb, frontier),
+                                       combine=prog.combine,
+                                       interpret=interpret)[:n]
+            return _sparse_step(csr.indptr, csr.indices, vals, msg, frontier,
+                                n, C, k, prog, it_key)
+
+    elif lanes == "packed":
+        def dense(msg, frontier, it_key):
+            return offload.segment_or(p_dst, jnp.take(msg, p_src, axis=0), n,
+                                      presorted=True)
+
+        def sparse(msg, frontier, it_key):
+            ids, = jnp.nonzero(union(frontier), size=C, fill_value=-1)
+            ecols, _, valid, _ = _gather_rows(csr.indptr, csr.indices, vals,
+                                              ids, k)
+            safe = jnp.maximum(ids, 0)
+            idx = jnp.where(valid, ecols, -1).reshape(-1)       # (C*k,)
+            em = jnp.take(msg, safe, axis=0)                    # (C, W)
+            words = jnp.broadcast_to(em[:, None, :], (C, k, em.shape[1]))
+            return offload.segment_or(idx, words.reshape(C * k, -1), n)
+
+    else:  # valued
+        def dense(msg, frontier, it_key):
+            if kernel_bb is not None:
+                return _kernel_lanes(kernel_bb, msg, prog,
+                                     jnp.ones((kernel_bb.n_tiles,), jnp.int32),
+                                     interpret)
+            em = jnp.take(msg, rows, axis=1)                    # (B, m)
+            ev = _apply_edge(em, vals[None, :], prog.edge_op) \
+                if vals is not None else em
+            if prog.combine == "add":
+                return jax.ops.segment_sum(ev.T, cols, num_segments=n).T
+            acc = jnp.full((n, ev.shape[0]), prog.ident, msg.dtype)
+            return _scatter_combine(acc, cols, ev.T, prog.combine,
+                                    prog.ident).T
+
+        def sparse(msg, frontier, it_key):
+            if kernel_bb is not None:
+                uf = union(frontier).astype(jnp.int32)
+                return _kernel_lanes(kernel_bb, msg, prog,
+                                     tile_active(kernel_bb, uf), interpret)
+            ids, = jnp.nonzero(union(frontier), size=C, fill_value=-1)
+            ecols, w, valid, _ = _gather_rows(csr.indptr, csr.indices, vals,
+                                              ids, k)
+            safe = jnp.maximum(ids, 0)
+            idx = jnp.where(valid, ecols, -1).reshape(-1)       # (C*k,)
+            em = jnp.take(msg, safe, axis=1)                    # (B, C)
+            contrib = _apply_edge(em[:, :, None], w[None, :, :], prog.edge_op) \
+                if prog.edge_op != "copy" else jnp.broadcast_to(
+                    em[:, :, None], (em.shape[0], C, k))
+            contrib = jnp.where(valid[None, :, :], contrib,
+                                jnp.asarray(prog.ident, msg.dtype))
+            B = em.shape[0]
+            acc = jnp.full((n, B), prog.ident, msg.dtype)
+            return _scatter_combine(acc, idx, contrib.reshape(B, C * k).T,
+                                    prog.combine, prog.ident).T
+
+    return ExecutionCore(
+        msg=msg_of, step=_direction_step(dense, sparse, mode, C),
+        update=update,
+        count=lambda f: union(f).astype(jnp.int32).sum())
+
+
+def _run_local(csr: CSR, prog: VertexProgram, lanes: str, state0, frontier0,
+               *, max_iters, mode, push_capacity, kernel_bb, interpret, key,
+               return_stats):
+    """Shared local wrapper: validate, plan a local ExecutionCore, loop."""
+    if mode not in ("auto", "push", "pull"):
+        raise ValueError(f"mode must be 'auto', 'push' or 'pull', got {mode!r}")
+    n = csr.n_rows
+    k = _max_degree(csr.indptr) if mode != "pull" else 1
+    if push_capacity is None:
+        push_capacity = n if mode == "push" else max(1, n // 32)
+    C = min(push_capacity, n)
+    if kernel_bb is not None:
+        _check_kernel_operand(prog, kernel_bb)
+    core = _local_core(csr, prog, lanes, mode=mode, C=C, k=k,
+                       kernel_bb=kernel_bb, interpret=interpret)
+    state, stats = _core_loop(core, state0, frontier0, max_iters=max_iters,
+                              key=key)
+    if return_stats:
+        return state, {k_: stats[k_] for k_ in ("iters", "pushes", "pulls")}
+    return state
+
+
+def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
+        max_iters: int, mode: str = "auto", push_capacity: Optional[int] = None,
+        kernel_bb: Optional[BBCSR] = None, interpret: Optional[bool] = None,
+        key: Optional[jax.Array] = None, return_stats: bool = False):
+    """Run `prog` to frontier exhaustion (or `max_iters`).
+
+    The (scalar lanes, local placement) point of the ExecutionCore grid.
+
+    mode: 'auto' (direction-optimizing), 'push' (always sparse), 'pull'
+      (always dense).  'auto' switches on the frontier population count:
+      sparse while it fits `push_capacity` (default n/32), dense otherwise.
+    kernel_bb: BBCSR of A^T (see `build_pull_operand`) — routes both
+      directions through the Pallas SpMV/SpMSpV kernels (combine='add' only).
+    key: PRNG key, required for combine='sample' (folded per iteration).
+    return_stats: also return {'iters', 'pushes', 'pulls'} taken.
+    """
+    if prog.combine == "or":
+        raise ValueError("combine='or' is the batched bitwise combine: run it "
+                         "through run_batched")
+    if prog.combine == "sample" and key is None:
+        raise ValueError("combine='sample' draws keyed priorities: pass key=")
+    return _run_local(csr, prog, "scalar", state0, frontier0,
+                      max_iters=max_iters, mode=mode,
+                      push_capacity=push_capacity, kernel_bb=kernel_bb,
+                      interpret=interpret, key=key, return_stats=return_stats)
+
+
 def run_batched(csr: CSR, prog: VertexProgram, state0: Any,
                 frontier0: jnp.ndarray, *, max_iters: int, mode: str = "auto",
                 push_capacity: Optional[int] = None,
@@ -505,12 +683,13 @@ def run_batched(csr: CSR, prog: VertexProgram, state0: Any,
                 interpret: Optional[bool] = None, return_stats: bool = False):
     """Run ``prog`` for a *batch* of sources in one pass over the graph.
 
-    PIUMA hides latency by keeping many traversals in flight per core; the
-    bulk-array re-expression is MS-BFS-style lane batching: per iteration the
-    engine scans the edges touched by the **union frontier** once and carries
-    all B lanes' payloads through that single scan, so the irregular-access
-    cost (gathers, compaction, routing) is amortized B ways.  Two lane
-    representations:
+    The (valued | packed lanes, local placement) points of the ExecutionCore
+    grid.  PIUMA hides latency by keeping many traversals in flight per core;
+    the bulk-array re-expression is MS-BFS-style lane batching: per iteration
+    the engine scans the edges touched by the **union frontier** once and
+    carries all B lanes' payloads through that single scan, so the
+    irregular-access cost (gathers, compaction, routing) is amortized B ways.
+    Two lane representations:
 
     * ``combine='or'`` — **bit-packed boolean lanes**: frontier and messages
       are (n, W) uint32 words, W = ceil(B/32); the destination combine is a
@@ -533,113 +712,18 @@ def run_batched(csr: CSR, prog: VertexProgram, state0: Any,
     Returns the final state (leaves (B, n)); ``return_stats`` adds
     {'iters', 'pushes', 'pulls'}.
     """
-    if mode not in ("auto", "push", "pull"):
-        raise ValueError(f"mode must be 'auto', 'push' or 'pull', got {mode!r}")
     if prog.structured:
         raise NotImplementedError(
             "structured combines are not lane-batched: sampling is already "
             "batch-shaped (sample_neighbors), label modes are one-shot")
     packed = prog.combine == "or"
-    n = csr.n_rows
-    rows, cols = csr.row_ids(), csr.indices
-    vals = csr.values
-    if prog.edge_op == "copy":
-        vals = None
-    elif vals is None:
-        vals = jnp.ones_like(csr.indices, jnp.float32)
-    k = _max_degree(csr.indptr) if mode != "pull" else 1
-    if push_capacity is None:
-        push_capacity = n if mode == "push" else max(1, n // 32)
-    C = min(push_capacity, n)
-    if kernel_bb is not None:
-        if packed:
-            raise ValueError("the Pallas path carries f32 payloads: bit-packed"
-                             " 'or' lanes have no kernel combine")
-        _check_kernel_operand(prog, kernel_bb)
-    if packed:
-        p_src, p_dst = _dst_sorted_stream(csr)
-
-    def union(frontier):
-        if packed:
-            return (frontier != 0).any(axis=1)
-        return (frontier > 0).any(axis=0)
-
-    def dense(msg, frontier):
-        if packed:
-            return offload.segment_or(p_dst, jnp.take(msg, p_src, axis=0), n,
-                                      presorted=True)
-        if kernel_bb is not None:
-            return _kernel_lanes(kernel_bb, msg, prog,
-                                 jnp.ones((kernel_bb.n_tiles,), jnp.int32),
-                                 interpret)
-        em = jnp.take(msg, rows, axis=1)                       # (B, m)
-        ev = _apply_edge(em, vals[None, :], prog.edge_op) if vals is not None \
-            else em
-        if prog.combine == "add":
-            return jax.ops.segment_sum(ev.T, cols, num_segments=n).T
-        acc = jnp.full((n, ev.shape[0]), prog.ident, msg.dtype)
-        return _scatter_combine(acc, cols, ev.T, prog.combine, prog.ident).T
-
-    def sparse(msg, frontier):
-        if kernel_bb is not None:
-            uf = union(frontier).astype(jnp.int32)
-            return _kernel_lanes(kernel_bb, msg, prog,
-                                 tile_active(kernel_bb, uf), interpret)
-        ids, = jnp.nonzero(union(frontier), size=C, fill_value=-1)
-        ecols, w, valid, _ = _gather_rows(
-            csr.indptr, csr.indices, vals, ids, k)
-        safe = jnp.maximum(ids, 0)
-        idx = jnp.where(valid, ecols, -1).reshape(-1)          # (C*k,)
-        if packed:
-            em = jnp.take(msg, safe, axis=0)                   # (C, W)
-            words = jnp.broadcast_to(em[:, None, :],
-                                     (C, k, em.shape[1]))
-            return offload.segment_or(idx, words.reshape(C * k, -1), n)
-        em = jnp.take(msg, safe, axis=1)                       # (B, C)
-        contrib = _apply_edge(em[:, :, None], w[None, :, :], prog.edge_op) \
-            if prog.edge_op != "copy" else jnp.broadcast_to(
-                em[:, :, None], (em.shape[0], C, k))
-        contrib = jnp.where(valid[None, :, :], contrib,
-                            jnp.asarray(prog.ident, msg.dtype))
-        B = em.shape[0]
-        acc = jnp.full((n, B), prog.ident, msg.dtype)
-        return _scatter_combine(acc, idx, contrib.reshape(B, C * k).T,
-                                prog.combine, prog.ident).T
-
-    def msg_of(state, frontier):
-        if packed:
-            return prog.msg_fn(state, frontier)
-        return jax.vmap(prog.msg_fn)(state, frontier)
-
-    def update(state, acc, frontier, it):
-        if packed:
-            return prog.update_fn(state, acc, frontier, it)
-        return jax.vmap(prog.update_fn, in_axes=(0, 0, 0, None))(
-            state, acc, frontier, it)
-
-    def cond(carry):
-        state, frontier, it, _, _ = carry
-        return jnp.logical_and(jnp.any(frontier != 0), it < max_iters)
-
-    def body(carry):
-        state, frontier, it, n_push, n_pull = carry
-        msg = msg_of(state, frontier)
-        if mode == "pull":
-            acc, was_push = dense(msg, frontier), jnp.int32(0)
-        else:
-            small = union(frontier).astype(jnp.int32).sum() <= C
-            acc = lax.cond(small, lambda: sparse(msg, frontier),
-                           lambda: dense(msg, frontier))
-            was_push = small.astype(jnp.int32)
-        state, frontier = update(state, acc, frontier, it)
-        return (state, frontier, it + 1, n_push + was_push,
-                n_pull + (1 - was_push))
-
-    carry0 = (state0, frontier0, jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    state, _, it, n_push, n_pull = lax.while_loop(cond, body, carry0)
-    if return_stats:
-        return state, {"iters": it, "pushes": n_push, "pulls": n_pull}
-    return state
+    if kernel_bb is not None and packed:
+        raise ValueError("the Pallas path carries f32 payloads: bit-packed"
+                         " 'or' lanes have no kernel combine")
+    return _run_local(csr, prog, "packed" if packed else "valued", state0,
+                      frontier0, max_iters=max_iters, mode=mode,
+                      push_capacity=push_capacity, kernel_bb=kernel_bb,
+                      interpret=interpret, key=None, return_stats=return_stats)
 
 
 def _kernel_lanes(bb: BBCSR, msg: jnp.ndarray, prog: VertexProgram,
@@ -740,7 +824,7 @@ def run_multilevel(csr: CSR, level_fn: Callable, contract_fn: Callable,
 
 
 # ---------------------------------------------------------------------------
-# Distributed engine (owns the shard_map/ATT boilerplate)
+# Distributed placement (owns the shard_map/ATT boilerplate, once)
 # ---------------------------------------------------------------------------
 
 def _axes_list(axis: AxisName):
@@ -749,6 +833,69 @@ def _axes_list(axis: AxisName):
 
 def _spec(axis: AxisName) -> P:
     return P(axis) if isinstance(axis, str) else P(tuple(axis))
+
+
+def _axis_key(axis: AxisName):
+    return axis if isinstance(axis, str) else tuple(axis)
+
+
+def _mesh_key(mesh):
+    try:
+        hash(mesh)
+        return mesh
+    except TypeError:
+        return id(mesh)
+
+
+def _att_key(att: ATT):
+    return (att.kind, att.n_global, att.n_shards,
+            tuple(np.asarray(att.boundaries).tolist()))
+
+
+_MAPPED_CACHE: dict = {}
+_MAPPED_CACHE_MAX = 64
+
+
+def cached_mapped(key, build, *, ident=None):
+    """One keying scheme for every compiled ``shard_map`` wrapper in the repo
+    — the engine's distributed placements and the algorithm layer's sweeps
+    (louvain) share this cache, so re-tracing never dominates wall clock on
+    forced multi-device hosts.
+
+    ``key`` must capture every *structural* input baked into the closure
+    (mesh, axis, ATT rule, capacities, operand shapes/dtypes, flags);
+    ``ident`` guards the parts a tuple key cannot: the entry only hits while
+    ``ident`` is the *same object* (e.g. the VertexProgram whose closures the
+    shard function captured — a rebuilt program rebuilds the wrapper, so a
+    different delta/damping baked into an update_fn can never be served
+    stale).  Entries hold strong refs, bounded FIFO at ``_MAPPED_CACHE_MAX``.
+    """
+    hit = _MAPPED_CACHE.get(key)
+    if hit is not None and hit[0] is ident:
+        return hit[1]
+    while len(_MAPPED_CACHE) >= _MAPPED_CACHE_MAX:
+        _MAPPED_CACHE.pop(next(iter(_MAPPED_CACHE)))
+    fn = build()
+    _MAPPED_CACHE[key] = (ident, fn)
+    return fn
+
+
+def _shard_apply(mesh: Mesh, axis: AxisName, shard_fn, operands, *,
+                 check_rep: bool = False, cache_key=None, ident=None):
+    """The shard_map boilerplate, owned once: spec construction, the
+    stacked-operand in_specs, pytree-broadcast out_specs, and (optionally)
+    the `cached_mapped` wrapper reuse."""
+    spec = _spec(axis)
+
+    def build():
+        # check_rep=False (default): this jax has no replication rule for
+        # while_loop with a psum in its cond; outputs are per-shard anyway.
+        return shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * len(operands),
+                         out_specs=spec, check_rep=check_rep)
+
+    mapped = build() if cache_key is None else cached_mapped(cache_key, build,
+                                                             ident=ident)
+    return mapped(*operands)
 
 
 def frontier_edge_capacity(m: int, switch_frac: float, *,
@@ -775,13 +922,21 @@ def _active_edge_mask(src, frontier, att: ATT):
     return (src >= 0) & (jnp.take(frontier, local_src) > 0)
 
 
+def _compact_slots(valid, cap: int):
+    """Stable compaction order shared by the frontier push (active edges into
+    the routing capacity) and the queue runner (live entries to a prefix):
+    positions of the True entries, in order, padded with -1 to ``cap``."""
+    slots, = jnp.nonzero(valid, size=cap, fill_value=-1)
+    return slots
+
+
 def _compact_active_edges(src, dst, val, active, cap: int):
     """Frontier-proportional payload: keep only the edges the `active` mask
-    names, compacted into ``cap`` slots (`jnp.nonzero`-into-capacity — the
-    distributed analogue of the local push step's frontier extraction).
+    names, compacted into ``cap`` slots (the distributed analogue of the
+    local push step's frontier extraction).
     Returns (src, dst, val) of length ``cap``, padded with src = dst = -1.
     """
-    slots, = jnp.nonzero(active, size=cap, fill_value=-1)
+    slots = _compact_slots(active, cap)
     ssafe = jnp.maximum(slots, 0)
     keep = slots >= 0
     return (jnp.where(keep, jnp.take(src, ssafe), -1),
@@ -791,11 +946,11 @@ def _compact_active_edges(src, dst, val, active, cap: int):
 
 def _push_step_shard(src, dst, val, msg, att: ATT, axis, prog: VertexProgram,
                      capacity: int):
-    """Push: owner of src computes contributions locally, remote-combines at
-    the dst owner (PIUMA remote atomic).  ``capacity`` is the per-peer
-    routing budget — ``_route`` moves O(S * capacity) bytes, so a compacted
-    edge list with a small capacity makes the level's traffic proportional to
-    the active frontier instead of the full edge partition."""
+    """Scalar-lane push: owner of src computes contributions locally,
+    remote-combines at the dst owner (PIUMA remote atomic).  ``capacity`` is
+    the per-peer routing budget — ``_route`` moves O(S * capacity) bytes, so
+    a compacted edge list with a small capacity makes the level's traffic
+    proportional to the active frontier instead of the full edge partition."""
     local_src = jnp.where(src >= 0, att.local(jnp.maximum(src, 0)), 0)
     gidx = jnp.where(src >= 0, dst, -1)
     if prog.structured:
@@ -820,6 +975,65 @@ def _push_step_shard(src, dst, val, msg, att: ATT, axis, prog: VertexProgram,
                                           combine=prog.combine,
                                           identity=prog.ident,
                                           capacity=capacity)
+
+
+def _batched_push_step(att: ATT, axis, prog: VertexProgram, packed: bool):
+    """Lane-batched push: one routed item per active edge carries **all** B
+    lanes (packed words or a trailing valued lane dim) to the dst owner."""
+
+    def push_step(csrc, cdst, cval, msg, cap):
+        gidx = jnp.where(csrc >= 0, cdst, -1)
+        lsrc = jnp.where(csrc >= 0, att.local(jnp.maximum(csrc, 0)), -1)
+        if packed:
+            em = offload.dma_gather(msg, lsrc, fill=0).astype(jnp.uint32)
+            return offload.remote_scatter_or(att.per_shard, gidx, em,
+                                             att, axis, capacity=cap)
+        em = offload.dma_gather(msg.T, lsrc, fill=prog.ident)  # (m, B)
+        ev = _apply_edge(em, cval[:, None], prog.edge_op) \
+            if prog.edge_op != "copy" else em
+        ev = jnp.where((csrc >= 0)[:, None], ev,
+                       jnp.asarray(prog.ident, em.dtype))
+        B = msg.shape[0]
+        if prog.combine == "add":
+            acc = offload.remote_scatter_add(
+                jnp.zeros((att.per_shard, B), msg.dtype), gidx, ev,
+                att, axis, capacity=cap)
+        else:
+            acc = offload.remote_scatter_combine(
+                jnp.full((att.per_shard, B), prog.ident, msg.dtype),
+                gidx, ev, att, axis, combine=prog.combine,
+                identity=prog.ident, capacity=cap)
+        return acc.T                                           # (B, per)
+
+    return push_step
+
+
+def _push_dispatch(push_step, src, dst, val, att: ATT, axes, union,
+                   edge_cap: int, m_fwd: int, compact: bool):
+    """The §7 compaction plumbing, shared by every distributed lane rep:
+    when the globally-agreed active-edge count fits ``edge_cap`` the level
+    routes a compacted edge list at that small capacity; overflowing levels
+    fall back to full-capacity routing (the fallback counter's numerator)."""
+
+    def push(msg, frontier):
+        if not compact:
+            return push_step(src, dst, val, msg, m_fwd), jnp.int32(0)
+        active = _active_edge_mask(src, union(frontier), att)
+        # every shard must take the same branch: reduce the overflow flag
+        over = offload.hierarchical_psum(
+            (active.astype(jnp.int32).sum() > edge_cap
+             ).astype(jnp.int32), axes)
+
+        def compacted():
+            csrc, cdst, cval = _compact_active_edges(src, dst, val, active,
+                                                     edge_cap)
+            return push_step(csrc, cdst, cval, msg, edge_cap)
+
+        acc = lax.cond(over == 0, compacted,
+                       lambda: push_step(src, dst, val, msg, m_fwd))
+        return acc, (over > 0).astype(jnp.int32)
+
+    return push
 
 
 def _pull_step_shard(own, remote, val, msg, att_in: ATT, att_out: ATT, axis,
@@ -862,6 +1076,96 @@ def reverse_graph(csr: CSR, att: ATT) -> ShardedGraph:
     return g_rev
 
 
+def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
+                     prog: VertexProgram, state0: Any, frontier0: jnp.ndarray,
+                     *, lanes: str, axis, max_iters: int, mode: str,
+                     switch_frac: float, push_edge_capacity,
+                     g_rev, return_stats: bool):
+    """Shared distributed wrapper: plan a sharded ExecutionCore and run the
+    single stepping loop inside one shard_map (cached via `cached_mapped`)."""
+    axis = axis if axis is not None else mesh.axis_names[0]
+    axes = _axes_list(axis)
+    switch_count = max(1, int(att.n_global * switch_frac))
+    state_leaves, state_def = jax.tree.flatten(state0)
+    n_state = len(state_leaves)
+    use_rev = g_rev is not None
+    m_fwd = g.edges_per_shard
+    m_rev = g_rev.edges_per_shard if use_rev else 0
+    if push_edge_capacity is None:
+        edge_cap = frontier_edge_capacity(m_fwd, switch_frac)
+    else:
+        edge_cap = int(push_edge_capacity)
+    compact = mode != "pull" and 0 < edge_cap < m_fwd
+
+    def shard_fn(src, dst, val, rsrc, rdst, rval, frontier, *leaves):
+        src, dst, val = src[0], dst[0], val[0]
+        rsrc, rdst, rval = rsrc[0], rdst[0], rval[0]
+        frontier = frontier[0]
+        state = jax.tree.unflatten(state_def, [l[0] for l in leaves])
+        msg_of, update, union = _lane_ops(prog, lanes)
+        if lanes == "scalar":
+            def push_step(s, d, v, msg, cap):
+                return _push_step_shard(s, d, v, msg, att, axis, prog,
+                                        capacity=cap)
+        else:
+            push_step = _batched_push_step(att, axis, prog,
+                                           packed=lanes == "packed")
+        push = _push_dispatch(push_step, src, dst, val, att, axes, union,
+                              edge_cap, m_fwd, compact)
+
+        def pull(msg):
+            # g_rev rows: src = output vertex (owned here), dst = input vertex
+            return _pull_step_shard(rsrc, rdst, rval, msg, att, att, axis,
+                                    prog, capacity=m_rev, gather_mode="dgas")
+
+        if mode == "push":
+            def step(msg, frontier, alive, it_key):
+                acc, fb = push(msg, frontier)
+                return acc, jnp.int32(1), fb
+        elif mode == "pull":
+            def step(msg, frontier, alive, it_key):
+                return pull(msg), jnp.int32(0), jnp.int32(0)
+        else:
+            def step(msg, frontier, alive, it_key):
+                def do_push():
+                    acc, fb = push(msg, frontier)
+                    return acc, jnp.int32(1), fb
+                return lax.cond(
+                    alive <= switch_count, do_push,
+                    lambda: (pull(msg), jnp.int32(0), jnp.int32(0)))
+
+        core = ExecutionCore(
+            msg=msg_of, step=step, update=update,
+            count=lambda f: offload.hierarchical_psum(
+                union(f).astype(jnp.int32).sum(), axes))
+        state, stats = _core_loop(core, state, frontier, max_iters=max_iters)
+        out = tuple(l[None] for l in jax.tree.leaves(state))
+        if return_stats:
+            out = out + tuple(stats[k][None] for k in
+                              ("iters", "pushes", "pulls", "fallbacks"))
+        return out
+
+    if not use_rev:  # placeholder operands keep the shard_map arity static
+        z = jnp.full((att.n_shards, 1), -1, jnp.int32)
+        rsrc, rdst, rval = z, z, jnp.zeros((att.n_shards, 1), jnp.float32)
+    else:
+        rsrc, rdst, rval = g_rev.src, g_rev.dst, g_rev.val
+
+    operands = (g.src, g.dst, g.val, rsrc, rdst, rval, frontier0,
+                *state_leaves)
+    cache_key = ("core", _mesh_key(mesh), _axis_key(axis), _att_key(att),
+                 (lanes, mode, int(max_iters), float(switch_frac), edge_cap,
+                  compact, use_rev, m_fwd, m_rev, return_stats, state_def),
+                 tuple((tuple(x.shape), str(x.dtype)) for x in operands))
+    out = _shard_apply(mesh, axis, shard_fn, operands, cache_key=cache_key,
+                       ident=prog)
+    state = jax.tree.unflatten(state_def, list(out[:n_state]))
+    if return_stats:
+        keys = ("iters", "pushes", "pulls", "fallbacks")
+        return state, dict(zip(keys, out[n_state:]))
+    return state
+
+
 def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                     prog: VertexProgram, state0: Any, frontier0: jnp.ndarray,
                     *, axis: Optional[AxisName] = None, max_iters: int,
@@ -870,6 +1174,9 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                     push_edge_capacity: Optional[int] = None,
                     return_stats: bool = False):
     """Distributed loop; `state0`/`frontier0` are stacked (S, per) per `att`.
+
+    The (scalar lanes, distributed placement) point of the ExecutionCore
+    grid.
 
     mode: 'push' (every level scatters via remote atomics — the seed
       behavior), 'pull' (requires `g_rev`; every level gathers via dgas), or
@@ -893,112 +1200,13 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
     if prog.combine == "or":
         raise ValueError("combine='or' is the batched bitwise combine: run it "
                          "through run_batched_distributed")
-    axis = axis if axis is not None else mesh.axis_names[0]
-    spec = _spec(axis)
-    axes = _axes_list(axis)
     if mode in ("pull", "auto") and g_rev is None:
         raise ValueError(f"mode={mode!r} needs g_rev (see reverse_graph)")
-    switch_count = max(1, int(att.n_global * switch_frac))
-
-    state_leaves, state_def = jax.tree.flatten(state0)
-    n_state = len(state_leaves)
-    use_rev = g_rev is not None
-    m_fwd = g.edges_per_shard
-    m_rev = g_rev.edges_per_shard if use_rev else 0
-    if push_edge_capacity is None:
-        edge_cap = frontier_edge_capacity(m_fwd, switch_frac)
-    else:
-        edge_cap = int(push_edge_capacity)
-    compact = mode != "pull" and 0 < edge_cap < m_fwd
-
-    def shard_fn(src, dst, val, rsrc, rdst, rval, frontier, *leaves):
-        src, dst, val = src[0], dst[0], val[0]
-        rsrc, rdst, rval = rsrc[0], rdst[0], rval[0]
-        frontier = frontier[0]
-        state = jax.tree.unflatten(state_def, [l[0] for l in leaves])
-
-        def push_full(msg):
-            return _push_step_shard(src, dst, val, msg, att, axis, prog,
-                                    capacity=m_fwd)
-
-        def push_compact(msg, active):
-            csrc, cdst, cval = _compact_active_edges(src, dst, val, active,
-                                                     edge_cap)
-            return _push_step_shard(csrc, cdst, cval, msg, att, axis, prog,
-                                    capacity=edge_cap)
-
-        def push(msg, frontier):
-            if not compact:
-                return push_full(msg), jnp.int32(0)
-            active = _active_edge_mask(src, frontier, att)
-            # every shard must take the same branch: reduce the overflow flag
-            over = offload.hierarchical_psum(
-                (active.astype(jnp.int32).sum() > edge_cap
-                 ).astype(jnp.int32), axes)
-            acc = lax.cond(over == 0, lambda: push_compact(msg, active),
-                           lambda: push_full(msg))
-            return acc, (over > 0).astype(jnp.int32)
-
-        def pull(msg):
-            # g_rev rows: src = output vertex (owned here), dst = input vertex
-            return _pull_step_shard(rsrc, rdst, rval, msg, att, att, axis,
-                                    prog, capacity=m_rev, gather_mode="dgas")
-
-        def count(f):
-            # globally-reduced count => every shard sees the same value
-            return offload.hierarchical_psum(f.astype(jnp.int32).sum(), axes)
-
-        def cond(carry):
-            state, frontier, it, alive, _ = carry
-            return jnp.logical_and(alive > 0, it < max_iters)
-
-        def body(carry):
-            state, frontier, it, alive, stats = carry
-            msg = prog.msg_fn(state, frontier)
-            if mode == "push":
-                acc, fb = push(msg, frontier)
-                was_push = jnp.int32(1)
-            elif mode == "pull":
-                acc, fb, was_push = pull(msg), jnp.int32(0), jnp.int32(0)
-            else:
-                acc, fb, was_push = lax.cond(
-                    alive <= switch_count,
-                    lambda: push(msg, frontier) + (jnp.int32(1),),
-                    lambda: (pull(msg), jnp.int32(0), jnp.int32(0)))
-            state, frontier = prog.update_fn(state, acc, frontier, it)
-            n_push, n_pull, n_fb = stats
-            # one collective per level: the new count rides the loop carry
-            return (state, frontier, it + 1, count(frontier),
-                    (n_push + was_push, n_pull + (1 - was_push), n_fb + fb))
-
-        zero = jnp.int32(0)
-        state, frontier, it, _, (n_push, n_pull, n_fb) = lax.while_loop(
-            cond, body,
-            (state, frontier, zero, count(frontier), (zero, zero, zero)))
-        out = tuple(l[None] for l in jax.tree.leaves(state))
-        if return_stats:
-            out = out + tuple(s[None] for s in (it, n_push, n_pull, n_fb))
-        return out
-
-    if not use_rev:  # placeholder operands keep the shard_map arity static
-        z = jnp.full((att.n_shards, 1), -1, jnp.int32)
-        rsrc, rdst, rval = z, z, jnp.zeros((att.n_shards, 1), jnp.float32)
-    else:
-        rsrc, rdst, rval = g_rev.src, g_rev.dst, g_rev.val
-
-    n_in = 7 + n_state
-    n_out = n_state + (4 if return_stats else 0)
-    # check_rep=False: this jax has no replication rule for while_loop with a
-    # psum in its cond; outputs are per-shard anyway (out_specs fully sharded).
-    mapped = shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * n_in,
-                       out_specs=(spec,) * n_out, check_rep=False)
-    out = mapped(g.src, g.dst, g.val, rsrc, rdst, rval, frontier0,
-                 *state_leaves)
-    state = jax.tree.unflatten(state_def, list(out[:n_state]))
-    if return_stats:
-        keys = ("iters", "pushes", "pulls", "fallbacks")
-        return state, dict(zip(keys, out[n_state:]))
-    return state
+    return _run_distributed(g, att, mesh, prog, state0, frontier0,
+                            lanes="scalar", axis=axis, max_iters=max_iters,
+                            mode=mode, switch_frac=switch_frac,
+                            push_edge_capacity=push_edge_capacity,
+                            g_rev=g_rev, return_stats=return_stats)
 
 
 def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
@@ -1010,7 +1218,9 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                             return_stats: bool = False):
     """Distributed batched loop: B concurrent traversals, one push pipeline.
 
-    Lane layouts (leading dim S = shard, matching :func:`run_batched`):
+    The (valued | packed lanes, distributed placement) points of the
+    ExecutionCore grid.  Lane layouts (leading dim S = shard, matching
+    :func:`run_batched`):
 
     * packed (``combine='or'``): frontier0 is (S, per, W) uint32 words and
       the program operates on per-shard (per, W) words directly; the remote
@@ -1038,113 +1248,12 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
             "structured combines are not lane-batched: sampling is already "
             "batch-shaped (sample_neighbors / run_queue)")
     packed = prog.combine == "or"
-    axis = axis if axis is not None else mesh.axis_names[0]
-    spec = _spec(axis)
-    axes = _axes_list(axis)
-    m_fwd = g.edges_per_shard
-    if push_edge_capacity is None:
-        edge_cap = frontier_edge_capacity(m_fwd, switch_frac)
-    else:
-        edge_cap = int(push_edge_capacity)
-    compact = 0 < edge_cap < m_fwd
-    state_leaves, state_def = jax.tree.flatten(state0)
-    n_state = len(state_leaves)
-
-    def shard_fn(src, dst, val, frontier, *leaves):
-        src, dst, val = src[0], dst[0], val[0]
-        frontier = frontier[0]
-        state = jax.tree.unflatten(state_def, [l[0] for l in leaves])
-
-        def union(f):
-            if packed:
-                return (f != 0).any(axis=-1).astype(jnp.int32)
-            return (f > 0).any(axis=0).astype(jnp.int32)
-
-        def msg_of(state, f):
-            if packed:
-                return prog.msg_fn(state, f)              # (per, W) words
-            return jax.vmap(prog.msg_fn)(state, f)        # (B, per)
-
-        def update(state, acc, f, it):
-            if packed:
-                return prog.update_fn(state, acc, f, it)
-            return jax.vmap(prog.update_fn, in_axes=(0, 0, 0, None))(
-                state, acc, f, it)
-
-        def push_with(csrc, cdst, cval, msg, cap):
-            gidx = jnp.where(csrc >= 0, cdst, -1)
-            lsrc = jnp.where(csrc >= 0, att.local(jnp.maximum(csrc, 0)), -1)
-            if packed:
-                em = offload.dma_gather(msg, lsrc, fill=0).astype(jnp.uint32)
-                return offload.remote_scatter_or(att.per_shard, gidx, em,
-                                                 att, axis, capacity=cap)
-            em = offload.dma_gather(msg.T, lsrc, fill=prog.ident)  # (m, B)
-            ev = _apply_edge(em, cval[:, None], prog.edge_op) \
-                if prog.edge_op != "copy" else em
-            ev = jnp.where((csrc >= 0)[:, None], ev,
-                           jnp.asarray(prog.ident, em.dtype))
-            B = msg.shape[0]
-            if prog.combine == "add":
-                acc = offload.remote_scatter_add(
-                    jnp.zeros((att.per_shard, B), msg.dtype), gidx, ev,
-                    att, axis, capacity=cap)
-            else:
-                acc = offload.remote_scatter_combine(
-                    jnp.full((att.per_shard, B), prog.ident, msg.dtype),
-                    gidx, ev, att, axis, combine=prog.combine,
-                    identity=prog.ident, capacity=cap)
-            return acc.T                                   # (B, per)
-
-        def push(msg, f):
-            if not compact:
-                return push_with(src, dst, val, msg, m_fwd), jnp.int32(0)
-            active = _active_edge_mask(src, union(f), att)
-            over = offload.hierarchical_psum(
-                (active.astype(jnp.int32).sum() > edge_cap
-                 ).astype(jnp.int32), axes)
-
-            def compacted():
-                csrc, cdst, cval = _compact_active_edges(src, dst, val,
-                                                         active, edge_cap)
-                return push_with(csrc, cdst, cval, msg, edge_cap)
-
-            acc = lax.cond(over == 0, compacted,
-                           lambda: push_with(src, dst, val, msg, m_fwd))
-            return acc, (over > 0).astype(jnp.int32)
-
-        def count(f):
-            return offload.hierarchical_psum(union(f).sum(), axes)
-
-        def cond(carry):
-            state, f, it, alive, _ = carry
-            return jnp.logical_and(alive > 0, it < max_iters)
-
-        def body(carry):
-            state, f, it, alive, stats = carry
-            msg = msg_of(state, f)
-            acc, fb = push(msg, f)
-            state, f = update(state, acc, f, it)
-            n_push, n_fb = stats
-            return state, f, it + 1, count(f), (n_push + 1, n_fb + fb)
-
-        zero = jnp.int32(0)
-        state, f, it, _, (n_push, n_fb) = lax.while_loop(
-            cond, body, (state, frontier, zero, count(frontier), (zero, zero)))
-        out = tuple(l[None] for l in jax.tree.leaves(state))
-        if return_stats:
-            out = out + tuple(s[None] for s in (it, n_push, zero, n_fb))
-        return out
-
-    n_in = 4 + n_state
-    n_out = n_state + (4 if return_stats else 0)
-    mapped = shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * n_in,
-                       out_specs=(spec,) * n_out, check_rep=False)
-    out = mapped(g.src, g.dst, g.val, frontier0, *state_leaves)
-    state = jax.tree.unflatten(state_def, list(out[:n_state]))
-    if return_stats:
-        keys = ("iters", "pushes", "pulls", "fallbacks")
-        return state, dict(zip(keys, out[n_state:]))
-    return state
+    return _run_distributed(g, att, mesh, prog, state0, frontier0,
+                            lanes="packed" if packed else "valued",
+                            axis=axis, max_iters=max_iters, mode="push",
+                            switch_frac=switch_frac,
+                            push_edge_capacity=push_edge_capacity,
+                            g_rev=None, return_stats=return_stats)
 
 
 def spmv_pass(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,
@@ -1154,7 +1263,6 @@ def spmv_pass(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,
     x per `x_att`).  `spmv_distributed` delegates here; kept in the engine so
     SpMV shares the exact same shard step as every frontier algorithm."""
     axis = axis if axis is not None else mesh.axis_names[0]
-    spec = _spec(axis)
     prog = VertexProgram(edge_op="mul", combine="add",
                          msg_fn=lambda s, f: s, update_fn=None)
 
@@ -1164,9 +1272,8 @@ def spmv_pass(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,
                                 capacity=g.edges_per_shard,
                                 gather_mode=mode)[None]
 
-    mapped = shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * 4,
-                       out_specs=spec)
-    return mapped(g.src, g.dst, g.val, x_sharded)
+    return _shard_apply(mesh, axis, shard_fn, (g.src, g.dst, g.val, x_sharded),
+                        check_rep=True)
 
 
 # ---------------------------------------------------------------------------
@@ -1196,11 +1303,13 @@ def run_queue(mesh: Mesh, prog: QueueProgram, items0: jnp.ndarray,
     """Queue-driven distributed runner — shard_map plumbing owned once.
 
     Frontier programs are bitmap-shaped; walker / sampler workloads are a bag
-    of work entries that migrate between shards.  Per iteration this runner
-    compacts each shard's queue, rebalances entries (and their payload)
-    across shards with `offload.queue_balance` — the hardware queue engine's
-    work stealing — and hands the balanced queue to the program's step with a
-    per-(shard, iteration) key.
+    of work entries that migrate between shards — a different program family,
+    so its per-iteration body is its own (a fixed-length `lax.scan`, not the
+    frontier core's exhaustion loop), but the machinery around that body is
+    the shared ExecutionCore plumbing: `_compact_slots` stable compaction,
+    `offload.queue_balance` owner routing (the hardware queue engine's work
+    stealing), `_shard_apply` shard_map wiring, per-(shard, iteration) key
+    folding.
 
     items0:   (S, cap) int32 stacked queues, -1 = empty slot.
     payload0: pytree of (S, cap, ...) companion data riding with the items.
@@ -1209,7 +1318,6 @@ def run_queue(mesh: Mesh, prog: QueueProgram, items0: jnp.ndarray,
     Returns (state, outs) with each `out` leaf stacked (S, n_iters, ...).
     """
     axis = axis if axis is not None else mesh.axis_names[0]
-    spec = _spec(axis)
     key = key if key is not None else jax.random.PRNGKey(0)
     pl_leaves, pl_def = jax.tree.flatten(payload0)
     op_leaves, op_def = jax.tree.flatten(operands)
@@ -1222,13 +1330,17 @@ def run_queue(mesh: Mesh, prog: QueueProgram, items0: jnp.ndarray,
         ops = jax.tree.unflatten(op_def, [l[0] for l in rest[n_pl:n_pl + n_op]])
         state = jax.tree.unflatten(st_def, [l[0] for l in rest[n_pl + n_op:]])
         shard_key = jax.random.fold_in(key, offload.my_shard(axis))
+        cap = items.shape[0]
 
         def body(carry, it):
             items, payload, state = carry
-            # retired entries may sit anywhere in the buffer: compact first
-            order = jnp.argsort(items < 0, stable=True)
-            items = jnp.take(items, order)
-            payload = jax.tree.map(lambda x: jnp.take(x, order, axis=0),
+            # retired entries may sit anywhere in the buffer: compact live
+            # ones to a stable prefix (same machinery as the push step's
+            # active-edge compaction) before balancing
+            slots = _compact_slots(items >= 0, cap)
+            safe = jnp.maximum(slots, 0)
+            items = jnp.where(slots >= 0, jnp.take(items, safe), -1)
+            payload = jax.tree.map(lambda x: jnp.take(x, safe, axis=0),
                                    payload)
             q = offload.QueueState(items,
                                    (items >= 0).sum().astype(jnp.int32))
@@ -1245,6 +1357,5 @@ def run_queue(mesh: Mesh, prog: QueueProgram, items0: jnp.ndarray,
             body, (items, payload, state), jnp.arange(n_iters))
         return jax.tree.map(lambda l: l[None], (state, outs))
 
-    mapped = shard_map(shard_fn, mesh=mesh, in_specs=spec, out_specs=spec,
-                       check_rep=False)
-    return mapped(items0, *pl_leaves, *op_leaves, *st_leaves)
+    return _shard_apply(mesh, axis, shard_fn,
+                        (items0, *pl_leaves, *op_leaves, *st_leaves))

@@ -2,11 +2,20 @@
 
 PIUMA's concurrency story is *many traversals in flight at once* — the
 single-query engine reproduces the memory/network story (DESIGN.md §3–§7),
-this module reproduces the serving story on top of the batched engine
-(`engine.run_batched`): a typed query API, an admission queue that
-micro-batches compatible queries into one batched engine pass, an LRU result
-cache keyed by (graph epoch, query), and a stats ledger
-(queries/sec, batch occupancy, cache hit rate, modeled route bytes/query).
+this module reproduces the serving story on top of the batched engine: a
+typed query API, an admission queue that micro-batches compatible queries
+into one batched engine pass, an LRU result cache keyed by (graph epoch,
+query), and a stats ledger (queries/sec, batch occupancy, cache hit rate,
+latency percentiles, deadline-miss rate, route bytes/query).
+
+Placement follows the ExecutionCore grid (DESIGN.md §14): constructed with a
+``mesh``, the service serves traversal queries from the **sharded** engine —
+`engine.run_batched_distributed` via ``msbfs_distributed`` /
+``sssp_batched_distributed`` — so one compacted owner-routed exchange per
+level carries every lane of the batch; without a mesh it serves from the
+local batched engine exactly as before.  PPR and neighbor-sample queries
+stay on the local placement either way (PPR is a dense-regime program with
+no batched-distributed port yet; sampling is one compacted gather).
 
 Queries and their results
 -------------------------
@@ -20,13 +29,26 @@ query                  engine pass                    result
 :class:`NeighborSample` keyed one-hop sample slots    ids (fanout,)
 =====================  =============================  =====================
 
-Micro-batching policy (DESIGN.md §13): the admission queue is FIFO; each
-round takes the *kind* of the oldest pending query and collects queries of
-that kind — in submission order, leaving other kinds queued — until the
+Micro-batching policy (DESIGN.md §13/§14): the admission queue preserves
+submission order *within* a kind, and each round picks the next kind
+**round-robin** over the kinds with pending queries — a burst of one kind
+can therefore no longer starve the others (the pre-PR-5 policy served the
+oldest query's kind first, so head-of-line bursts monopolized the engine).
+Queries of the round's kind are collected in submission order until the
 batch budget of lanes is full.  Traversal queries occupying the same source
 share a lane (dedup), sample queries occupy ``fanout`` slots.  Batches are
 padded to the full budget so each (kind, budget) pair compiles exactly once;
 padding lanes replay lane 0 and are discarded.
+
+Deadline-aware admission (DESIGN.md §14): ``submit(q, deadline=s)`` attaches
+a latency SLO (seconds from submission).  The micro-batcher then flushes not
+only on demand but the moment the oldest admitted deadline's *slack* —
+deadline minus now minus the kind's estimated batch cost (an EWMA of
+measured executions) — is exhausted, or as soon as a kind's pending lane
+demand fills the budget: a deadline query waits for batch-fill only while
+waiting is free.  ``poll()`` is the client-driven tick between submissions.
+The deadline never changes *what* is computed — only when the batch is cut —
+so it stays out of the cache key.
 
 Cache keying rule: ``(epoch, query)`` — the query dataclasses are frozen and
 hashable, and ``update_graph`` bumps the epoch, so a mutated graph can never
@@ -41,17 +63,19 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import engine, traffic
+from .dgas import block_rule
 from .graph import CSR
-from .algorithms.bfs import msbfs
+from .algorithms.bfs import msbfs, msbfs_distributed
+from .algorithms.distgraph import shard_graph
 from .algorithms.pagerank import ppr_topk
-from .algorithms.sssp import auto_delta, sssp_batched
+from .algorithms.sssp import auto_delta, sssp_batched, sssp_batched_distributed
 
 __all__ = [
     "Reachability", "Distance", "PPRTopK", "NeighborSample",
@@ -104,6 +128,8 @@ class NeighborSample:
 
 _KIND = {Reachability: "reach", Distance: "dist", PPRTopK: "ppr",
          NeighborSample: "sample"}
+# fixed rotation for the round-robin batch-kind selection
+_KIND_ROTATION = ("reach", "dist", "ppr", "sample")
 
 
 # ---------------------------------------------------------------------------
@@ -114,11 +140,18 @@ _KIND = {Reachability: "reach", Distance: "dist", PPRTopK: "ppr",
 class ServiceStats:
     """Counters over a service's lifetime (or since `reset_stats`).
 
-    route_bytes is the §7/§13 *model* of what a distributed deployment would
-    move: per batched push level one compacted exchange at the derived
-    capacity whose items carry all B lanes (`traffic.batched_payload_bytes`),
-    per dense level a full-partition gather of the lane payloads — computed
-    from the run's measured push/pull trace, n_model_shards wide.
+    route_bytes is the §7/§13 *model* of what a distributed deployment moves:
+    per batched push level one compacted exchange at the derived capacity
+    whose items carry all B lanes (`traffic.batched_payload_bytes`) — levels
+    the engine reports as capacity-overflow fallbacks are charged at the full
+    partition instead — per dense level a full-partition gather of the lane
+    payloads.  Under a mesh the trace comes from the *real* distributed run
+    (`run_batched_distributed(return_stats=True)`), so the ledger prices what
+    actually executed; n_model_shards is then the mesh size.
+
+    Latency is recorded per query (submit -> result stored), and every query
+    submitted with a deadline counts toward ``deadline_miss_rate`` — a miss
+    is a result that lands after its absolute deadline.
     """
 
     budget: int
@@ -131,6 +164,10 @@ class ServiceStats:
     route_bytes: int = 0
     push_levels: int = 0
     pull_levels: int = 0
+    deadline_queries: int = 0
+    deadline_misses: int = 0
+    latencies_s: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=65536))
 
     @property
     def qps(self) -> float:
@@ -150,6 +187,24 @@ class ServiceStats:
     def route_bytes_per_query(self) -> float:
         return self.route_bytes / self.queries if self.queries else 0.0
 
+    def _latency_pct(self, pct: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), pct))
+
+    @property
+    def latency_p50_ms(self) -> float:
+        return 1e3 * self._latency_pct(50)
+
+    @property
+    def latency_p95_ms(self) -> float:
+        return 1e3 * self._latency_pct(95)
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        return self.deadline_misses / self.deadline_queries \
+            if self.deadline_queries else 0.0
+
     def as_dict(self) -> Dict[str, float]:
         return {
             "queries": self.queries, "cache_hits": self.cache_hits,
@@ -159,12 +214,20 @@ class ServiceStats:
             "qps": self.qps, "occupancy": self.occupancy,
             "hit_rate": self.hit_rate,
             "route_bytes_per_query": self.route_bytes_per_query,
+            "latency_p50_ms": self.latency_p50_ms,
+            "latency_p95_ms": self.latency_p95_ms,
+            "deadline_queries": self.deadline_queries,
+            "deadline_misses": self.deadline_misses,
+            "deadline_miss_rate": self.deadline_miss_rate,
         }
 
     def __str__(self) -> str:
         return (f"ServiceStats(queries={self.queries}, qps={self.qps:.1f}, "
                 f"occupancy={self.occupancy:.2f}, "
                 f"hit_rate={self.hit_rate:.2f}, "
+                f"p50={self.latency_p50_ms:.1f}ms, "
+                f"p95={self.latency_p95_ms:.1f}ms, "
+                f"miss_rate={self.deadline_miss_rate:.3f}, "
                 f"route_B/query={self.route_bytes_per_query:.0f}, "
                 f"batches={self.batches})")
 
@@ -186,14 +249,30 @@ class GraphService:
       source/k/fanout is service-level, so same-kind queries always batch —
       every PPR batch computes ``ppr_k_max`` candidates and slices each
       query's k, keeping one compile per (kind, budget)).
-    n_model_shards: width of the route-byte model (see ServiceStats).
+    mesh: optional jax Mesh — serve traversal kinds from the sharded engine
+      (`run_batched_distributed`); the graph is block-sharded over the mesh's
+      first axis and the route-byte ledger prices the *measured* level trace.
+    n_model_shards: width of the route-byte model when no mesh is given
+      (with a mesh the real shard count is used).
+    clock: injectable monotonic time source (seconds) — deadlines, latency
+      percentiles and the EWMA batch-cost estimate all read it, so tests can
+      drive admission deterministically with a fake clock.
+    deadline_safety: slack margin in seconds — a deadline is considered
+      "about to expire" once slack <= this margin, so a client that polls at
+      least once per ``deadline_safety`` window is never served late while
+      the engine is idle (the §14 property the hypothesis suite asserts).
     """
+
+    #: EWMA weight for the per-kind batch-cost estimate the deadline slack
+    #: subtracts; ~0.3 tracks warmup -> steady-state within a few batches.
+    COST_EWMA_ALPHA = 0.3
 
     def __init__(self, csr: CSR, *, batch_budget: int = 32,
                  cache_capacity: int = 4096, results_capacity: int = 65536,
                  ppr_iters: int = 20, damping: float = 0.85,
                  mode: str = "auto", ppr_k_max: int = 64,
-                 n_model_shards: int = 8, seed: int = 0):
+                 mesh=None, n_model_shards: int = 8, seed: int = 0,
+                 clock=time.perf_counter, deadline_safety: float = 0.0):
         if batch_budget < 1:
             raise ValueError("batch_budget must be >= 1")
         self.budget = int(batch_budget)
@@ -205,14 +284,26 @@ class GraphService:
         self.mode = mode
         self.seed = seed
         self.epoch = 0
+        self.mesh = mesh
+        self._clock = clock
+        self.deadline_safety = float(deadline_safety)
+        if mesh is not None:
+            n_model_shards = 1
+            for a in mesh.axis_names:
+                n_model_shards *= int(mesh.shape[a])
         self.stats = ServiceStats(budget=self.budget,
                                   n_model_shards=n_model_shards)
         self._cache: "collections.OrderedDict[Tuple, Any]" = \
             collections.OrderedDict()
-        self._queue: "collections.deque[Tuple[int, Any]]" = collections.deque()
+        # (ticket, query, absolute deadline or None, submit time)
+        self._queue: "collections.deque[Tuple[int, Any, Optional[float], float]]" = \
+            collections.deque()
         self._results: "collections.OrderedDict[int, Any]" = \
             collections.OrderedDict()
         self._next_ticket = 0
+        self._rr = 0                      # round-robin rotation cursor
+        self._n_deadlines = 0             # queued entries carrying a deadline
+        self._cost_ewma: Dict[str, float] = {}
         self._set_graph(csr)
 
     # -- graph epoch -------------------------------------------------------
@@ -222,7 +313,14 @@ class GraphService:
         self.delta = auto_delta(csr)
         self._ppr_k = min(self.ppr_k_max, csr.n_rows)
         self._runners: Dict[Tuple, Any] = {}
-        m_per = -(-csr.nnz // self.stats.n_model_shards)
+        if self.mesh is not None:
+            S = self.stats.n_model_shards
+            self._att = block_rule(csr.n_rows, S)
+            self._gsh, _ = shard_graph(csr, S, row_att=self._att)
+            m_per = self._gsh.edges_per_shard
+        else:
+            self._att = self._gsh = None
+            m_per = -(-csr.nnz // self.stats.n_model_shards)
         self._edge_cap = engine.frontier_edge_capacity(m_per, 1 / 32)
         self._m_per_shard = m_per
 
@@ -265,10 +363,19 @@ class GraphService:
 
     # -- admission ---------------------------------------------------------
 
-    def submit(self, q) -> int:
-        """Enqueue a query; returns a ticket for :meth:`result`."""
+    def submit(self, q, deadline: Optional[float] = None) -> int:
+        """Enqueue a query; returns a ticket for :meth:`result`.
+
+        deadline: optional latency SLO in seconds from now.  Deadline-aware
+        admission then arms: the service flushes as soon as the oldest
+        admitted deadline's slack (deadline - now - the kind's estimated
+        batch cost) runs out, or a kind's pending lane demand fills the
+        budget — instead of waiting for an explicit :meth:`flush`.
+        """
         if type(q) not in _KIND:
             raise TypeError(f"unknown query type {type(q).__name__}")
+        if deadline is not None and deadline < 0:
+            raise ValueError(f"deadline must be >= 0, got {deadline}")
         if isinstance(q, NeighborSample) and not 0 < q.fanout <= self.budget:
             raise ValueError(f"fanout {q.fanout} outside [1, {self.budget}] "
                              "(one batch slot per draw)")
@@ -283,13 +390,72 @@ class GraphService:
                              "(raise ppr_k_max to serve larger k)")
         t = self._next_ticket
         self._next_ticket += 1
-        self._queue.append((t, q))
+        now = self._clock()
+        self._queue.append((t, q, None if deadline is None else now + deadline,
+                            now))
+        if deadline is not None:
+            self._n_deadlines += 1
+        if self._deadline_armed() and (self._deadline_due()
+                                       or self._some_kind_full()):
+            self.flush()
         return t
+
+    def poll(self) -> List[int]:
+        """The client-driven admission tick: flush iff some admitted query's
+        deadline slack is exhausted (a no-op otherwise).  Call between
+        submissions; returns the tickets served, like :meth:`flush`."""
+        if self._deadline_armed() and self._deadline_due():
+            return self.flush()
+        return []
+
+    def _deadline_armed(self) -> bool:
+        # O(1): deadline-free streams pay nothing for the admission checks
+        # (the counter resets when flush drains the queue)
+        return self._n_deadlines > 0
+
+    def _est_cost(self, kind: str) -> float:
+        """EWMA estimate of one batch execution of this kind (0 until the
+        first measured batch — an unknown cost must not hold a deadline)."""
+        return self._cost_ewma.get(kind, 0.0)
+
+    def _deadline_due(self) -> bool:
+        """True iff some admitted deadline is about to expire: its slack
+        (deadline - now - estimated batch cost) is within the safety margin,
+        so serving any later could land past the deadline."""
+        now = self._clock()
+        return any(dl is not None
+                   and now >= dl - self._est_cost(_KIND[type(q)])
+                   - self.deadline_safety
+                   for _, q, dl, _ in self._queue)
+
+    def _some_kind_full(self) -> bool:
+        """True iff some kind's head batch is as packed as it can ever get,
+        by replaying `_collect`'s exact accounting: cache hits occupy no
+        lane, traversal sources dedupe, and the sample batch cuts at the
+        first query whose fanout no longer fits (FIFO within the kind, so a
+        later small query could never join that batch anyway)."""
+        lanes: Dict[str, Any] = {k: set() for k in _KIND_ROTATION}
+        slots = 0
+        for _, q, _, _ in self._queue:
+            if (self.epoch, q) in self._cache:
+                continue            # will be served from cache, takes no lane
+            kind = _KIND[type(q)]
+            if kind == "sample":
+                if slots + q.fanout > self.budget:
+                    return True     # _collect would cut the batch here
+                slots += q.fanout
+                if slots == self.budget:
+                    return True
+            else:
+                lanes[kind].add(q.source)
+                if len(lanes[kind]) >= self.budget:
+                    return True
+        return False
 
     def result(self, ticket: int):
         if ticket not in self._results:
             if 0 <= ticket < self._next_ticket and \
-                    not any(t == ticket for t, _ in self._queue):
+                    not any(t == ticket for t, *_ in self._queue):
                 raise KeyError(f"ticket {ticket} was claimed already or "
                                "evicted (results_capacity bounds unclaimed "
                                "results)")
@@ -297,41 +463,57 @@ class GraphService:
                            "queries first)")
         return self._results.pop(ticket)
 
-    def query(self, q):
+    def query(self, q, deadline: Optional[float] = None):
         """Submit + flush + return: the synchronous convenience path."""
-        t = self.submit(q)
+        t = self.submit(q, deadline=deadline)
         self.flush()
         return self.result(t)
 
     def flush(self) -> List[int]:
         """Drain the admission queue; returns the processed tickets in
-        submission order.  Each round micro-batches the oldest pending
-        query's kind (FIFO within the kind) up to the lane budget."""
+        submission order.  Each round micro-batches one kind — chosen
+        round-robin over the kinds with pending queries, FIFO within the
+        kind — up to the lane budget."""
         done: List[int] = []
-        t0 = time.perf_counter()
+        t0 = self._clock()
         while self._queue:
-            kind = _KIND[type(self._queue[0][1])]
+            kind = self._next_kind()
             batch, lanes = self._collect(kind, done)
-            done.extend(t for t, _ in batch)
+            done.extend(t for t, *_ in batch)
             self._execute(kind, batch, lanes)
             if batch:
                 self.stats.batches += 1
-        self.stats.busy_s += time.perf_counter() - t0
+        self._n_deadlines = 0           # queue drained: nothing armed
+        self.stats.busy_s += self._clock() - t0
         return sorted(done)
+
+    def _next_kind(self) -> str:
+        """Round-robin across kinds with pending queries (the PR-5 fix for
+        FIFO head-of-line blocking: a burst of one kind no longer starves
+        the others — each kind gets a batch per rotation)."""
+        pending = {_KIND[type(q)] for _, q, *_ in self._queue}
+        K = len(_KIND_ROTATION)
+        for i in range(K):
+            kind = _KIND_ROTATION[(self._rr + i) % K]
+            if kind in pending:
+                self._rr = (_KIND_ROTATION.index(kind) + 1) % K
+                return kind
+        raise AssertionError("flush loop entered with an empty queue")
 
     def _collect(self, kind: str, done: List[int]):
         """Pull same-kind queries from the queue (submission order) until the
-        lane budget fills.  Returns ([(ticket, query)], ordered lane keys) —
-        traversal queries dedupe on source, sample queries take fanout
-        slots."""
-        batch: List[Tuple[int, Any]] = []
+        lane budget fills.  Returns ([(ticket, query, deadline, t_submit)],
+        ordered lane keys) — traversal queries dedupe on source, sample
+        queries take fanout slots."""
+        batch: List[Tuple] = []
         lanes: List[int] = []
         slots = 0
-        keep: List[Tuple[int, Any]] = []
+        keep: List[Tuple] = []
         while self._queue:
-            t, q = self._queue.popleft()
+            entry = self._queue.popleft()
+            t, q, dl, ts = entry
             if _KIND[type(q)] != kind:
-                keep.append((t, q))
+                keep.append(entry)
                 continue
             hit, val = self._cache_get(q)
             if hit:
@@ -339,21 +521,22 @@ class GraphService:
                 done.append(t)
                 self.stats.queries += 1
                 self.stats.cache_hits += 1
+                self._account_latency(dl, ts)
                 continue
             if kind == "sample":
                 need = q.fanout
                 if slots + need > self.budget and slots > 0:
-                    keep.append((t, q))
+                    keep.append(entry)
                     break
                 slots += min(need, self.budget)
             else:
                 src = q.source
                 if src not in lanes:
                     if len(lanes) >= self.budget:
-                        keep.append((t, q))
+                        keep.append(entry)
                         break
                     lanes.append(src)
-            batch.append((t, q))
+            batch.append(entry)
         self._queue.extendleft(reversed(keep))
         return batch, lanes
 
@@ -372,76 +555,143 @@ class GraphService:
             fn = self._runners[key] = build()
         return fn
 
+    def _account_latency(self, dl: Optional[float], ts: float) -> None:
+        now = self._clock()
+        self.stats.latencies_s.append(now - ts)
+        if dl is not None:
+            self.stats.deadline_queries += 1
+            if now > dl:
+                self.stats.deadline_misses += 1
+
+    def _update_cost(self, kind: str, seconds: float) -> None:
+        prev = self._cost_ewma.get(kind)
+        a = self.COST_EWMA_ALPHA
+        self._cost_ewma[kind] = seconds if prev is None \
+            else (1 - a) * prev + a * seconds
+
     def _charge(self, n_lanes: int, pushes: int, pulls: int, *,
-                packed: bool) -> None:
+                packed: bool, fallbacks: int = 0) -> None:
         """Route-byte model of the batch (see ServiceStats).  Push levels
         move routed items (index + validity header + lanes) at the compacted
-        capacity; dense pull levels gather the bare lane payload for the
-        full edge partition — no routing header."""
+        capacity — except measured capacity-overflow fallbacks, which routed
+        the full partition; dense pull levels gather the bare lane payload
+        for the full edge partition — no routing header."""
         st = self.stats
         item = traffic.batched_payload_bytes(n_lanes, packed=packed)
         lane_bytes = item - (4 + 1)
         ctr = traffic.RouteByteCounter(st.n_model_shards)
-        for _ in range(int(pushes)):
+        fallbacks = min(int(fallbacks), int(pushes))
+        for _ in range(int(pushes) - fallbacks):
             ctr.push_level(self._edge_cap, payload_bytes=item)
+        for _ in range(fallbacks):
+            ctr.push_level(self._m_per_shard, payload_bytes=item)
         for _ in range(int(pulls)):
             ctr.pull_level(self._m_per_shard * lane_bytes)
         st.route_bytes += ctr.total_bytes
         st.push_levels += int(pushes)
         st.pull_levels += int(pulls)
 
+    def _vertex_slots(self, verts: List[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """(owner, local) of each vertex under the serving ATT — the host
+        side of reading one vertex out of a stacked (S, ..., per) result."""
+        v = jnp.asarray(np.asarray(verts, np.int32))
+        return np.asarray(self._att.owner(v)), np.asarray(self._att.local(v))
+
     def _execute(self, kind: str, batch, lanes: List[int]) -> None:
         if not batch:
             return
+        t_exec = self._clock()
         if kind == "sample":
             self._execute_sample(batch)
-            return
+        else:
+            self._execute_traversal(kind, batch, lanes)
+        self._update_cost(kind, self._clock() - t_exec)
+        for _, _, dl, ts in batch:
+            self._account_latency(dl, ts)
+
+    def _execute_traversal(self, kind: str, batch, lanes: List[int]) -> None:
         srcs = jnp.asarray(self._pad(lanes))
         lane_of = {s: i for i, s in enumerate(lanes)}
+        distributed = self.mesh is not None and kind in ("reach", "dist")
         if kind == "reach":
-            run = self._runner(("reach", self.budget), lambda: jax.jit(
-                lambda s: msbfs(self.csr, s, mode=self.mode,
-                                return_stats=True)))
+            if distributed:
+                run = self._runner(("reach", self.budget), lambda: jax.jit(
+                    lambda s: msbfs_distributed(
+                        self._gsh, self._att, s, self.mesh,
+                        max_levels=self.csr.n_rows, return_stats=True)))
+            else:
+                run = self._runner(("reach", self.budget), lambda: jax.jit(
+                    lambda s: msbfs(self.csr, s, mode=self.mode,
+                                    return_stats=True)))
             levels, stats = run(srcs)
             levels = np.asarray(levels)
-            for t, q in batch:
-                self._finish(t, q, bool(levels[lane_of[q.source],
-                                               q.target] >= 0))
-            self._charge(self.budget, stats["pushes"], stats["pulls"],
-                         packed=True)
+            if distributed:
+                own, loc = self._vertex_slots([q.target for _, q, *_ in batch])
+                for (t, q, *_), o, l in zip(batch, own, loc):
+                    self._finish(t, q, bool(levels[o, lane_of[q.source],
+                                                   l] >= 0))
+            else:
+                for t, q, *_ in batch:
+                    self._finish(t, q, bool(levels[lane_of[q.source],
+                                                   q.target] >= 0))
+            self._charge_traversal(stats, packed=True, distributed=distributed)
         elif kind == "dist":
-            run = self._runner(("dist", self.budget), lambda: jax.jit(
-                lambda s: sssp_batched(self.csr, s, delta=self.delta,
-                                       mode=self.mode, return_stats=True)))
+            if distributed:
+                run = self._runner(("dist", self.budget), lambda: jax.jit(
+                    lambda s: sssp_batched_distributed(
+                        self._gsh, self._att, s, self.mesh, delta=self.delta,
+                        max_iters=4 * self.csr.n_rows, return_stats=True)))
+            else:
+                run = self._runner(("dist", self.budget), lambda: jax.jit(
+                    lambda s: sssp_batched(self.csr, s, delta=self.delta,
+                                           mode=self.mode,
+                                           return_stats=True)))
             dist, stats = run(srcs)
             dist = np.asarray(dist)
-            for t, q in batch:
-                self._finish(t, q, float(dist[lane_of[q.source], q.target]))
-            self._charge(self.budget, stats["pushes"], stats["pulls"],
-                         packed=False)
+            if distributed:
+                own, loc = self._vertex_slots([q.target for _, q, *_ in batch])
+                for (t, q, *_), o, l in zip(batch, own, loc):
+                    self._finish(t, q, float(dist[o, lane_of[q.source], l]))
+            else:
+                for t, q, *_ in batch:
+                    self._finish(t, q, float(dist[lane_of[q.source],
+                                                  q.target]))
+            self._charge_traversal(stats, packed=False,
+                                   distributed=distributed)
         elif kind == "ppr":
             # every batch computes ppr_k_max candidates and slices per query:
             # compiles stay one per (kind, budget), not per observed k
             k = self._ppr_k
             run = self._runner(("ppr", self.budget), lambda: jax.jit(
                 lambda s: ppr_topk(self.csr, s, k, damping=self.damping,
-                                   iters=self.ppr_iters)))
-            vals, ids = run(srcs)
+                                   iters=self.ppr_iters, return_stats=True)))
+            vals, ids, stats = run(srcs)
             vals, ids = np.asarray(vals), np.asarray(ids)
-            for t, q in batch:
+            for t, q, *_ in batch:
                 ln = lane_of[q.source]
                 self._finish(t, q, (ids[ln, : q.k].copy(),
                                     vals[ln, : q.k].copy()))
-            self._charge(self.budget, 0, self.ppr_iters, packed=False)
+            self._charge_traversal(stats, packed=False, distributed=False)
         self.stats.lanes_used += len(lanes)
         self.stats.queries += len(batch)
+
+    def _charge_traversal(self, stats, *, packed: bool,
+                          distributed: bool) -> None:
+        """Feed the ledger the run's level trace — stacked (S,) and globally
+        identical under the distributed placement, scalar locally."""
+        def first(x):
+            a = np.asarray(x)
+            return int(a.reshape(-1)[0])
+        self._charge(self.budget, first(stats["pushes"]),
+                     first(stats["pulls"]), packed=packed,
+                     fallbacks=first(stats["fallbacks"]) if distributed else 0)
 
     def _execute_sample(self, batch) -> None:
         verts = np.zeros((self.budget,), np.int32)
         salts = np.zeros((self.budget,), np.uint32)
         spans: List[Tuple[int, int]] = []
         pos = 0
-        for t, q in batch:
+        for t, q, *_ in batch:
             take = q.fanout
             # _collect's slot accounting and submit's fanout bound guarantee
             # the batch fits; fail loudly (not by truncating-and-caching a
@@ -467,7 +717,7 @@ class GraphService:
 
         run = self._runner(("sample", self.budget), build)
         nbrs = np.asarray(run(jnp.asarray(verts), jnp.asarray(salts)))
-        for (t, q), (s, take) in zip(batch, spans):
+        for (t, q, *_), (s, take) in zip(batch, spans):
             self._finish(t, q, nbrs[s: s + take].copy())
         ctr = traffic.RouteByteCounter(self.stats.n_model_shards)
         ctr.push_level(self.budget,

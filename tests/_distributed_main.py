@@ -397,5 +397,37 @@ check("msbfs_distributed/stats_shape",
           for k in ("iters", "pushes", "pulls", "fallbacks"))
       and int(np.asarray(_st_b["pulls"])[0]) == 0)
 
+# --- the query service on the sharded engine (PR 5, DESIGN §14) --------------
+# GraphService(mesh=...) must serve reach/dist through run_batched_distributed
+# and agree with the local placement query-for-query.
+from repro.core import GraphService, Reachability, Distance, PPRTopK
+
+_svc_d = GraphService(_gq, batch_budget=8, mesh=mesh)
+_svc_l = GraphService(_gq, batch_budget=8)
+_qrng = np.random.default_rng(5)
+_nq = _gq.n_rows
+_stream = [Reachability(int(s), int(t)) for s, t in
+           zip(_qrng.integers(0, _nq, 10), _qrng.integers(0, _nq, 10))]
+_stream += [Distance(int(s), int(t)) for s, t in
+            zip(_qrng.integers(0, _nq, 6), _qrng.integers(0, _nq, 6))]
+_ok_r = all(_svc_d.query(q, deadline=120.0) == _svc_l.query(q)
+            for q in _stream if isinstance(q, Reachability))
+check("service_distributed/reach_matches_local", _ok_r)
+_ok_d = all(abs(_svc_d.query(q, deadline=120.0) - _svc_l.query(q)) < 1e-4
+            or _svc_d.query(q) == _svc_l.query(q)   # inf == inf
+            for q in _stream if isinstance(q, Distance))
+check("service_distributed/dist_matches_local", _ok_d)
+# PPR stays on the local placement under a mesh — same answers either way
+_ids_d, _sc_d = _svc_d.query(PPRTopK(3, k=4))
+_ids_l, _sc_l = _svc_l.query(PPRTopK(3, k=4))
+check("service_distributed/ppr_local_fallback",
+      np.array_equal(_ids_d, _ids_l) and np.allclose(_sc_d, _sc_l))
+check("service_distributed/deadline_miss_rate_zero",
+      _svc_d.stats.deadline_miss_rate == 0.0
+      and _svc_d.stats.deadline_queries >= 16)
+check("service_distributed/route_bytes_measured",
+      _svc_d.stats.route_bytes > 0 and _svc_d.stats.push_levels > 0
+      and _svc_d.stats.n_model_shards == S)
+
 print("FAILURES(final):", failures, flush=True)
 sys.exit(1 if failures else 0)

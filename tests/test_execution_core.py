@@ -1,0 +1,147 @@
+"""ExecutionCore golden-equivalence grid (DESIGN.md §14).
+
+The PR-5 refactor collapsed the engine's five runners into one stepping loop
+parameterized by (lane representation x placement).  This suite replays the
+pre-refactor outputs — captured by ``scripts/make_golden_core.py`` against
+the PR-4 engine and committed as ``tests/golden/core_grid.npz`` — and
+asserts **bit identity** across the whole (program family x lane
+representation x mode) grid on the local placement, plus the direction-trace
+stats.  The distributed placement's equivalence gates in
+``tests/_distributed_main.py`` (partition identity under 8 forced devices,
+goldens there would bake in the device count).
+
+Also guards the structural invariant itself: ``engine.py`` holds exactly one
+stepping loop (the same check `scripts/check_single_core.py` runs in CI).
+"""
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, rmat, uniform_random_graph
+from repro.core.algorithms import (bfs, connected_components,
+                                   label_propagation, msbfs, ppr, ppr_batched,
+                                   sssp, sssp_batched)
+
+GOLD = np.load(os.path.join(os.path.dirname(__file__), "golden",
+                            "core_grid.npz"))
+G = rmat(7, 8, seed=11)
+U = uniform_random_graph(150, 4, seed=5)
+DELTA = float(GOLD["meta_delta_g"])
+SOURCES = np.array([0, 3, 17, 64, 0], dtype=np.int32)  # dup lane on purpose
+MODES = ("push", "pull", "auto")
+
+
+def _gold(key):
+    assert key in GOLD.files, f"golden entry {key} missing — regenerate only "\
+        "with scripts/make_golden_core.py against a pre-refactor tree"
+    return GOLD[key]
+
+
+# ---------------------------------------------------------------------------
+# scalar lanes, local placement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_bfs_scalar_golden(mode):
+    np.testing.assert_array_equal(np.asarray(bfs(G, 0, mode=mode)),
+                                  _gold(f"bfs/scalar/{mode}"))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_sssp_scalar_golden(mode):
+    np.testing.assert_array_equal(
+        np.asarray(sssp(G, 0, delta=DELTA, mode=mode)),
+        _gold(f"sssp/scalar/{mode}"))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_cc_scalar_golden(mode):
+    np.testing.assert_array_equal(
+        np.asarray(connected_components(U, mode=mode)),
+        _gold(f"cc/scalar/{mode}"))
+
+
+def test_ppr_scalar_golden():
+    np.testing.assert_array_equal(np.asarray(ppr(G, 3, iters=12)),
+                                  _gold("ppr/scalar/pull"))
+
+
+def test_lpa_structured_golden():
+    np.testing.assert_array_equal(np.asarray(label_propagation(G, iters=4)),
+                                  _gold("lpa/scalar/auto"))
+
+
+def test_sample_structured_golden():
+    key = jax.random.PRNGKey(7)
+    q = jnp.arange(64, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(engine.sample_neighbors(G, q, key)),
+        _gold("sample/scalar/push"))
+    np.testing.assert_array_equal(
+        np.asarray(engine.sample_neighbors(G, q, key, weighted=True)),
+        _gold("sample/scalar/weighted"))
+
+
+# ---------------------------------------------------------------------------
+# packed / valued lanes, local placement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_msbfs_packed_golden(mode):
+    np.testing.assert_array_equal(np.asarray(msbfs(G, SOURCES, mode=mode)),
+                                  _gold(f"bfs/packed/{mode}"))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_sssp_valued_golden(mode):
+    np.testing.assert_array_equal(
+        np.asarray(sssp_batched(G, SOURCES, delta=DELTA, mode=mode)),
+        _gold(f"sssp/valued/{mode}"))
+
+
+def test_ppr_valued_golden():
+    np.testing.assert_array_equal(
+        np.asarray(ppr_batched(G, SOURCES, iters=12)),
+        _gold("ppr/valued/pull"))
+
+
+# ---------------------------------------------------------------------------
+# direction-decision traces (the refactor must not re-route any level)
+# ---------------------------------------------------------------------------
+
+def test_sssp_stats_trace_golden():
+    _, st = sssp(G, 0, delta=DELTA, return_stats=True)
+    got = [int(st[k]) for k in ("iters", "pushes", "pulls")]
+    np.testing.assert_array_equal(got, _gold("sssp/stats/auto"))
+
+
+def test_msbfs_stats_trace_golden():
+    _, st = msbfs(G, SOURCES, return_stats=True)
+    got = [int(st[k]) for k in ("iters", "pushes", "pulls")]
+    np.testing.assert_array_equal(got, _gold("msbfs/stats/auto"))
+
+
+# ---------------------------------------------------------------------------
+# structural invariant: exactly one stepping loop
+# ---------------------------------------------------------------------------
+
+def test_engine_has_single_stepping_loop():
+    """The in-suite twin of scripts/check_single_core.py: every frontier
+    runner must lower to the one `_core_loop` while_loop."""
+    src = open(os.path.join(os.path.dirname(__file__), os.pardir, "src",
+                            "repro", "core", "engine.py")).read()
+    assert len(re.findall(r"lax\.while_loop\(", src)) == 1
+    assert len(re.findall(r"lax\.scan\(", src)) <= 1  # run_queue's body
+    for runner in ("def run(", "def run_batched(", "def run_distributed(",
+                   "def run_batched_distributed(", "def run_queue("):
+        assert runner in src
+
+
+def test_mapped_cache_is_shared_with_algorithms():
+    """One `_MAPPED_CACHE` keying scheme across placements (DESIGN §14)."""
+    from repro.core.algorithms import louvain
+    assert louvain._MAPPED_CACHE is engine._MAPPED_CACHE

@@ -1,6 +1,7 @@
 """Graph query service: result correctness per query kind, micro-batch
-grouping and ordering, lane dedup/occupancy accounting, LRU cache behavior
-across graph epochs, and the route-byte ledger."""
+grouping and ordering (round-robin across kinds), deadline-aware admission,
+lane dedup/occupancy accounting, LRU cache behavior across graph epochs, and
+the route-byte ledger."""
 import numpy as np
 import pytest
 
@@ -9,6 +10,16 @@ from repro.core import (Distance, GraphService, NeighborSample, PPRTopK,
 from repro.core.algorithms import bfs, ppr, sssp
 
 G = rmat(7, 8, seed=11)
+
+
+class FakeClock:
+    """Deterministic time source for deadline-admission tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
 
 
 def make_service(**kw):
@@ -156,6 +167,126 @@ def test_unclaimed_results_are_bounded():
     assert svc.result(tickets[-1]) is not None
     with pytest.raises(KeyError):
         svc.result(tickets[0])
+
+
+# ---------------------------------------------------------------------------
+# round-robin kind selection (head-of-line fix) + deadline-aware admission
+# ---------------------------------------------------------------------------
+
+def test_round_robin_prevents_head_of_line_blocking():
+    """A burst of one kind must not starve the others: each rotation serves
+    every pending kind one batch before the burst continues."""
+    svc = make_service(batch_budget=2)
+    order = []
+    orig = svc._execute
+    svc._execute = lambda kind, batch, lanes: (order.append(kind),
+                                               orig(kind, batch, lanes))[1]
+    for s in range(6):                       # 3 budget-2 batches of reach
+        svc.submit(Reachability(s, 0))
+    svc.submit(Distance(0, 1))
+    svc.submit(PPRTopK(1, k=2))
+    done = svc.flush()
+    assert len(done) == 8
+    # dist and ppr are served inside the first rotation, not after the burst
+    assert order[:3] == ["reach", "dist", "ppr"]
+    assert order[3:] == ["reach", "reach"]
+
+
+def test_no_autoflush_without_deadlines():
+    """Deadline-free admission keeps the explicit-flush contract (the
+    pre-PR-5 behavior): submissions alone never trigger execution."""
+    svc = make_service(batch_budget=2)
+    for s in range(5):
+        svc.submit(Reachability(s, 0))
+    assert svc.stats.batches == 0 and not svc._results
+
+
+def test_poll_noop_while_slack_remains():
+    clk = FakeClock()
+    svc = make_service(clock=clk)
+    t = svc.submit(Reachability(0, 1), deadline=50.0)
+    assert svc.poll() == []
+    assert svc.stats.batches == 0
+    clk.t = 50.0                    # slack (est cost 0) exhausted exactly now
+    assert svc.poll() == [t]
+    assert svc.result(t) == bool(np.asarray(bfs(G, 0))[1] >= 0)
+    assert svc.stats.deadline_queries == 1
+    assert svc.stats.deadline_misses == 0   # served at, not after, the SLO
+
+
+def test_deadline_armed_flushes_on_full_batch():
+    clk = FakeClock()
+    svc = make_service(batch_budget=2, clock=clk)
+    svc.submit(Reachability(0, 1), deadline=100.0)
+    t2 = svc.submit(Reachability(1, 2), deadline=100.0)  # fills the budget
+    assert svc.stats.batches == 1          # flushed on admission
+    assert t2 in svc._results
+
+
+def test_negative_slack_flushes_on_admission():
+    """A learned batch-cost estimate tightens the slack: a deadline shorter
+    than the estimated execution cannot wait at all."""
+    clk = FakeClock()
+    svc = make_service(clock=clk)
+    svc._cost_ewma["reach"] = 2.0
+    t = svc.submit(Reachability(0, 1), deadline=1.5)
+    assert t in svc._results               # served the moment it was admitted
+
+
+def test_deadline_miss_and_latency_accounting():
+    clk = FakeClock()
+    svc = make_service(clock=clk)
+    svc.submit(Distance(0, 1), deadline=5.0)
+    clk.t = 20.0                            # client polled far too late
+    svc.poll()
+    st = svc.stats
+    assert st.deadline_queries == 1 and st.deadline_misses == 1
+    assert st.deadline_miss_rate == 1.0
+    assert st.latency_p50_ms == pytest.approx(20e3)
+    assert st.latency_p95_ms == pytest.approx(20e3)
+    d = st.as_dict()
+    assert {"latency_p50_ms", "latency_p95_ms",
+            "deadline_miss_rate"} <= set(d)
+
+
+def test_cost_ewma_learns_from_measured_batches():
+    svc = make_service()                    # real clock
+    svc.query(Reachability(0, 1))
+    first = svc._cost_ewma["reach"]
+    assert first > 0
+    svc.query(Reachability(1, 2))
+    assert svc._cost_ewma["reach"] > 0      # EWMA keeps tracking
+
+
+def test_deadline_validation():
+    svc = make_service()
+    with pytest.raises(ValueError, match="deadline"):
+        svc.submit(Reachability(0, 1), deadline=-1.0)
+
+
+def test_deadline_full_check_mirrors_sample_packing():
+    """Fanout slots must replay _collect's greedy packing, not a plain sum:
+    one fanout-3 query in a budget-4 batch leaves room, so no auto-flush;
+    a second fanout-3 cannot join that batch, so the head batch is as full
+    as it can get and the flush fires."""
+    clk = FakeClock()
+    svc = make_service(batch_budget=4, clock=clk)
+    svc.submit(NeighborSample(0, fanout=3), deadline=100.0)
+    assert svc.stats.batches == 0
+    svc.submit(NeighborSample(1, fanout=3), deadline=100.0)
+    assert svc.stats.batches >= 1
+
+
+def test_deadline_full_check_ignores_cache_hits():
+    """Queries that will be served from the cache occupy no lane, so they
+    must not count toward the batch-full admission trigger."""
+    clk = FakeClock()
+    svc = make_service(batch_budget=2, clock=clk)
+    svc.query(Reachability(0, 1))                    # now cached
+    batches = svc.stats.batches
+    svc.submit(Reachability(0, 1), deadline=100.0)   # pure cache hit
+    svc.submit(Reachability(1, 2), deadline=100.0)   # one real lane of two
+    assert svc.stats.batches == batches              # not full: no auto-flush
 
 
 # ---------------------------------------------------------------------------
