@@ -4,57 +4,36 @@
 PR 5 collapsed the engine's five public runners onto one ExecutionCore
 stepping loop (`engine._core_loop`, DESIGN.md §14).  Copy-paste runners grow
 back silently — a second `lax.while_loop` over (state, frontier) compiles
-and passes output tests just fine — so the bench/fast lanes fail loudly
-instead: this grep-level check needs no jax and runs in milliseconds.
+and passes output tests just fine — so the fast/bench lanes fail loudly
+instead.
 
-Checked invariants over ``src/repro/core/engine.py``:
-  * exactly one ``lax.while_loop(`` call (the core loop);
-  * at most one ``lax.scan(`` call (run_queue's fixed-length body);
-  * no ``fori_loop`` (a stepping loop in disguise);
-  * all five public runners still exist and the frontier ones route through
-    ``_core_loop`` / the shared wrappers.
-
-Exit 0 = clean, 1 = violation (with a pointer at what regrew).
+Since PR 6 the grep body is gone: this script is a thin CLI shim over the
+AST `single-core` rule in ``repro.analysis`` (DESIGN.md §15), which counts
+actual call nodes instead of strings — a commented-out ``lax.while_loop(``
+no longer trips it, and an aliased loop no longer dodges it.  Same
+contract as always: no jax import, milliseconds, exit 0 = clean,
+1 = violation (with a pointer at what regrew).
 """
-import re
-import sys
 import os
+import sys
 
-ENGINE = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                      "src", "repro", "core", "engine.py")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.analysis import Analyzer  # noqa: E402
+from repro.analysis.rules import SingleCoreRule  # noqa: E402
+
+ENGINE = os.path.join(ROOT, "src", "repro", "core", "engine.py")
 
 
 def check(src: str):
-    failures = []
-    n_while = len(re.findall(r"lax\.while_loop\(", src))
-    if n_while != 1:
-        failures.append(
-            f"engine.py holds {n_while} lax.while_loop calls (must be exactly "
-            "1, inside _core_loop): a second stepping loop has regrown — fold "
-            "it into the ExecutionCore grid instead (DESIGN.md §14)")
-    n_scan = len(re.findall(r"lax\.scan\(", src))
-    if n_scan > 1:
-        failures.append(
-            f"engine.py holds {n_scan} lax.scan calls (at most 1, run_queue's "
-            "body): a scan-shaped stepping loop has regrown")
-    if re.search(r"fori_loop\(", src):
-        failures.append("engine.py calls fori_loop: that is a stepping loop "
-                        "in disguise — use _core_loop")
-    for runner in ("def run(", "def run_batched(", "def run_distributed(",
-                   "def run_batched_distributed(", "def run_queue(",
-                   "def _core_loop("):
-        if runner not in src:
-            failures.append(f"engine.py lost `{runner}...)`")
-    # the frontier runners must delegate, not re-own, the loop
-    for via in ("_run_local(", "_run_distributed(", "_core_loop(core"):
-        if via not in src:
-            failures.append(f"engine.py no longer routes through `{via}`")
-    return failures
+    """Findings for an engine source string (kept for test fixtures)."""
+    return [f.format() for f in Analyzer([SingleCoreRule()]).run_source(
+        src, "src/repro/core/engine.py")]
 
 
 if __name__ == "__main__":
-    src = open(ENGINE).read()
-    failures = check(src)
+    failures = check(open(ENGINE).read())
     for f in failures:
         print(f"SINGLE-CORE GUARD: {f}", file=sys.stderr)
     print("single-core guard: " + ("FAIL" if failures else

@@ -1,8 +1,17 @@
 #!/usr/bin/env bash
-# CI entry point — three lanes, runnable singly or in sequence:
+# CI entry point — four lanes, runnable singly or in sequence:
 #
+#   scripts/ci.sh lint        — repro-lint static analysis (DESIGN.md §15):
+#                               python -m repro.analysis src tests.  Pure
+#                               stdlib — no jax install needed — so it runs
+#                               first and fails in seconds on a regrown
+#                               stepping loop, a compat-boundary bypass, a
+#                               host sync in traced code, an unbound
+#                               shard_map collective, or an unhashable
+#                               compile-cache key.
 #   scripts/ci.sh fast        — pre-commit default: the single-stepping-loop
-#                               guard (scripts/check_single_core.py), then
+#                               guard (scripts/check_single_core.py, now a
+#                               shim over the AST single-core rule), then
 #                               the full suite minus the @slow
 #                               subprocess-spawning distributed/dryrun tests.
 #   scripts/ci.sh all         — tier-1: the full pytest suite (what the
@@ -15,7 +24,7 @@
 #                               RMAT-12 with the msbfs amortization gate and
 #                               the deadline-miss-rate gate — always runs at
 #                               its own fixed scale), writes
-#                               ${BENCH_OUT:-BENCH_pr5.json} and fails on
+#                               ${BENCH_OUT:-BENCH_pr6.json} and fails on
 #                               NaN / regression markers / >25% regression
 #                               vs the newest committed BENCH_*.json.
 #   scripts/ci.sh fast bench  — multiple lanes: each runs even if an earlier
@@ -30,6 +39,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 run_lane() {
   case "$1" in
+    lint)
+      python -m repro.analysis src tests
+      ;;
     fast)
       python scripts/check_single_core.py \
         && python -m pytest -x -q -m "not slow"
@@ -38,13 +50,13 @@ run_lane() {
       python scripts/check_single_core.py \
         && XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
           python benchmarks/bench_engine.py --scale 7 --smoke \
-            --json "${BENCH_OUT:-BENCH_pr5.json}" --baseline auto
+            --json "${BENCH_OUT:-BENCH_pr6.json}" --baseline auto
       ;;
     all)
       python -m pytest -x -q
       ;;
     *)
-      echo "usage: scripts/ci.sh [fast|bench|all] ..." >&2
+      echo "usage: scripts/ci.sh [lint|fast|bench|all] ..." >&2
       return 2
       ;;
   esac

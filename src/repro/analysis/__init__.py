@@ -1,0 +1,25 @@
+"""repro-lint: AST-based invariant & trace-hazard analyzer (DESIGN.md §15).
+
+Stdlib-only — safe to run in CI lanes without jax installed::
+
+    python -m repro.analysis src tests
+
+Public surface: :class:`Analyzer` + :data:`ALL_RULES` for programmatic use
+(``scripts/check_single_core.py``, tests), :func:`main` for the CLI.
+"""
+from __future__ import annotations
+
+from .core import (Analyzer, Finding, ParsedModule, Report, Rule,
+                   collect_files, load_baseline, parse_module)
+from .rules import ALL_RULES, RULES_BY_ID
+
+__all__ = [
+    "Analyzer", "Finding", "ParsedModule", "Report", "Rule",
+    "collect_files", "load_baseline", "parse_module",
+    "ALL_RULES", "RULES_BY_ID", "main",
+]
+
+
+def main(argv=None) -> int:
+    from .__main__ import main as _main
+    return _main(argv)

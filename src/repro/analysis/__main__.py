@@ -1,0 +1,92 @@
+"""CLI for repro-lint.  Exit codes: 0 clean, 1 findings, 2 usage error."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from .core import Analyzer, collect_files, load_baseline, write_baseline
+from .rules import ALL_RULES, RULES_BY_ID
+
+DEFAULT_BASELINE = "lint_baseline.json"
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: AST invariant & trace-hazard analyzer "
+                    "(DESIGN.md §15). Stdlib-only, no jax import.")
+    p.add_argument("paths", nargs="*", default=["src", "tests"],
+                   help="files or directories to analyze "
+                        "(default: src tests)")
+    p.add_argument("--rule", action="append", dest="rules", metavar="ID",
+                   help="run only this rule (repeatable)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help=f"baseline JSON of grandfathered findings "
+                        f"(default: {DEFAULT_BASELINE} if present)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore any baseline file")
+    p.add_argument("--write-baseline", default=None, metavar="FILE",
+                   help="write current (pragma-filtered) findings as the "
+                        "new baseline and exit 0")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress the summary line (findings still print)")
+    return p
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.id:16s} {rule.doc}")
+        return 0
+
+    rules = ALL_RULES
+    if args.rules:
+        unknown = [r for r in args.rules if r not in RULES_BY_ID]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+        rules = [RULES_BY_ID[r] for r in args.rules]
+
+    files = collect_files(args.paths)
+    if not files:
+        print(f"no .py files under: {' '.join(args.paths)}", file=sys.stderr)
+        return 2
+
+    baseline = {}
+    if args.write_baseline is None and not args.no_baseline:
+        baseline_path = args.baseline or DEFAULT_BASELINE
+        if Path(baseline_path).exists():
+            baseline = load_baseline(baseline_path)
+        elif args.baseline is not None:
+            print(f"baseline not found: {baseline_path}", file=sys.stderr)
+            return 2
+
+    t0 = time.monotonic()
+    report = Analyzer(rules, baseline).run_files(files)
+    dt = time.monotonic() - t0
+
+    if args.write_baseline is not None:
+        write_baseline(args.write_baseline, report.findings, report.modules)
+        print(f"wrote {len(report.findings)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    for finding in report.findings:
+        print(finding.format())
+    if not args.quiet:
+        print(f"repro-lint: {len(report.findings)} finding(s) in "
+              f"{report.n_files} files ({dt:.2f}s; "
+              f"{report.pragma_suppressed} pragma-suppressed, "
+              f"{report.baseline_suppressed} baselined)")
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

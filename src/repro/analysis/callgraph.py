@@ -1,0 +1,227 @@
+"""Traced-reachability over one module's AST, shared by the host-sync and
+shard-safety rules.
+
+jax hazards are positional: ``np.asarray`` in a graph loader is fine, the
+same call inside a function that executes under ``jit``/``shard_map``/Pallas
+tracing is a silent host sync (or a TracerConversionError three layers
+away).  This module approximates "executes under tracing" per module, with
+four root classes:
+
+1. **trace arguments** — functions (or lambdas) passed to a tracing entry
+   point: ``lax.while_loop/scan/cond/fori_loop/switch/map``, ``jit``,
+   ``vmap``/``pmap``, ``shard_map``, ``pl.pallas_call``, ``grad`` & co.
+2. **jit-decorated** functions.
+3. **escaping closures** — local functions that are referenced other than by
+   a direct call (passed as an argument, returned, stored) in a module that
+   itself uses tracing machinery.  The engine's planner factories
+   (``dense``/``sparse``/``shard_fn``/``build``) all escape into tracing
+   contexts through call indirection a per-module analysis cannot follow, so
+   escape-in-a-tracing-module is the sound approximation.
+4. **public API of a tracing library module** — any public module-level
+   function of a ``src/repro`` module that uses tracing machinery is
+   presumed jit-callable (the engine's documented contract: runners and
+   their helpers "stay usable under jit").  Host-only helpers that live in
+   such modules by design carry a pragma documenting why they are
+   trace-safe.  Test files do NOT get this root: tests are host drivers.
+
+Reachability then propagates through module-local calls (direct ``name(...)``
+calls and ``self._method(...)`` calls, matched by name).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+__all__ = ["dotted_name", "is_tracing_call", "ModuleGraph"]
+
+# tail names that trace their function arguments, keyed by how ambiguous the
+# bare spelling is: BARE names are unambiguous enough to match without a
+# module prefix; PREFIXED ones only count under a jax-ish base (plain
+# ``map``/``switch``/``checkpoint`` calls must not root anything).
+_TRACING_BARE = {
+    "jit", "pjit", "vmap", "pmap", "shard_map", "pallas_call", "while_loop",
+    "scan", "fori_loop", "grad", "value_and_grad", "remat",
+}
+_TRACING_PREFIXED = _TRACING_BARE | {
+    "cond", "switch", "map", "associative_scan", "checkpoint", "custom_jvp",
+    "custom_vjp",
+}
+_JAXISH_BASES = {"jax", "lax", "pl", "pltpu", "pallas", "nn", "experimental"}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.experimental.shard_map' for nested Attributes on a Name, else
+    None (calls on call results, subscripts, ... are not resolvable)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_tracing_call(call: ast.Call) -> bool:
+    name = dotted_name(call.func)
+    if name is None:
+        return False
+    parts = name.split(".")
+    tail, base = parts[-1], parts[:-1]
+    if not base:
+        return tail in _TRACING_BARE
+    return tail in _TRACING_PREFIXED and (base[-1] in _JAXISH_BASES
+                                          or "jax" in base)
+
+
+class ModuleGraph:
+    """Function nodes, local call edges, and the traced-reachable set."""
+
+    def __init__(self, module, *, is_library: Optional[bool] = None):
+        self.module = module
+        tree = module.tree
+        if is_library is None:
+            path = module.path
+            name = path.rsplit("/", 1)[-1]
+            is_library = ("src/repro/" in path or path.startswith("repro/")) \
+                and not name.startswith("test_") and name != "conftest.py"
+        self.is_library = is_library
+
+        #: every def/lambda node in the module
+        self.functions: List[ast.AST] = []
+        #: name -> def nodes carrying that name (scope-collapsed: a
+        #: per-module approximation, names rarely collide in practice)
+        self.by_name: Dict[str, List[ast.AST]] = {}
+        #: AST node -> enclosing function node (or None for module scope)
+        self.owner: Dict[ast.AST, Optional[ast.AST]] = {}
+        self.module_level: Set[ast.AST] = set()
+
+        self._index(tree)
+        self.uses_tracing = self._module_uses_tracing(tree)
+        self.edges = self._call_edges()
+        self.traced: Set[ast.AST] = self._reach(self._roots(tree))
+
+    # -- construction ------------------------------------------------------
+
+    def _index(self, tree: ast.Module) -> None:
+        def visit(node: ast.AST, fn: Optional[ast.AST], depth: int) -> None:
+            for child in ast.iter_child_nodes(node):
+                self.owner[child] = fn
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda)):
+                    self.functions.append(child)
+                    if isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                        self.by_name.setdefault(child.name, []).append(child)
+                        if depth == 0:
+                            self.module_level.add(child)
+                    visit(child, child, depth + 1)
+                else:
+                    visit(child, fn, depth)
+
+        self.owner[tree] = None
+        visit(tree, None, 0)
+
+    def _module_uses_tracing(self, tree: ast.Module) -> bool:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and is_tracing_call(node):
+                return True
+            if isinstance(node, ast.ImportFrom) and node.module and \
+                    ("shard_map" in node.module or "pallas" in node.module):
+                return True
+        return False
+
+    def _call_edges(self) -> Dict[ast.AST, Set[ast.AST]]:
+        edges: Dict[ast.AST, Set[ast.AST]] = {}
+        for node in ast.walk(self.module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            caller = self.owner.get(node)
+            if caller is None:
+                continue
+            callee_name = None
+            if isinstance(node.func, ast.Name):
+                callee_name = node.func.id
+            elif isinstance(node.func, ast.Attribute) and \
+                    isinstance(node.func.value, ast.Name) and \
+                    node.func.value.id in ("self", "cls"):
+                callee_name = node.func.attr
+            if callee_name is None:
+                continue
+            for target in self.by_name.get(callee_name, ()):
+                edges.setdefault(caller, set()).add(target)
+        return edges
+
+    def _function_args(self, call: ast.Call) -> List[ast.AST]:
+        """Local function defs (and literal lambdas) passed to ``call``."""
+        out: List[ast.AST] = []
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        for a in args:
+            if isinstance(a, ast.Lambda):
+                out.append(a)
+            elif isinstance(a, ast.Name):
+                out.extend(self.by_name.get(a.id, ()))
+        return out
+
+    def _roots(self, tree: ast.Module) -> Set[ast.AST]:
+        roots: Set[ast.AST] = set()
+        called_as: Dict[ast.AST, int] = {}
+        referenced: Dict[str, int] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                # (1) trace arguments
+                if is_tracing_call(node):
+                    roots.update(self._function_args(node))
+                if isinstance(node.func, ast.Name):
+                    called_as[node.func] = 1
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # (2) jit-ish decorators
+                for dec in node.decorator_list:
+                    try:
+                        text = ast.unparse(dec)
+                    except Exception:  # pragma: no cover - unparse is total
+                        text = ""
+                    if "jit" in text.split("(")[0].split(".")[-1] or \
+                            ".jit" in text or "jit(" in text:
+                        roots.add(node)
+        # (3) escaping closures in tracing modules
+        if self.uses_tracing:
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Name) and \
+                        isinstance(node.ctx, ast.Load) and \
+                        node not in called_as and \
+                        node.id in self.by_name:
+                    referenced[node.id] = referenced.get(node.id, 0) + 1
+            for name in referenced:
+                roots.update(self.by_name.get(name, ()))
+        # (4) public API of tracing library modules
+        if self.uses_tracing and self.is_library:
+            for fn in self.module_level:
+                if not fn.name.startswith("_"):
+                    roots.add(fn)
+        return roots
+
+    def _reach(self, roots: Set[ast.AST]) -> Set[ast.AST]:
+        seen = set(roots)
+        stack = list(roots)
+        while stack:
+            fn = stack.pop()
+            for callee in self.edges.get(fn, ()):
+                if callee not in seen:
+                    seen.add(callee)
+                    stack.append(callee)
+        return seen
+
+    # -- queries -----------------------------------------------------------
+
+    def reachable_from(self, roots: Set[ast.AST]) -> Set[ast.AST]:
+        return self._reach(set(roots))
+
+    def body_nodes(self, fn: ast.AST):
+        """AST nodes owned *directly* by ``fn`` — nested function bodies are
+        excluded (they are separate nodes with their own traced status)."""
+        for node in ast.walk(fn):
+            if node is fn:
+                continue
+            if self.owner.get(node) is fn:
+                yield node

@@ -1,0 +1,284 @@
+"""repro-lint core: findings, pragmas, baselines, and the analyzer driver.
+
+This package is the repo's static-analysis substrate (DESIGN.md §15): an
+AST-level replacement for the grep guards that previously policed the
+engine's invariants.  Everything here is stdlib-only — ``python -m
+repro.analysis src tests`` must run in CI lanes that never install jax and
+finish in seconds.
+
+Three suppression mechanisms, in priority order:
+
+* **inline pragmas** — ``# repro-lint: disable=<rule>[,<rule>...]`` on the
+  offending line, on a comment-only line immediately above it, or on a
+  ``def`` line (or the comment line / decorator block directly above the
+  ``def``) to cover the whole function body.  ``disable=all`` silences every
+  rule for that scope.  Use a pragma when the code is *deliberately* shaped
+  like a hazard and a one-line why-comment belongs next to it.
+* **file pragma** — ``# repro-lint: disable-file=<rule>`` anywhere in the
+  file silences the rule for the entire module (for generated or
+  deliberately-hostile fixture files).
+* **baseline** — a committed JSON file of grandfathered findings matched by
+  (path, rule, stripped source line), so a new rule can land with the
+  existing debt recorded instead of fixed-or-pragma'd in the same PR.  The
+  match is line-number independent: code can move without invalidating the
+  baseline, but *editing* a grandfathered line surfaces the finding again.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding", "ParsedModule", "Rule", "Report", "Analyzer",
+    "collect_files", "parse_module", "load_baseline", "baseline_entry",
+]
+
+PRAGMA_RE = re.compile(
+    r"repro-lint:\s*(disable-file|disable)\s*=\s*([A-Za-z0-9_\-]+"
+    r"(?:\s*,\s*[A-Za-z0-9_\-]+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored at path:line:col."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+        if self.hint:
+            s += f"  (fix: {self.hint})"
+        return s
+
+
+class ParsedModule:
+    """A parsed source file plus the side tables the rules share: raw lines,
+    pragma locations, comment-only lines, and function spans for
+    function-scope pragma resolution."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path.replace("\\", "/")
+        self.source = source
+        self.tree = tree
+        self.lines = source.splitlines()
+        #: line number -> set of rule ids disabled on that line
+        self.line_disables: Dict[int, Set[str]] = {}
+        self.file_disables: Set[str] = set()
+        self.comment_only_lines: Set[int] = set()
+        self._scan_pragmas()
+        #: (def_line, first_decorator_line, end_line) per function
+        self.func_spans: List[Tuple[int, int, int]] = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                deco_line = min([node.lineno]
+                                + [d.lineno for d in node.decorator_list])
+                self.func_spans.append(
+                    (node.lineno, deco_line, node.end_lineno or node.lineno))
+
+    def _scan_pragmas(self) -> None:
+        code_lines: Set[int] = set()
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(self.source).readline))
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            tokens = []
+        for tok in tokens:
+            if tok.type == tokenize.COMMENT:
+                m = PRAGMA_RE.search(tok.string)
+                if m:
+                    rules = {r.strip() for r in m.group(2).split(",")}
+                    if m.group(1) == "disable-file":
+                        self.file_disables |= rules
+                    else:
+                        self.line_disables.setdefault(
+                            tok.start[0], set()).update(rules)
+            elif tok.type not in (tokenize.NL, tokenize.NEWLINE,
+                                  tokenize.INDENT, tokenize.DEDENT,
+                                  tokenize.ENDMARKER):
+                code_lines.add(tok.start[0])
+        for line in self.line_disables:
+            if line not in code_lines:
+                self.comment_only_lines.add(line)
+
+    def _disabled_at(self, line: int, rule: str) -> bool:
+        rules = self.line_disables.get(line)
+        return bool(rules) and (rule in rules or "all" in rules)
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        rule = finding.rule
+        if rule in self.file_disables or "all" in self.file_disables:
+            return True
+        line = finding.line
+        if self._disabled_at(line, rule):
+            return True
+        # comment-only pragma line immediately above the finding
+        if line - 1 in self.comment_only_lines and \
+                self._disabled_at(line - 1, rule):
+            return True
+        # function-scope pragma: on the def line, on a decorator line, or on
+        # the comment-only line immediately above the def/decorator block
+        for def_line, deco_line, end_line in self.func_spans:
+            if not deco_line <= line <= end_line:
+                continue
+            for l in range(deco_line, def_line + 1):
+                if self._disabled_at(l, rule):
+                    return True
+            if deco_line - 1 in self.comment_only_lines and \
+                    self._disabled_at(deco_line - 1, rule):
+                return True
+        return False
+
+    def source_line(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+class Rule:
+    """Base class: subclasses set ``id``/``doc`` and implement ``check``."""
+
+    id: str = ""
+    doc: str = ""
+
+    def check(self, module: ParsedModule) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, module: ParsedModule, node: ast.AST, message: str,
+                hint: str = "") -> Finding:
+        return Finding(module.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), self.id, message, hint)
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]          # unsuppressed — these fail the build
+    pragma_suppressed: int = 0
+    baseline_suppressed: int = 0
+    n_files: int = 0
+    #: every finding before suppression, for --write-baseline
+    all_findings: List[Finding] = dataclasses.field(default_factory=list)
+    modules: Dict[str, ParsedModule] = dataclasses.field(default_factory=dict)
+
+
+def collect_files(paths: Sequence[str]) -> List[Path]:
+    """Expand files/directories into a sorted list of .py files (skipping
+    hidden directories and __pycache__)."""
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if any(part.startswith(".") or part == "__pycache__"
+                       for part in f.parts):
+                    continue
+                out.append(f)
+        elif path.suffix == ".py":
+            out.append(path)
+    seen: Set[Path] = set()
+    uniq = []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def parse_module(path: str, source: Optional[str] = None):
+    """Parse one file.  Returns a ParsedModule, or a Finding (rule
+    ``parse-error``) when the source does not parse."""
+    if source is None:
+        source = Path(path).read_text()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return Finding(str(path).replace("\\", "/"), e.lineno or 1,
+                       e.offset or 0, "parse-error", f"syntax error: {e.msg}")
+    return ParsedModule(str(path), source, tree)
+
+
+# ---------------------------------------------------------------------------
+# Baseline (grandfathered findings)
+# ---------------------------------------------------------------------------
+
+def baseline_entry(finding: Finding, module: Optional[ParsedModule]) -> dict:
+    context = module.source_line(finding.line) if module is not None else ""
+    return {"path": finding.path, "rule": finding.rule, "context": context}
+
+
+def load_baseline(path) -> Dict[Tuple[str, str, str], int]:
+    """Baseline file -> multiset of (path, rule, context) keys."""
+    data = json.loads(Path(path).read_text())
+    counts: Dict[Tuple[str, str, str], int] = {}
+    for e in data.get("findings", []):
+        key = (e["path"], e["rule"], e.get("context", ""))
+        counts[key] = counts.get(key, 0) + 1
+    return counts
+
+
+def write_baseline(path, findings: List[Finding],
+                   modules: Dict[str, ParsedModule]) -> None:
+    entries = [baseline_entry(f, modules.get(f.path)) for f in findings]
+    Path(path).write_text(json.dumps(
+        {"version": 1, "findings": entries}, indent=2, sort_keys=True) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Analyzer driver
+# ---------------------------------------------------------------------------
+
+class Analyzer:
+    def __init__(self, rules: Sequence[Rule],
+                 baseline: Optional[Dict[Tuple[str, str, str], int]] = None):
+        self.rules = list(rules)
+        self.baseline = dict(baseline) if baseline else {}
+
+    def run_files(self, files: Sequence) -> Report:
+        report = Report(findings=[], n_files=len(files))
+        budget = dict(self.baseline)
+        for f in files:
+            parsed = parse_module(str(f))
+            if isinstance(parsed, Finding):
+                report.all_findings.append(parsed)
+                report.findings.append(parsed)
+                continue
+            report.modules[parsed.path] = parsed
+            for rule in self.rules:
+                for finding in rule.check(parsed):
+                    report.all_findings.append(finding)
+                    if parsed.is_suppressed(finding):
+                        report.pragma_suppressed += 1
+                        continue
+                    key = (finding.path, finding.rule,
+                           parsed.source_line(finding.line))
+                    if budget.get(key, 0) > 0:
+                        budget[key] -= 1
+                        report.baseline_suppressed += 1
+                        continue
+                    report.findings.append(finding)
+        report.findings.sort(key=lambda x: (x.path, x.line, x.col, x.rule))
+        return report
+
+    def run_source(self, source: str, path: str = "<memory>") -> List[Finding]:
+        """Analyze one in-memory source string (the test-fixture entry
+        point).  Pragmas apply; the baseline does not."""
+        parsed = parse_module(path, source)
+        if isinstance(parsed, Finding):
+            return [parsed]
+        out: List[Finding] = []
+        for rule in self.rules:
+            for finding in rule.check(parsed):
+                if not parsed.is_suppressed(finding):
+                    out.append(finding)
+        out.sort(key=lambda x: (x.path, x.line, x.col, x.rule))
+        return out

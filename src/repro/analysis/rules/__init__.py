@@ -1,0 +1,28 @@
+"""repro-lint rule registry (DESIGN.md §15).
+
+To add a rule: subclass :class:`repro.analysis.core.Rule` in a new module
+here, give it a unique ``id`` and a one-line ``doc``, implement
+``check(module) -> Iterable[Finding]``, append an instance to ``ALL_RULES``,
+and add paired true-positive / true-negative fixtures to
+``tests/test_analysis.py``.
+"""
+from __future__ import annotations
+
+from .cache_key import CacheKeyRule
+from .compat_boundary import CompatBoundaryRule
+from .host_sync import HostSyncRule
+from .shard_safety import ShardSafetyRule
+from .single_core import SingleCoreRule
+
+ALL_RULES = [
+    SingleCoreRule(),
+    CompatBoundaryRule(),
+    HostSyncRule(),
+    ShardSafetyRule(),
+    CacheKeyRule(),
+]
+
+RULES_BY_ID = {rule.id: rule for rule in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_ID", "SingleCoreRule", "CompatBoundaryRule",
+           "HostSyncRule", "ShardSafetyRule", "CacheKeyRule"]

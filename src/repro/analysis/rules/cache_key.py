@@ -1,0 +1,124 @@
+"""cache-key: values feeding engine.cached_mapped keys must be hashable.
+
+``engine.cached_mapped(key, build)`` memoises compiled shard_map callables
+by ``key``.  An unhashable key raises at call time; worse, a *mutable but
+identity-hashed* key (or a mutable default argument feeding one) is a
+recompile bomb — every call builds a fresh key object, the cache never
+hits, and each miss re-traces and re-compiles the mapped function.
+
+Flagged:
+
+* a list/dict/set literal (or comprehension, or ``list()``/``dict()``/
+  ``set()``/``sorted()`` call) passed as the key argument of
+  ``cached_mapped`` / ``_cached_mapped`` or as a ``cache_key=``/``ident=``
+  kwarg anywhere — including through one level of simple local assignment
+  (``key = [...]; cached_mapped(key, ...)``);
+* a mutable default parameter on any function that calls ``cached_mapped``
+  (the classic way a "static" key argument turns out to be a fresh object
+  per call).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional
+
+from ..callgraph import dotted_name
+from ..core import Finding, ParsedModule, Rule
+
+_KEY_FUNCS = ("cached_mapped", "_cached_mapped")
+_KEY_KWARGS = ("cache_key", "ident")
+_MUTABLE_CTORS = {"list", "dict", "set", "sorted", "bytearray"}
+
+
+def _unhashable(node: ast.AST, assigns: Dict[str, List[ast.AST]],
+                depth: int = 0) -> Optional[ast.AST]:
+    """The sub-node proving ``node`` is unhashable/mutable, else None."""
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+        return node
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) and \
+            node.func.id in _MUTABLE_CTORS:
+        return node
+    if isinstance(node, ast.Tuple):
+        for e in node.elts:
+            bad = _unhashable(e, assigns, depth)
+            if bad is not None:
+                return bad
+    if isinstance(node, ast.Starred):
+        return _unhashable(node.value, assigns, depth)
+    if isinstance(node, ast.Name) and depth < 2:
+        for value in assigns.get(node.id, ()):
+            bad = _unhashable(value, assigns, depth + 1)
+            if bad is not None:
+                return bad
+    return None
+
+
+class CacheKeyRule(Rule):
+    id = "cache-key"
+    doc = ("arguments feeding engine.cached_mapped keys (key arg, "
+           "cache_key=/ident= kwargs) must be hashable and static; "
+           "mutable defaults on cached_mapped callers are recompile bombs")
+
+    def check(self, module: ParsedModule) -> Iterable[Finding]:
+        assigns: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        assigns.setdefault(tgt.id, []).append(node.value)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                    and isinstance(node.target, ast.Name):
+                assigns.setdefault(node.target.id, []).append(node.value)
+
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(module, node, assigns)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_defaults(module, node, assigns)
+
+    def _check_call(self, module: ParsedModule, call: ast.Call,
+                    assigns) -> Iterable[Finding]:
+        name = dotted_name(call.func)
+        tail = name.split(".")[-1] if name else ""
+        if tail in _KEY_FUNCS and call.args:
+            bad = _unhashable(call.args[0], assigns)
+            if bad is not None:
+                yield self.finding(
+                    module, call.args[0],
+                    f"unhashable/mutable value feeds the `{tail}` cache key",
+                    "use a tuple of hashable, static parts (sort + "
+                    "tuple() any collections first)")
+        for kw in call.keywords:
+            if kw.arg in _KEY_KWARGS:
+                bad = _unhashable(kw.value, assigns)
+                if bad is not None:
+                    yield self.finding(
+                        module, kw.value,
+                        f"unhashable/mutable value passed as `{kw.arg}=` "
+                        "compile-cache key",
+                        "use a tuple of hashable, static parts")
+
+    def _check_defaults(self, module: ParsedModule, fn,
+                        assigns) -> Iterable[Finding]:
+        calls_cache = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name and name.split(".")[-1] in _KEY_FUNCS:
+                    calls_cache = True
+                    break
+        if not calls_cache:
+            return
+        args = fn.args
+        defaults = list(args.defaults) + \
+            [d for d in args.kw_defaults if d is not None]
+        for default in defaults:
+            bad = _unhashable(default, {})
+            if bad is not None:
+                yield self.finding(
+                    module, default,
+                    f"mutable default on `{fn.name}` (a cached_mapped "
+                    "caller) — a fresh object per call defeats the "
+                    "compile cache",
+                    "default to None (or a tuple) and normalise inside")

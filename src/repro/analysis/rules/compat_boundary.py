@@ -1,0 +1,127 @@
+"""compat-boundary: drift-prone jax spellings live in compat.py ONLY.
+
+DESIGN.md §10: every jax API whose spelling or semantics moved between the
+versions we straddle is wrapped once in ``src/repro/compat.py``; the rest of
+the tree imports the wrapper.  This rule flags direct use of the drifted
+spellings anywhere else:
+
+* ``tree_flatten_with_path`` / ``flatten_with_path`` on ``jax.tree_util`` /
+  ``jax.tree`` — use ``compat.tree_flatten_with_path``;
+* ``lax.axis_size`` — use ``compat.axis_size`` (psum(1) fallback);
+* any ``.cost_analysis()`` method call — use ``compat.cost_analysis_dict``
+  (the return shape drifted: dict vs list-of-dict);
+* ``shard_map`` imported or referenced from ``jax`` / ``jax.experimental``
+  — use ``compat.shard_map`` (the entry point moved out of experimental and
+  the ``check_rep`` kwarg was renamed along the way);
+* ``with_sharding_constraint`` on ``lax`` / ``pjit`` — use
+  ``compat.with_sharding_constraint``.
+
+A method named like a drifted spelling on a *non-jax* object (for example
+``MeshRules._axis_size``, a host-side mesh-shape helper) is not flagged —
+this is exactly the false positive the old grep sweep could not avoid.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from ..callgraph import dotted_name
+from ..core import Finding, ParsedModule, Rule
+
+_TREE_ATTRS = ("tree_flatten_with_path", "flatten_with_path")
+
+
+def _base(node: ast.Attribute) -> Optional[str]:
+    return dotted_name(node.value)
+
+
+class CompatBoundaryRule(Rule):
+    id = "compat-boundary"
+    doc = ("drift-prone jax spellings (tree_flatten_with_path, axis_size, "
+           "cost_analysis, shard_map, with_sharding_constraint) must go "
+           "through src/repro/compat.py")
+
+    def applies(self, module: ParsedModule) -> bool:
+        return not module.path.endswith("compat.py")
+
+    def check(self, module: ParsedModule) -> Iterable[Finding]:
+        if not self.applies(module):
+            return
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.ImportFrom):
+                yield from self._check_import(module, node)
+            elif isinstance(node, ast.Attribute):
+                yield from self._check_attr(module, node)
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "cost_analysis":
+                yield self.finding(
+                    module, node,
+                    "direct .cost_analysis() call — its return shape "
+                    "drifted across jax versions",
+                    "use compat.cost_analysis_dict(compiled)")
+
+    def _check_import(self, module: ParsedModule,
+                      node: ast.ImportFrom) -> Iterable[Finding]:
+        mod = node.module or ""
+        if node.level:  # relative import — intra-repo, never a jax drift
+            return
+        names = [a.name for a in node.names]
+        if "shard_map" in mod or (mod in ("jax", "jax.experimental")
+                                  and "shard_map" in names):
+            yield self.finding(
+                module, node,
+                f"shard_map imported from `{mod}` — the entry point moved "
+                "across jax versions",
+                "from repro.compat import shard_map")
+        if mod in ("jax.tree_util", "jax.tree"):
+            for name in names:
+                if name in _TREE_ATTRS:
+                    yield self.finding(
+                        module, node,
+                        f"`{name}` imported from `{mod}` — spelling drifted",
+                        "from repro.compat import tree_flatten_with_path")
+        if mod.endswith("lax") and "axis_size" in names:
+            yield self.finding(
+                module, node,
+                "lax.axis_size imported directly — not present in older jax",
+                "from repro.compat import axis_size")
+        if (mod.endswith("pjit") or mod.endswith("lax")) and \
+                "with_sharding_constraint" in names:
+            yield self.finding(
+                module, node,
+                f"with_sharding_constraint imported from `{mod}` — "
+                "home module drifted",
+                "from repro.compat import with_sharding_constraint")
+
+    def _check_attr(self, module: ParsedModule,
+                    node: ast.Attribute) -> Iterable[Finding]:
+        base = _base(node)
+        if base is None:
+            return
+        tail = base.split(".")[-1]
+        if node.attr in _TREE_ATTRS and \
+                (tail == "tree_util" or base == "jax.tree"
+                 or base.endswith(".tree")):
+            yield self.finding(
+                module, node,
+                f"`{base}.{node.attr}` bypasses the compat boundary",
+                "use compat.tree_flatten_with_path")
+        elif node.attr == "axis_size" and tail == "lax":
+            yield self.finding(
+                module, node,
+                f"`{base}.axis_size` bypasses the compat boundary",
+                "use compat.axis_size (psum(1) on older jax)")
+        elif node.attr == "shard_map" and \
+                (base == "jax" or tail in ("experimental", "shard_map")):
+            yield self.finding(
+                module, node,
+                f"`{base}.shard_map` bypasses the compat boundary",
+                "use compat.shard_map")
+        elif node.attr == "with_sharding_constraint" and \
+                tail in ("lax", "pjit"):
+            yield self.finding(
+                module, node,
+                f"`{base}.with_sharding_constraint` bypasses the compat "
+                "boundary",
+                "use compat.with_sharding_constraint")

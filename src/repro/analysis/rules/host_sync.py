@@ -1,0 +1,111 @@
+"""host-sync: no device->host synchronisation inside traced functions.
+
+Inside anything that executes under ``jit`` / ``shard_map`` / Pallas
+tracing (see :mod:`repro.analysis.callgraph` for how "traced" is
+approximated), the following are silent performance cliffs or outright
+trace errors:
+
+* ``x.item()`` and ``x.block_until_ready()`` — a blocking transfer per call;
+* ``np.asarray(x)`` / ``np.array(x)`` on a non-literal — either a blocking
+  transfer (concrete array) or a TracerConversionError (traced value);
+* ``float(...)`` / ``int(...)`` / ``bool(...)`` of a *computed* value —
+  concretisation; ``int(static_param)`` on a plain argument is left alone,
+  only conversions whose argument contains a call are flagged;
+* ``jnp.nonzero`` / ``jnp.unique`` / ``jnp.where`` (1-arg) without ``size=``
+  — data-dependent output shape, untraceable (trace-hazard sub-check).
+
+Deliberate pre-trace host pulls (the engine's CSR cache in
+``_dst_sorted_stream``, host-driven multilevel scoring, ...) carry a
+``# repro-lint: disable=host-sync`` pragma with a why-comment; the pragma
+IS the allowlist, kept next to the code it excuses.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..callgraph import ModuleGraph, dotted_name
+from ..core import Finding, ParsedModule, Rule
+
+_NP_BASES = {"np", "numpy", "onp"}
+_JNP_BASES = {"jnp", "np", "numpy", "jax.numpy"}
+_SIZED = {"nonzero", "unique", "argwhere", "flatnonzero"}
+
+
+def _is_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_literal(e) for e in node.elts)
+    if isinstance(node, ast.UnaryOp):
+        return _is_literal(node.operand)
+    return False
+
+
+def _contains_call(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Call) for n in ast.walk(node))
+
+
+class HostSyncRule(Rule):
+    id = "host-sync"
+    doc = ("no .item()/.block_until_ready()/np.asarray()/float(computed) "
+           "inside functions reachable from jit/shard_map/Pallas tracing; "
+           "jnp.nonzero-style calls there need size=")
+
+    def check(self, module: ParsedModule) -> Iterable[Finding]:
+        graph = ModuleGraph(module)
+        for fn in graph.functions:
+            if fn not in graph.traced:
+                continue
+            for node in graph.body_nodes(fn):
+                if isinstance(node, ast.Call):
+                    yield from self._check_call(module, node)
+
+    def _check_call(self, module: ParsedModule,
+                    call: ast.Call) -> Iterable[Finding]:
+        func = call.func
+        if isinstance(func, ast.Attribute):
+            if func.attr == "item" and not call.args and not call.keywords:
+                yield self.finding(
+                    module, call,
+                    ".item() forces a device->host sync in a traced function",
+                    "keep the value on device, or hoist the readback out of "
+                    "the traced region")
+                return
+            if func.attr == "block_until_ready":
+                yield self.finding(
+                    module, call,
+                    ".block_until_ready() inside a traced function",
+                    "synchronise at the host call site, not inside the trace")
+                return
+        name = dotted_name(func)
+        if name is not None:
+            parts = name.split(".")
+            tail, base = parts[-1], ".".join(parts[:-1])
+            if tail in ("asarray", "array") and \
+                    (base in _NP_BASES or base.endswith(".numpy")) and \
+                    not base.startswith("jax") and base != "jnp":
+                if call.args and not _is_literal(call.args[0]):
+                    yield self.finding(
+                        module, call,
+                        f"{name}() on a non-literal pulls the value to host "
+                        "(or fails on a tracer)",
+                        "use jnp, or hoist the pull before tracing and "
+                        "pragma it with a why-comment")
+            elif tail in _SIZED and (base in _JNP_BASES
+                                     or base.endswith(".numpy")):
+                if not any(kw.arg == "size" for kw in call.keywords):
+                    yield self.finding(
+                        module, call,
+                        f"{name}() without size= has a data-dependent "
+                        "output shape — untraceable",
+                        "pass size= (and fill_value=) for a static shape")
+        if isinstance(func, ast.Name) and func.id in ("float", "int", "bool") \
+                and len(call.args) == 1 and not call.keywords \
+                and _contains_call(call.args[0]):
+            yield self.finding(
+                module, call,
+                f"{func.id}() of a computed value concretises it "
+                "(host sync / trace error)",
+                "keep it as a jnp scalar, or pragma a deliberate "
+                "host-driver readback")

@@ -1,0 +1,88 @@
+"""shard-safety: shard_map bodies use bound axes and blessed routing.
+
+Two hazards inside functions mapped by ``shard_map`` (directly, or through
+the engine's ``_shard_apply`` wrapper, or reached by call from such a
+function):
+
+* **unbound collective** — ``psum``/``pmax``/``all_gather``/... without an
+  axis name (or with an explicit ``None``) silently reduces over *nothing*
+  or raises at trace time depending on jax version.  Every collective must
+  name a bound mesh axis, positionally or via ``axis_name=``/``axes=``.
+* **raw cross-shard routing** — ``all_to_all``/``ppermute``/``pshuffle``
+  are the DGAS-bypass primitives; outside ``core/offload.py`` (the one
+  module allowed to implement remote access) cross-shard movement must go
+  through ``dgas`` / ``offload.remote_*`` so the address-translation layer
+  stays the single source of placement truth.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Set
+
+from ..callgraph import ModuleGraph, dotted_name
+from ..core import Finding, ParsedModule, Rule
+
+# collective tail -> index of the positional axis argument
+_COLLECTIVES = {
+    "psum": 1, "pmax": 1, "pmin": 1, "pmean": 1, "psum_scatter": 1,
+    "all_gather": 1, "all_to_all": 1, "ppermute": 1, "pshuffle": 1,
+    "axis_index": 0, "hierarchical_psum": 1, "pbroadcast": 1,
+}
+_AXIS_KWARGS = ("axis_name", "axes", "axis")
+_ROUTING = {"all_to_all", "ppermute", "pshuffle"}
+
+
+def _axis_argument(call: ast.Call, pos: int):
+    if len(call.args) > pos:
+        return call.args[pos]
+    for kw in call.keywords:
+        if kw.arg in _AXIS_KWARGS:
+            return kw.value
+    return None
+
+
+class ShardSafetyRule(Rule):
+    id = "shard-safety"
+    doc = ("inside shard_map-mapped functions, collectives must name a "
+           "bound mesh axis and cross-shard routing goes through "
+           "dgas/offload, not raw all_to_all/ppermute")
+
+    def check(self, module: ParsedModule) -> Iterable[Finding]:
+        graph = ModuleGraph(module)
+        roots: Set[ast.AST] = set()
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            tail = name.split(".")[-1] if name else ""
+            if tail in ("shard_map", "_shard_apply", "smap"):
+                roots.update(graph._function_args(node))
+        mapped = graph.reachable_from(roots)
+        in_offload = module.path.endswith("core/offload.py") or \
+            module.path.endswith("/offload.py") or module.path == "offload.py"
+        for fn in mapped:
+            for node in graph.body_nodes(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                tail = name.split(".")[-1]
+                if tail not in _COLLECTIVES:
+                    continue
+                if tail in _ROUTING and not in_offload:
+                    yield self.finding(
+                        module, node,
+                        f"raw `{name}` routing inside a shard_map body — "
+                        "cross-shard movement bypasses the DGAS layer",
+                        "use dgas / offload.remote_* (offload.py is the "
+                        "only module allowed to route directly)")
+                    continue
+                axis = _axis_argument(node, _COLLECTIVES[tail])
+                if axis is None or (isinstance(axis, ast.Constant)
+                                    and axis.value is None):
+                    yield self.finding(
+                        module, node,
+                        f"collective `{name}` without a bound mesh axis "
+                        "inside a shard_map body",
+                        "pass the mapped axis name (e.g. axis_name=axis)")

@@ -1,0 +1,113 @@
+"""single-core: the engine has exactly ONE stepping loop (DESIGN.md §14).
+
+AST port of the retired grep guard in ``scripts/check_single_core.py``.
+Grep counted the *string* ``lax.while_loop(`` — a comment, docstring, or
+aliased import could dodge it in either direction.  Here we count actual
+``Call`` nodes, so ``# lax.while_loop(`` no longer trips the guard and
+``wl = lax.while_loop; wl(...)`` no longer slips past it (the aliasing
+assignment itself references the primitive attribute and is counted).
+
+Invariants, checked only against ``core/engine.py``:
+
+* exactly one ``lax.while_loop`` use (the ``_core_loop`` stepping loop);
+* at most one ``lax.scan`` use (the dense fallback inside the same loop);
+* no ``fori_loop`` anywhere;
+* all five public runners exist and the ExecutionCore seam is intact:
+  ``_run_local`` / ``_run_distributed`` delegation calls are present and
+  something invokes ``_core_loop(core, ...)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..callgraph import dotted_name
+from ..core import Finding, ParsedModule, Rule
+
+_RUNNERS = ("run", "run_batched", "run_distributed",
+            "run_batched_distributed", "run_queue", "_core_loop")
+
+
+def _is_lax_primitive(node: ast.AST, tail: str) -> bool:
+    """True for ``lax.<tail>`` / ``jax.lax.<tail>`` attribute uses and for
+    bare ``<tail>`` names bound by a ``from jax.lax import <tail>``-style
+    alias (conservatively: any bare Name of that spelling)."""
+    if isinstance(node, ast.Attribute) and node.attr == tail:
+        base = dotted_name(node.value)
+        return base is not None and base.split(".")[-1] == "lax"
+    if isinstance(node, ast.Name) and node.id == tail:
+        return True
+    return False
+
+
+class SingleCoreRule(Rule):
+    id = "single-core"
+    doc = ("engine.py keeps exactly one lax.while_loop stepping loop, "
+           "<=1 lax.scan, no fori_loop, and runners delegate through "
+           "_run_local/_run_distributed into _core_loop(core, ...)")
+
+    def applies(self, module: ParsedModule) -> bool:
+        return module.path.endswith("core/engine.py") or \
+            module.path == "engine.py"
+
+    def check(self, module: ParsedModule) -> Iterable[Finding]:
+        if not self.applies(module):
+            return
+        while_loops: List[ast.AST] = []
+        scans: List[ast.AST] = []
+        fori: List[ast.AST] = []
+        defs = set()
+        calls = set()
+        core_loop_on_core = False
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.Attribute, ast.Name)):
+                if _is_lax_primitive(node, "while_loop"):
+                    while_loops.append(node)
+                elif _is_lax_primitive(node, "fori_loop"):
+                    fori.append(node)
+            if isinstance(node, ast.Attribute) and node.attr == "scan" and \
+                    _is_lax_primitive(node, "scan"):
+                scans.append(node)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.add(node.name)
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                calls.add(node.func.id)
+                if node.func.id == "_core_loop" and node.args and \
+                        isinstance(node.args[0], ast.Name) and \
+                        node.args[0].id == "core":
+                    core_loop_on_core = True
+
+        anchor = module.tree  # line 1 anchor for structural findings
+        if len(while_loops) != 1:
+            target = while_loops[1] if len(while_loops) > 1 else anchor
+            yield self.finding(
+                module, target,
+                f"engine has {len(while_loops)} lax.while_loop uses, "
+                "expected exactly 1 (the _core_loop stepping loop)",
+                "fold the extra loop into _core_loop / ExecutionCore")
+        if len(scans) > 1:
+            yield self.finding(
+                module, scans[1],
+                f"engine has {len(scans)} lax.scan uses, expected at most 1",
+                "express the extra scan through the core stepping loop")
+        for node in fori:
+            yield self.finding(
+                module, node, "fori_loop is banned in engine.py",
+                "use the _core_loop while_loop (bounded by max_iters)")
+        for name in _RUNNERS:
+            if name not in defs:
+                yield self.finding(
+                    module, anchor, f"required runner `{name}` is missing",
+                    "runners are the engine's public contract; restore it")
+        for name in ("_run_local", "_run_distributed"):
+            if name not in calls:
+                yield self.finding(
+                    module, anchor,
+                    f"no call to `{name}` — runner delegation seam broken",
+                    "public runners must delegate through "
+                    "_run_local/_run_distributed")
+        if "_core_loop" in defs and not core_loop_on_core:
+            yield self.finding(
+                module, anchor,
+                "no `_core_loop(core, ...)` call — ExecutionCore is bypassed",
+                "drive the stepping loop through an ExecutionCore instance")

@@ -14,15 +14,25 @@ Covered today (installed jax 0.4.x):
   to a static ``int`` under ``shard_map``, so it remains usable for shapes.
 * ``cost_analysis_dict``      — ``Compiled.cost_analysis()`` has returned a
   dict, a list of dicts (one per program), or ``None`` depending on version.
+* ``shard_map``               — lived in ``jax.experimental.shard_map`` for
+  the whole 0.4.x line and graduated to ``jax.shard_map`` (where the
+  ``check_rep`` kwarg became ``check_vma``) in newer releases.
+* ``with_sharding_constraint`` — moved homes from ``jax.experimental.pjit``
+  to ``jax.lax`` (and the pjit spelling now warns).
+
+The ``repro-lint`` compat-boundary rule enforces this policy mechanically:
+any use of the raw spellings above outside this file is a finding.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Mapping, Sequence, Union
 
 import jax
 from jax import lax
 
-__all__ = ["tree_flatten_with_path", "axis_size", "cost_analysis_dict"]
+__all__ = ["tree_flatten_with_path", "axis_size", "cost_analysis_dict",
+           "shard_map", "with_sharding_constraint"]
 
 AxisName = Union[str, Sequence[str]]
 
@@ -50,6 +60,44 @@ def axis_size(axis_name: AxisName) -> int:
             s *= _one_axis_size(a)
         return s
     return _one_axis_size(axis_name)
+
+
+# the drifted spellings below are the one sanctioned use — compat.py is the
+# single module exempt from the compat-boundary lint rule.
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(
+    inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f: Any, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_rep: bool = False, **kwargs: Any):
+    """``shard_map`` with the stable pre-graduation calling convention.
+
+    Accepts ``check_rep`` everywhere and translates it to ``check_vma`` on
+    jax versions where the kwarg was renamed; drops it entirely if neither
+    spelling exists.
+    """
+    kwargs.update(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if "check_rep" in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = check_rep
+    elif "check_vma" in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = check_rep
+    return _shard_map_impl(f, **kwargs)
+
+
+if hasattr(lax, "with_sharding_constraint"):
+    _wsc_impl = lax.with_sharding_constraint
+else:  # pre-0.4 spelling, kept for completeness of the policy
+    from jax.experimental.pjit import with_sharding_constraint as _wsc_impl
+
+
+def with_sharding_constraint(x: Any, shardings: Any):
+    """``with_sharding_constraint`` from whichever home module this jax has."""
+    return _wsc_impl(x, shardings)
 
 
 def cost_analysis_dict(compiled: Any) -> Mapping[str, float]:

@@ -36,8 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
-
+from ...compat import shard_map
 from .. import engine, offload, traffic
 from ..dgas import ATT, block_rule
 from ..graph import CSR, contract
@@ -51,6 +50,8 @@ __all__ = ["label_propagation", "label_propagation_distributed",
            "partition_equal"]
 
 
+# trace-safe: host-side test/driver helper comparing two *concrete*
+# labelings — repro-lint: disable=host-sync
 def partition_equal(a, b) -> bool:
     """True iff two labelings induce the same partition (bijective label
     correspondence) — the equivalence the distributed drivers promise, since
@@ -233,6 +234,8 @@ def louvain_candidate_program() -> engine.VertexProgram:
                                 msg_fn=msg_fn, update_fn=update_fn)
 
 
+# trace-safe: pre-trace host prep on concrete graph structure, once per
+# level (engine._dst_sorted_stream's pattern) — repro-lint: disable=host-sync
 def _vote_transpose(csr: CSR) -> CSR:
     """A^T of the self-loop-free voting graph (host prep, once per level).
 
@@ -325,6 +328,8 @@ def _sweep_jit(vote_t: CSR, csr: CSR, lab, kout, kin, w_tot, down_only):
                       w_tot, down_only)
 
 
+# trace-safe: deliberately host-driven — accept/stall control flow needs the
+# score on host each step — repro-lint: disable=host-sync
 def _hill_climb(step_fn, score_fn, x0, q0, max_steps: int, tol: float):
     """Greedy improving-only loop shared by the local and distributed sweep
     phases: ``step_fn(x, s)`` proposes, ``score_fn(cand)`` measures, a
@@ -344,6 +349,8 @@ def _hill_climb(step_fn, score_fn, x0, q0, max_steps: int, tol: float):
     return x, q_best
 
 
+# trace-safe: host driver around jitted sweeps (see _hill_climb) —
+# repro-lint: disable=host-sync
 def louvain_local_moves(csr: CSR, *, max_sweeps: int = 30,
                         sweep_tol: float = 1e-6):
     """Louvain phase 1 on one (coarse) graph: gain-gated local moves until
@@ -398,6 +405,8 @@ def multilevel(csr: CSR, *, max_levels: int = 10, max_sweeps: int = 30,
     return labels, scores
 
 
+# trace-safe: host-driven between-levels contraction — coarse shapes are
+# data-dependent, so the readbacks are the point — repro-lint: disable=host-sync
 def contract_distributed(g: ShardedGraph, att: ATT, labels, *,
                          counter: Optional[traffic.RouteByteCounter] = None):
     """Contract an edge-sharded graph along a global labeling, routing each
@@ -516,6 +525,8 @@ def _louvain_sweep_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                   kout, kin, w_tot)
 
 
+# trace-safe: host-driven level pipeline (engine.run_multilevel's shape) —
+# per-level shapes depend on readbacks — repro-lint: disable=host-sync
 def multilevel_distributed(csr: CSR, mesh: Mesh, *, axis=None,
                            max_levels: int = 10, max_sweeps: int = 30,
                            tol: float = 1e-4, sweep_tol: float = 1e-6,

@@ -14,8 +14,7 @@ from functools import partial
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
-
+from ...compat import shard_map
 from .. import engine
 from ..dgas import ATT
 from ..graph import CSR

@@ -187,6 +187,8 @@ class ServiceStats:
     def route_bytes_per_query(self) -> float:
         return self.route_bytes / self.queries if self.queries else 0.0
 
+    # trace-safe: stats readback over the host-side latency ledger —
+    # repro-lint: disable=host-sync
     def _latency_pct(self, pct: float) -> float:
         if not self.latencies_s:
             return 0.0
@@ -591,6 +593,8 @@ class GraphService:
         st.push_levels += int(pushes)
         st.pull_levels += int(pulls)
 
+    # trace-safe: host side of result extraction, after the jitted runner
+    # returned — repro-lint: disable=host-sync
     def _vertex_slots(self, verts: List[int]) -> Tuple[np.ndarray, np.ndarray]:
         """(owner, local) of each vertex under the serving ATT — the host
         side of reading one vertex out of a stacked (S, ..., per) result."""
@@ -609,6 +613,8 @@ class GraphService:
         for _, _, dl, ts in batch:
             self._account_latency(dl, ts)
 
+    # trace-safe: host executor — readbacks AFTER the jitted runner return
+    # are the service's product — repro-lint: disable=host-sync
     def _execute_traversal(self, kind: str, batch, lanes: List[int]) -> None:
         srcs = jnp.asarray(self._pad(lanes))
         lane_of = {s: i for i, s in enumerate(lanes)}
@@ -675,6 +681,8 @@ class GraphService:
         self.stats.lanes_used += len(lanes)
         self.stats.queries += len(batch)
 
+    # trace-safe: ledger accounting over concrete returned stats —
+    # repro-lint: disable=host-sync
     def _charge_traversal(self, stats, *, packed: bool,
                           distributed: bool) -> None:
         """Feed the ledger the run's level trace — stacked (S,) and globally
@@ -686,6 +694,8 @@ class GraphService:
                      first(stats["pulls"]), packed=packed,
                      fallbacks=first(stats["fallbacks"]) if distributed else 0)
 
+    # trace-safe: host executor, readback after the jitted sampler returns —
+    # repro-lint: disable=host-sync
     def _execute_sample(self, batch) -> None:
         verts = np.zeros((self.budget,), np.int32)
         salts = np.zeros((self.budget,), np.uint32)

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import with_sharding_constraint
+
 Axes = Union[None, str, Sequence[str]]
 
 __all__ = ["MeshRules", "LOGICAL", "make_rules"]
@@ -91,7 +93,7 @@ class MeshRules:
             else:
                 entries.append(axes)
                 used |= set(names)
-        return jax.lax.with_sharding_constraint(
+        return with_sharding_constraint(
             x, NamedSharding(self.mesh, P(*entries)))
 
     def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:

@@ -128,7 +128,7 @@ def gather_nodes(cfg, x, idx, rules: MeshRules):
     gather.  Requires x.shape[0] and idx.shape[0] divisible by the flat mesh
     (input_specs pads to 512).
     """
-    from jax.experimental.shard_map import shard_map
+    from ..compat import shard_map
     from jax.sharding import PartitionSpec as P
     if not _use_dgas(cfg, rules, x):
         return offload.dma_gather(x, idx)
@@ -157,7 +157,7 @@ def scatter_add_nodes(cfg, dest, idx, vals, rules: MeshRules):
     Large + meshed: PIUMA remote atomic adds — (index, value) pairs route to
     the owner shard which applies one fused segment update.
     """
-    from jax.experimental.shard_map import shard_map
+    from ..compat import shard_map
     from jax.sharding import PartitionSpec as P
     if isinstance(dest, int):
         dest = jnp.zeros((dest,) + vals.shape[1:], vals.dtype)

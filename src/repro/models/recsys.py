@@ -72,7 +72,7 @@ def _fm_from_rows(w0, rows):
 def _fm_scores_dgas(cfg: FMConfig, params, ids, rules: MeshRules):
     """shard_map DGAS lookup: index requests route to the owning table shard,
     only the requested (1+k)-float rows return — never a table replica."""
-    from jax.experimental.shard_map import shard_map
+    from ..compat import shard_map
     from jax.sharding import PartitionSpec as P
     from ..core.dgas import block_rule
     axes = rules.flat

@@ -607,7 +607,7 @@ def _moe_ffn(cfg: LMConfig, p, x, rules: MeshRules):
         return buf.at[gi, slot_l].set(jnp.where(keep_l[..., None], xsel, 0))
 
     if rules.mesh is not None and G == rules.dp_size():
-        from jax.experimental.shard_map import shard_map
+        from ..compat import shard_map
         from jax.sharding import PartitionSpec as PS
         bspec = rules.spec("batch")[0]
         xbuf = shard_map(
@@ -641,7 +641,7 @@ def _moe_ffn(cfg: LMConfig, p, x, rules: MeshRules):
 
     gk = (sg * keep)
     if rules.mesh is not None and G == rules.dp_size():
-        from jax.experimental.shard_map import shard_map
+        from ..compat import shard_map
         from jax.sharding import PartitionSpec as PS
         bspec = rules.spec("batch")[0]
         out = shard_map(

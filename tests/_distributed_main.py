@@ -10,8 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
-
+from repro.compat import shard_map
 from repro.core import dgas, offload, rmat
 from repro.core.algorithms import (spmv, pagerank, bfs, random_walks)
 from repro.core.algorithms.spmv import spmv_distributed

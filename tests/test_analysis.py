@@ -1,0 +1,487 @@
+"""repro-lint analyzer tests (DESIGN.md §15).
+
+Every rule gets at least one true-positive fixture (bad source → finding)
+and one true-negative fixture (good source → clean), plus framework tests
+for pragmas and the baseline, and the keystone check: the real repo is
+analyzer-clean.  Pure stdlib under test — none of these fixtures import
+jax at runtime.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ALL_RULES, RULES_BY_ID, Analyzer, collect_files
+from repro.analysis.core import load_baseline, write_baseline
+from repro.analysis.rules import (CacheKeyRule, CompatBoundaryRule,
+                                  HostSyncRule, ShardSafetyRule,
+                                  SingleCoreRule)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_rule(rule, source, path="src/repro/somemod.py"):
+    return Analyzer([rule]).run_source(textwrap.dedent(source), path)
+
+
+def rule_ids(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# single-core
+# ---------------------------------------------------------------------------
+
+GOOD_ENGINE = """
+    from jax import lax
+
+    def _core_loop(core, state):
+        # lax.while_loop( in a comment must not count
+        return lax.while_loop(lambda c: c[1], lambda c: c, state)
+
+    def _run_local(prog, state):
+        core = object()
+        return _core_loop(core, state)
+
+    def _run_distributed(prog, state):
+        core = object()
+        return _core_loop(core, state)
+
+    def run(prog, state):
+        return _run_local(prog, state)
+
+    def run_batched(prog, state):
+        return _run_local(prog, state)
+
+    def run_distributed(prog, state):
+        return _run_distributed(prog, state)
+
+    def run_batched_distributed(prog, state):
+        return _run_distributed(prog, state)
+
+    def run_queue(prog, state):
+        return lax.scan(lambda c, x: (c, x), state, None)
+"""
+
+
+def test_single_core_true_negative():
+    findings = run_rule(SingleCoreRule(), GOOD_ENGINE,
+                        "src/repro/core/engine.py")
+    assert findings == []
+
+
+def test_single_core_flags_second_loop():
+    bad = textwrap.dedent(GOOD_ENGINE) + (
+        "\ndef run_again(prog, state):\n    from jax import lax\n"
+        "    return lax.while_loop(lambda c: c[1], lambda c: c, state)\n")
+    findings = run_rule(SingleCoreRule(), bad, "src/repro/core/engine.py")
+    assert any("while_loop" in f.message for f in findings)
+
+
+def test_single_core_flags_fori_and_lost_runner():
+    bad = textwrap.dedent(GOOD_ENGINE).replace(
+        "def run_queue", "def run_queue_x") + \
+        "\ndef helper(n, f, x):\n    from jax import lax\n" \
+        "    return lax.fori_loop(0, n, f, x)\n"
+    findings = run_rule(SingleCoreRule(), bad, "src/repro/core/engine.py")
+    msgs = " | ".join(f.message for f in findings)
+    assert "fori_loop" in msgs and "run_queue" in msgs
+
+
+def test_single_core_ignores_other_files():
+    bad = "from jax import lax\n" \
+          "def two(a):\n    lax.while_loop(a, a, a)\n    lax.while_loop(a, a, a)\n"
+    assert run_rule(SingleCoreRule(), bad, "src/repro/core/other.py") == []
+
+
+def test_check_single_core_script_passes_on_real_engine():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_single_core.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK (one stepping loop)" in proc.stdout
+
+
+def test_check_single_core_check_fn_flags_regrowth():
+    sys.path.insert(0, str(ROOT / "scripts"))
+    try:
+        import check_single_core
+    finally:
+        sys.path.pop(0)
+    bad = textwrap.dedent(GOOD_ENGINE) + (
+        "\ndef rogue(state):\n    from jax import lax\n"
+        "    return lax.while_loop(lambda c: c[1], lambda c: c, state)\n")
+    assert check_single_core.check(bad) != []
+    assert check_single_core.check(textwrap.dedent(GOOD_ENGINE)) == []
+
+
+# ---------------------------------------------------------------------------
+# compat-boundary
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    "from jax.experimental.shard_map import shard_map\n",
+    "from jax.experimental import shard_map\n",
+    "import jax\nf = jax.shard_map\n",
+    "import jax\npairs, treedef = jax.tree_util.tree_flatten_with_path(t)\n",
+    "from jax.tree_util import tree_flatten_with_path\n",
+    "import jax\nn = jax.lax.axis_size('x')\n",
+    "c = fn.lower().compile()\ncost = c.cost_analysis()\n",
+    "import jax\ny = jax.lax.with_sharding_constraint(x, s)\n",
+    "from jax.experimental.pjit import with_sharding_constraint\n",
+])
+def test_compat_boundary_true_positives(bad):
+    findings = run_rule(CompatBoundaryRule(), bad)
+    assert rule_ids(findings) == ["compat-boundary"], bad
+
+
+@pytest.mark.parametrize("good", [
+    # the sanctioned spellings
+    "from repro.compat import shard_map, with_sharding_constraint\n",
+    "from ..compat import shard_map\n",
+    "from repro import compat\ncost = compat.cost_analysis_dict(c)\n",
+    # a host-side helper that merely shares a drifted name (sharding.py's
+    # MeshRules._axis_size) must NOT be flagged
+    "class R:\n"
+    "    def _axis_size(self, a):\n        return 1\n"
+    "    def dp(self):\n        return self._axis_size('x')\n",
+    # docstring mentions are not uses (dryrun.py's case)
+    'def f():\n    """uses cost_analysis() under the hood"""\n    return 1\n',
+])
+def test_compat_boundary_true_negatives(good):
+    assert run_rule(CompatBoundaryRule(), good) == [], good
+
+
+def test_compat_boundary_exempts_compat_py():
+    bad = "from jax.experimental.shard_map import shard_map\n"
+    assert Analyzer([CompatBoundaryRule()]).run_source(
+        bad, "src/repro/compat.py") == []
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+def test_host_sync_flags_item_in_jitted_fn():
+    src = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return x + x.sum().item()
+    """
+    findings = run_rule(HostSyncRule(), src)
+    assert any(".item()" in f.message for f in findings)
+
+
+def test_host_sync_flags_asarray_in_while_loop_body():
+    src = """
+        import numpy as np
+        from jax import lax
+
+        def go(x):
+            def body(c):
+                return np.asarray(c) + 1
+            return lax.while_loop(lambda c: c < 3, body, x)
+    """
+    findings = run_rule(HostSyncRule(), src)
+    assert any("np.asarray" in f.message for f in findings)
+
+
+def test_host_sync_flags_nonzero_without_size():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def live(x):
+            return jnp.nonzero(x > 0)
+    """
+    findings = run_rule(HostSyncRule(), src)
+    assert any("size=" in f.message for f in findings)
+
+
+def test_host_sync_true_negatives():
+    # host-only module: same calls, no tracing anywhere -> clean
+    host_only = """
+        import numpy as np
+
+        def summarize(result):
+            a = np.asarray(result)
+            return float(a.mean()), a.sum().item()
+    """
+    assert run_rule(HostSyncRule(), host_only) == []
+    # traced, but only safe constructs: jnp ops, int() of a plain argument,
+    # nonzero with size=
+    traced_safe = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x, budget):
+            k = int(budget)
+            idx, = jnp.nonzero(x > 0, size=8, fill_value=-1)
+            return jnp.asarray(idx)[:k]
+    """
+    assert run_rule(HostSyncRule(), traced_safe) == []
+
+
+def test_host_sync_pragma_allowlists_pre_trace_pull():
+    src = """
+        import jax
+        import numpy as np
+
+        # trace-safe: concrete graph structure, pulled before any trace —
+        # repro-lint: disable=host-sync
+        def budget(indptr):
+            d = np.asarray(indptr)
+            return int((d[1:] - d[:-1]).max())
+
+        @jax.jit
+        def step(x):
+            return x * 2
+    """
+    assert run_rule(HostSyncRule(), src) == []
+
+
+# ---------------------------------------------------------------------------
+# shard-safety
+# ---------------------------------------------------------------------------
+
+def test_shard_safety_flags_axisless_collective():
+    src = """
+        from jax import lax
+        from repro.compat import shard_map
+
+        def build(mesh, spec):
+            def shard_fn(x):
+                return lax.psum(x)
+            return shard_map(shard_fn, mesh=mesh, in_specs=spec,
+                             out_specs=spec)
+    """
+    findings = run_rule(ShardSafetyRule(), src)
+    assert any("without a bound mesh axis" in f.message for f in findings)
+
+
+def test_shard_safety_flags_none_axis_and_raw_routing():
+    src = """
+        from jax import lax
+        from repro.compat import shard_map
+
+        def build(mesh, spec):
+            def shard_fn(x, idx):
+                y = lax.pmax(x, None)
+                return lax.ppermute(y, "x", [(0, 1)])
+            return shard_map(shard_fn, mesh=mesh, in_specs=spec,
+                             out_specs=spec)
+    """
+    findings = run_rule(ShardSafetyRule(), src)
+    msgs = " | ".join(f.message for f in findings)
+    assert "without a bound mesh axis" in msgs and "routing" in msgs
+
+
+def test_shard_safety_true_negatives():
+    good = """
+        from jax import lax
+        from repro import offload
+        from repro.compat import shard_map
+
+        def build(mesh, spec, axis):
+            def shard_fn(x, idx):
+                got = offload.dgas_gather(x, idx, axis)
+                n = offload.hierarchical_psum(got, axis)
+                return lax.psum(n, axis_name=axis)
+            return shard_map(shard_fn, mesh=mesh, in_specs=spec,
+                             out_specs=spec)
+
+        def host_helper(x):
+            # not shard_map-mapped: collective rules don't apply here
+            return x
+    """
+    assert run_rule(ShardSafetyRule(), good) == []
+    # ppermute is legal inside offload.py itself
+    routing = """
+        from jax import lax
+        from repro.compat import shard_map
+
+        def build(mesh, spec):
+            def shard_fn(x):
+                return lax.ppermute(x, "x", [(0, 1)])
+            return shard_map(shard_fn, mesh=mesh, in_specs=spec,
+                             out_specs=spec)
+    """
+    assert Analyzer([ShardSafetyRule()]).run_source(
+        textwrap.dedent(routing), "src/repro/core/offload.py") == []
+
+
+def test_shard_safety_covers_shard_apply_wrapper():
+    src = """
+        from jax import lax
+
+        def plan(engine, operands, spec):
+            def shard_fn(x):
+                return lax.psum(x)
+            return engine._shard_apply(shard_fn, operands, spec)
+    """
+    findings = run_rule(ShardSafetyRule(), src)
+    assert any("without a bound mesh axis" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# cache-key
+# ---------------------------------------------------------------------------
+
+def test_cache_key_flags_list_key():
+    src = """
+        from repro.core import engine
+
+        def plan(mesh, axes, build):
+            return engine.cached_mapped([mesh, tuple(axes)], build)
+    """
+    findings = run_rule(CacheKeyRule(), src)
+    assert any("cache key" in f.message for f in findings)
+
+
+def test_cache_key_flags_assigned_list_and_kwarg():
+    src = """
+        def plan(engine, operands, spec, build):
+            key = ["core", spec]
+            return engine._shard_apply(build, operands, spec, cache_key=key)
+    """
+    findings = run_rule(CacheKeyRule(), src)
+    assert any("cache_key" in f.message for f in findings)
+
+
+def test_cache_key_flags_mutable_default_on_caller():
+    src = """
+        from repro.core import engine
+
+        def plan(mesh, build, axes=[]):
+            return engine.cached_mapped((mesh, tuple(axes)), build)
+    """
+    findings = run_rule(CacheKeyRule(), src)
+    assert any("mutable default" in f.message for f in findings)
+
+
+def test_cache_key_true_negatives():
+    good = """
+        from repro.core import engine
+
+        def plan(mesh, axes, att, build, extras=None):
+            key = ("core", mesh, tuple(axes), att)
+            return engine.cached_mapped(key, build, ident=(mesh, att))
+
+        def no_cache(axes=[]):
+            # mutable default is fine on functions that never touch the cache
+            return list(axes)
+    """
+    assert run_rule(CacheKeyRule(), good) == []
+
+
+# ---------------------------------------------------------------------------
+# framework: pragmas, baseline, CLI
+# ---------------------------------------------------------------------------
+
+BAD_IMPORT = "from jax.experimental.shard_map import shard_map\n"
+
+
+def test_line_pragma_suppresses_only_named_rule():
+    src = ("from jax.experimental.shard_map import shard_map"
+           "  # repro-lint: disable=compat-boundary\n")
+    assert Analyzer(ALL_RULES).run_source(src, "src/repro/x.py") == []
+    wrong = ("from jax.experimental.shard_map import shard_map"
+             "  # repro-lint: disable=host-sync\n")
+    assert Analyzer(ALL_RULES).run_source(wrong, "src/repro/x.py") != []
+
+
+def test_file_pragma_and_disable_all():
+    src = "# repro-lint: disable-file=compat-boundary\n" + BAD_IMPORT
+    assert Analyzer(ALL_RULES).run_source(src, "src/repro/x.py") == []
+    src_all = BAD_IMPORT + "x = 1  # repro-lint: disable=all\n"
+    # disable=all on an unrelated line does not cover line 1
+    assert Analyzer(ALL_RULES).run_source(src_all, "src/repro/x.py") != []
+
+
+def test_function_scope_pragma_covers_body():
+    src = """
+        import jax
+
+        @jax.jit
+        def step(x):  # repro-lint: disable=host-sync
+            return x + x.sum().item()
+    """
+    assert Analyzer(ALL_RULES).run_source(
+        textwrap.dedent(src), "src/repro/x.py") == []
+
+
+def test_baseline_grandfathers_by_content_not_line(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(BAD_IMPORT)
+    analyzer = Analyzer(ALL_RULES)
+    report = analyzer.run_files([f])
+    assert len(report.findings) == 1
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, report.findings, report.modules)
+    # same content, moved two lines down -> still baselined
+    f.write_text("# a comment\nX = 1\n" + BAD_IMPORT)
+    report2 = Analyzer(ALL_RULES, load_baseline(bl)).run_files([f])
+    assert report2.findings == [] and report2.baseline_suppressed == 1
+    # an *edited* offending line surfaces again
+    f.write_text(BAD_IMPORT.replace("shard_map\n", "shard_map as sm\n"))
+    report3 = Analyzer(ALL_RULES, load_baseline(bl)).run_files([f])
+    assert len(report3.findings) == 1
+
+
+def test_cli_exit_codes_and_no_jax_import(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(BAD_IMPORT)
+    env_path = str(ROOT / "src")
+    # findings -> exit 1, and the report names the rule
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(bad), "--no-baseline"],
+        capture_output=True, text=True, cwd=tmp_path,
+        env={"PYTHONPATH": env_path, "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "compat-boundary" in proc.stdout
+    # clean tree -> exit 0, even with jax made unimportable: the analyzer
+    # must never import the runtime it inspects
+    good = tmp_path / "good.py"
+    good.write_text("X = 1\n")
+    bad.unlink()
+    guard = tmp_path / "jax.py"
+    guard.write_text("raise ImportError('lint lane must not import jax')\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(good), "--no-baseline"],
+        capture_output=True, text=True, cwd=tmp_path,
+        env={"PYTHONPATH": f"{tmp_path}:{env_path}",
+             "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_rule_registry_complete():
+    assert set(RULES_BY_ID) == {"single-core", "compat-boundary",
+                                "host-sync", "shard-safety", "cache-key"}
+    for rule in ALL_RULES:
+        assert rule.doc, rule.id
+
+
+# ---------------------------------------------------------------------------
+# the keystone: the real repo is analyzer-clean
+# ---------------------------------------------------------------------------
+
+def test_repo_is_analyzer_clean():
+    files = collect_files([str(ROOT / "src"), str(ROOT / "tests")])
+    assert len(files) > 50
+    baseline = load_baseline(ROOT / "lint_baseline.json")
+    # baseline entries are recorded relative to the repo root; findings on
+    # absolute paths must match, so rebase the keys
+    rebased = {(str(ROOT / p).replace("\\", "/"), r, c): n
+               for (p, r, c), n in baseline.items()}
+    report = Analyzer(ALL_RULES, rebased).run_files(files)
+    assert report.findings == [], "\n".join(
+        f.format() for f in report.findings)
+    # the pragma allowlist is real and in use (engine/louvain/service)
+    assert report.pragma_suppressed > 0

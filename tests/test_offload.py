@@ -11,8 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
-
+from repro.compat import shard_map
 from repro.core import dgas, engine, offload, traffic
 
 MESH = jax.make_mesh((1,), ("x",))
