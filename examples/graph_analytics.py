@@ -1,6 +1,11 @@
 """The paper's Table II workloads end-to-end on one RMAT graph.
 
   PYTHONPATH=src python examples/graph_analytics.py [--scale 12]
+                                                    [--placement sync|async]
+
+`--placement async` runs the >= 8-device distributed demo with
+bounded-staleness shard pacing (DESIGN §14, PR 7) and prints a sync-vs-async
+traversal latency comparison alongside the served stream.
 """
 import argparse
 import time
@@ -17,6 +22,11 @@ from repro.core.algorithms import (spmv, spmspv, pagerank, bfs, random_walks,
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=int, default=12)
+ap.add_argument("--placement", choices=("sync", "async"), default="sync",
+                help="distributed demo placement; async = bounded-staleness "
+                     "shard pacing (DESIGN §14)")
+ap.add_argument("--sync-interval", type=int, default=8,
+                help="micro-steps per global check when --placement async")
 args = ap.parse_args()
 
 g = rmat(args.scale, 16, seed=7)
@@ -79,7 +89,27 @@ if len(jax.devices()) >= 8:
     from repro.launch.mesh import make_cores_mesh
 
     mesh = make_cores_mesh(8)
-    dsvc = GraphService(g, batch_budget=32, mesh=mesh, cache_capacity=1024)
+
+    if args.placement == "async":
+        # head-to-head traversal latency: the same sharded graph, sync level
+        # barrier vs bounded-staleness pacing (warm runs; first call compiles)
+        from repro.core import dgas
+        from repro.core.algorithms import sssp_batched_distributed
+        from repro.core.algorithms.distgraph import shard_graph
+
+        gsh, att = shard_graph(g, 8, row_att=dgas.block_rule(g.n_rows, 8))
+        srcs = jnp.asarray(rng.integers(0, g.n_rows, 8), jnp.int32)
+        for pl in ("sync", "async"):
+            fn = (lambda pl=pl: sssp_batched_distributed(
+                gsh, att, srcs, mesh, placement=pl,
+                sync_interval=args.sync_interval))
+            fn()  # compile
+            timed(f"SSSP x8 shards ({pl})", fn)
+
+    dsvc = GraphService(g, batch_budget=32, mesh=mesh, cache_capacity=1024,
+                        placement=args.placement,
+                        sync_interval=args.sync_interval,
+                        cost_seed="auto")
     for warm in (Reachability(0, 1), PPRTopK(0, k=4)):
         dsvc.query(warm)  # compile before the timed stream
     dsvc.reset_stats()

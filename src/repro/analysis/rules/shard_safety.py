@@ -27,6 +27,9 @@ _COLLECTIVES = {
     "psum": 1, "pmax": 1, "pmin": 1, "pmean": 1, "psum_scatter": 1,
     "all_gather": 1, "all_to_all": 1, "ppermute": 1, "pshuffle": 1,
     "axis_index": 0, "hierarchical_psum": 1, "pbroadcast": 1,
+    # the async placement's buffered-flush exchange (offload.buffered_flush)
+    # is a collective: the outbox transpose must bind the mapped axis
+    "buffered_flush": 1,
 }
 _AXIS_KWARGS = ("axis_name", "axes", "axis")
 _ROUTING = {"all_to_all", "ppermute", "pshuffle"}

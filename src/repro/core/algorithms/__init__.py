@@ -2,8 +2,8 @@ from .spmv import spmv, spmv_ell, spmv_bbcsr, spmv_distributed
 from .spmspv import spmspv, spmspv_ell
 from .pagerank import (pagerank, pagerank_distributed, ppr, ppr_batched,
                        ppr_topk)
-from .bfs import (bfs, bfs_distributed, bfs_program, msbfs, msbfs_distributed,
-                  msbfs_program)
+from .bfs import (bfs, bfs_distributed, bfs_program, bfs_level_program,
+                  msbfs, msbfs_distributed, msbfs_program)
 from .sssp import (sssp, sssp_distributed, sssp_program, auto_delta,
                    sssp_batched, sssp_batched_distributed)
 from .cc import (connected_components, connected_components_distributed,
@@ -19,7 +19,7 @@ __all__ = [
     "spmv", "spmv_ell", "spmv_bbcsr", "spmv_distributed",
     "spmspv", "spmspv_ell",
     "pagerank", "pagerank_distributed", "ppr", "ppr_batched", "ppr_topk",
-    "bfs", "bfs_distributed", "bfs_program",
+    "bfs", "bfs_distributed", "bfs_program", "bfs_level_program",
     "msbfs", "msbfs_distributed", "msbfs_program",
     "sssp", "sssp_distributed", "sssp_program", "auto_delta",
     "sssp_batched", "sssp_batched_distributed",

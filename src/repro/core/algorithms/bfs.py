@@ -21,8 +21,10 @@ from ..dgas import ATT
 from ..graph import CSR, BBCSR
 from .distgraph import ShardedGraph
 
-__all__ = ["bfs", "bfs_distributed", "bfs_program",
+__all__ = ["bfs", "bfs_distributed", "bfs_program", "bfs_level_program",
            "msbfs", "msbfs_distributed", "msbfs_program"]
+
+_INF = jnp.float32(jnp.inf)
 
 
 def bfs_program() -> engine.VertexProgram:
@@ -57,6 +59,38 @@ def bfs(csr: CSR, source: int, *, max_levels: int | None = None,
     state = engine.run(csr, bfs_program(), state0, frontier0,
                        max_iters=max_levels, mode=mode, kernel_bb=kernel_bb)
     return state["level"]
+
+
+def bfs_level_program() -> engine.VertexProgram:
+    """Monotone min-level BFS — the async placement's BFS program.
+
+    :func:`bfs_program` stamps a destination's level from the iteration
+    counter the first time it is touched, which is order-*dependent* under
+    the async placement's deferred message delivery.  This variant is
+    label-correcting instead: the state is a float distance (levels are
+    small ints, exact in f32), active vertices emit ``dist + 1``, and
+    destinations keep the **min** — the unit-weight (min, +) semiring, whose
+    unique fixpoint is the hop distance no matter in which order (or how
+    stale) messages arrive.  Convert with
+    ``where(isfinite(dist), dist, -1).astype(int32)`` to match
+    :func:`bfs_program` levels exactly.
+    """
+
+    def msg_fn(state, frontier):
+        return jnp.where(frontier > 0, state["dist"] + 1.0, _INF)
+
+    def update_fn(state, acc, frontier, it):
+        better = acc < state["dist"]
+        return ({"dist": jnp.minimum(state["dist"], acc)},
+                better.astype(jnp.int32))
+
+    return engine.VertexProgram(edge_op="copy", combine="min",
+                                msg_fn=msg_fn, update_fn=update_fn)
+
+
+def _levels_from_dist(dist: jnp.ndarray) -> jnp.ndarray:
+    """f32 min-level fixpoint -> int32 levels, unreachable = -1."""
+    return jnp.where(jnp.isfinite(dist), dist, -1.0).astype(jnp.int32)
 
 
 def msbfs_program(n_lanes: int) -> engine.VertexProgram:
@@ -110,13 +144,20 @@ def msbfs(csr: CSR, sources, *, max_levels: int | None = None,
 def msbfs_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh, *,
                       axis=None, max_levels: int = 64,
                       push_edge_capacity: Optional[int] = None,
-                      return_stats: bool = False):
+                      return_stats: bool = False, placement: str = "sync",
+                      sync_interval: Optional[int] = None):
     """Batched-lane BFS on the distributed push pipeline.
 
     Returns levels stacked (S, B, per_shard) under the `att` layout — slice
     ``[:, b, :]`` is bit-identical to ``bfs_distributed(g, att, sources[b],
     mesh)``.  One compacted exchange per level carries all B lanes as packed
     words (`offload.remote_scatter_or`).
+
+    placement='async' runs the monotone :func:`bfs_level_program` on vmapped
+    valued lanes instead (the first-touch level stamp of the packed program
+    is order-dependent under deferred delivery; the min-level fixpoint is
+    not), with `sync_interval` local micro-steps per global check — same
+    levels, ≥K× fewer global reductions.
     """
     S, per = att.n_shards, att.per_shard
     src = jnp.asarray(sources, jnp.int32)
@@ -125,6 +166,21 @@ def msbfs_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh, *,
     owner = att.owner(src)
     local = att.local(src)
     lanes = jnp.arange(B)
+    if placement == "async":
+        k = int(sync_interval) if sync_interval is not None else 8
+        dist0 = jnp.full((S, B, per), _INF) \
+            .at[owner, lanes, local].set(0.0)
+        f0 = jnp.zeros((S, B, per), jnp.int32) \
+            .at[owner, lanes, local].set(1)
+        out = engine.run_batched_distributed(
+            g, att, mesh, bfs_level_program(), {"dist": dist0}, f0,
+            axis=axis, max_iters=max_levels * k,
+            push_edge_capacity=push_edge_capacity,
+            return_stats=return_stats, placement="async", sync_interval=k)
+        if return_stats:
+            state, stats = out
+            return _levels_from_dist(state["dist"]), stats
+        return _levels_from_dist(out["dist"])
     # traceable init (sources may be a jit argument — the service's padded
     # batches): lanes occupy disjoint bits of their word, so the scatter-add
     # is the bitwise OR even when sources collide on a (shard, vertex, word)
@@ -147,18 +203,29 @@ def msbfs_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh, *,
 def bfs_distributed(g: ShardedGraph, att: ATT, source: int, mesh: Mesh, *,
                     axis=None, max_levels: int = 64,
                     g_rev: Optional[ShardedGraph] = None,
-                    mode: str = "push") -> jnp.ndarray:
+                    mode: str = "push", placement: str = "sync",
+                    sync_interval: Optional[int] = None) -> jnp.ndarray:
     """Returns level array stacked (S, per_shard) under `att` layout.
 
     mode='push' reproduces the seed behavior exactly; pass `g_rev`
     (engine.reverse_graph) with mode='auto' for the direction-optimizing
-    variant.
+    variant.  placement='async' (push-only) runs the monotone
+    :func:`bfs_level_program` with bounded-staleness pacing — identical
+    levels, `sync_interval`× fewer global reductions.
     """
     S, per = att.n_shards, att.per_shard
     owner = int(att.owner(jnp.asarray(source)))
     local = int(att.local(jnp.asarray(source)))
-    state0 = {"level": jnp.full((S, per), -1, jnp.int32).at[owner, local].set(0)}
     frontier0 = jnp.zeros((S, per), jnp.int32).at[owner, local].set(1)
+    if placement == "async":
+        k = int(sync_interval) if sync_interval is not None else 8
+        dist0 = jnp.full((S, per), _INF).at[owner, local].set(0.0)
+        state = engine.run_distributed(
+            g, att, mesh, bfs_level_program(), {"dist": dist0}, frontier0,
+            axis=axis, max_iters=max_levels * k, mode=mode,
+            placement="async", sync_interval=k)
+        return _levels_from_dist(state["dist"])
+    state0 = {"level": jnp.full((S, per), -1, jnp.int32).at[owner, local].set(0)}
     state = engine.run_distributed(g, att, mesh, bfs_program(), state0,
                                    frontier0, axis=axis, max_iters=max_levels,
                                    g_rev=g_rev, mode=mode)

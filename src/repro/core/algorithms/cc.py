@@ -78,10 +78,17 @@ def connected_components(csr: CSR, *, max_iters: Optional[int] = None,
 
 
 def connected_components_distributed(g: ShardedGraph, att: ATT, mesh: Mesh, *,
-                                     axis=None,
-                                     max_iters: int = 256) -> jnp.ndarray:
+                                     axis=None, max_iters: int = 256,
+                                     placement: str = "sync",
+                                     sync_interval: Optional[int] = None
+                                     ) -> jnp.ndarray:
     """Labels stacked (S, per_shard) under `att`.  `g` must already hold the
-    symmetric edge set (build from `symmetrize(csr)`)."""
+    symmetric edge set (build from `symmetrize(csr)`).
+
+    The min-label program is monotone, so placement='async' (bounded-
+    staleness pacing, `sync_interval` local sweeps per global check) reaches
+    the identical label fixpoint with no program changes.
+    """
     S, per = att.n_shards, att.per_shard
     shards = jnp.arange(S, dtype=jnp.int32)[:, None]
     locals_ = jnp.arange(per, dtype=jnp.int32)[None, :]
@@ -90,5 +97,6 @@ def connected_components_distributed(g: ShardedGraph, att: ATT, mesh: Mesh, *,
     frontier0 = jnp.ones((S, per), jnp.int32)
     state = engine.run_distributed(g, att, mesh, cc_program(), state0,
                                    frontier0, axis=axis, max_iters=max_iters,
-                                   mode="push")
+                                   mode="push", placement=placement,
+                                   sync_interval=sync_interval)
     return state["label"]

@@ -160,7 +160,9 @@ def sssp_batched(csr: CSR, sources, *, delta: Optional[float] = None,
 def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
                              *, axis=None, delta: float = 1.0,
                              max_iters: int = 256,
-                             return_stats: bool = False):
+                             return_stats: bool = False,
+                             placement: str = "sync",
+                             sync_interval: Optional[int] = None):
     """Batched distances stacked (S, B, per_shard) under `att`; slice
     ``[:, b, :]`` matches ``sssp_distributed(g, att, sources[b], mesh,
     delta=delta)`` — all B lanes' remote atomic-min relaxations share each
@@ -176,7 +178,13 @@ def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
     owner = att.owner(src)
     local = att.local(src)
     lanes = jnp.arange(B)
-    prog = sssp_program(delta, global_min=lambda x: lax.pmin(x, ax))
+    # async: per-shard bucket pacing — each shard advances its own bound
+    # from its local pending set (exactly the local engine's rule); the
+    # (min, +) fixpoint is schedule-independent, so distances still match
+    # the sync placement bit-for-bit while the two pmin collectives per
+    # level disappear from the micro-stepped path.
+    prog = sssp_program(delta) if placement == "async" else \
+        sssp_program(delta, global_min=lambda x: lax.pmin(x, ax))
     state0 = {
         "dist": jnp.full((S, B, per), _INF).at[owner, lanes, local].set(0.0),
         "pending": jnp.zeros((S, B, per), bool).at[owner, lanes, local].set(True),
@@ -186,7 +194,9 @@ def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
     out = engine.run_batched_distributed(g, att, mesh, prog, state0,
                                          frontier0, axis=axis,
                                          max_iters=max_iters,
-                                         return_stats=return_stats)
+                                         return_stats=return_stats,
+                                         placement=placement,
+                                         sync_interval=sync_interval)
     if return_stats:
         state, stats = out
         return state["dist"], stats
@@ -194,16 +204,23 @@ def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
 
 
 def sssp_distributed(g: ShardedGraph, att: ATT, source: int, mesh: Mesh, *,
-                     axis=None, delta: float = 1.0,
-                     max_iters: int = 256) -> jnp.ndarray:
-    """Distances stacked (S, per_shard) under `att`; remote atomic-min push."""
+                     axis=None, delta: float = 1.0, max_iters: int = 256,
+                     placement: str = "sync",
+                     sync_interval: Optional[int] = None) -> jnp.ndarray:
+    """Distances stacked (S, per_shard) under `att`; remote atomic-min push.
+
+    placement='async': bounded-staleness pacing with per-shard bucket
+    bounds (local gmin — PIUMA's own per-block bucket model); the (min, +)
+    fixpoint is schedule-independent so distances match 'sync' exactly.
+    """
     axis = axis if axis is not None else mesh.axis_names[0]
     ax = axis if isinstance(axis, str) else tuple(axis)
     S, per = att.n_shards, att.per_shard
     owner = int(att.owner(jnp.asarray(source)))
     local = int(att.local(jnp.asarray(source)))
 
-    prog = sssp_program(delta, global_min=lambda x: lax.pmin(x, ax))
+    prog = sssp_program(delta) if placement == "async" else \
+        sssp_program(delta, global_min=lambda x: lax.pmin(x, ax))
     state0 = {
         "dist": jnp.full((S, per), _INF).at[owner, local].set(0.0),
         "pending": jnp.zeros((S, per), bool).at[owner, local].set(True),
@@ -211,5 +228,7 @@ def sssp_distributed(g: ShardedGraph, att: ATT, source: int, mesh: Mesh, *,
     }
     frontier0 = jnp.zeros((S, per), jnp.int32).at[owner, local].set(1)
     state = engine.run_distributed(g, att, mesh, prog, state0, frontier0,
-                                   axis=axis, max_iters=max_iters, mode="push")
+                                   axis=axis, max_iters=max_iters, mode="push",
+                                   placement=placement,
+                                   sync_interval=sync_interval)
     return state["dist"]

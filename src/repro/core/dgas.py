@@ -112,6 +112,16 @@ class ATT:
             return shard * per + local
         return jnp.take(self.boundaries, shard) + local
 
+    def flat_slot(self, gid: jnp.ndarray) -> jnp.ndarray:
+        """Dense outbox address of each global id: owner * per_shard + local.
+
+        The async placement's deferred-message buffers (offload.buffered_flush)
+        are laid out as (n_shards * per_shard, ...) so that a plain reshape
+        splits them per destination peer; this is the slot a message for
+        ``gid`` occupies in such a buffer.
+        """
+        return self.owner(gid) * self.per_shard + self.local(gid)
+
     def shard_slice(self, shard: int) -> tuple[int, int]:
         """Host-side: (start, count) of globally-contiguous ids owned by `shard`.
 

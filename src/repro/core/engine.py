@@ -10,10 +10,16 @@ the :class:`ExecutionCore` (DESIGN.md §14): a single stepping loop
 * **lane representation** — ``scalar`` (one traversal), ``valued`` (B
   concurrent traversals as vmapped (B, n) lanes), ``packed`` (B boolean
   traversals bit-packed into (n, ceil(B/32)) uint32 words, MS-BFS style);
-* **placement** — ``local`` (one device) or shard_map-``distributed``
+* **placement** — ``local`` (one device), shard_map-``distributed``
   (stacked (S, ...) operands, owner-routed exchanges, globally-agreed
-  branches), sharing one ``_MAPPED_CACHE`` keying scheme with the algorithm
-  layer (louvain's compiled sweeps).
+  branches, one global reduction per level), or ``async`` (the distributed
+  placement with bounded-staleness shard pacing: each shard runs up to
+  ``sync_interval`` collective-free local micro-steps against its resident
+  partition, deferring remote contributions into a dense combine outbox
+  that one ``offload.buffered_flush`` exchange delivers at each global
+  convergence check — the PIUMA fine-grained-asynchrony model, bit-identical
+  to sync for monotone combines); all share one ``_MAPPED_CACHE`` keying
+  scheme with the algorithm layer (louvain's compiled sweeps).
 
 The five public runners — :func:`run`, :func:`run_batched`,
 :func:`run_distributed`, :func:`run_batched_distributed`, :func:`run_queue` —
@@ -420,12 +426,19 @@ class ExecutionCore:
       update: (state, acc, frontier, it) -> (state, next_frontier).
       count:  frontier -> int32 global active count (psum'd under the
               distributed placement so every shard agrees).
+      pace:   optional (state, frontier, it) -> (state, frontier, it) — the
+              async placement's bounded-staleness hook, run at the top of
+              every loop body: advance up to sync_interval-1 collective-free
+              local micro-steps (deferring remote traffic into the outbox
+              carried inside ``state``) before the body's globally-checked
+              step.  None (the default) keeps the body fully synchronous.
     """
 
     msg: Callable
     step: Callable
     update: Callable
     count: Callable
+    pace: Optional[Callable] = None
 
 
 def _lane_ops(prog: VertexProgram, lanes: str):
@@ -461,6 +474,8 @@ def _core_loop(core: ExecutionCore, state0: Any, frontier0: jnp.ndarray, *,
 
     def body(carry):
         state, frontier, it, alive, (n_push, n_pull, n_fb) = carry
+        if core.pace is not None:  # async: local micro-steps first
+            state, frontier, it = core.pace(state, frontier, it)
         msg = core.msg(state, frontier)
         it_key = jax.random.fold_in(key, it) if key is not None else None
         acc, was_push, fb = core.step(msg, frontier, alive, it_key)
@@ -475,6 +490,16 @@ def _core_loop(core: ExecutionCore, state0: Any, frontier0: jnp.ndarray, *,
                                                              carry0)
     return state, {"iters": it, "pushes": n_push, "pulls": n_pull,
                    "fallbacks": n_fb}
+
+
+def _scan_steps(body, carry, xs):
+    """The engine's ONE fixed-length scan call site.  Both fixed-length
+    iteration shapes — `run_queue`'s per-iteration body and the async
+    placement's collective-free micro-step pacing — lower to this helper, so
+    the `single-core` rule's ≤1-scan budget keeps a second stepping loop from
+    regrowing unnoticed (the exhaustion loop stays `_core_loop`'s
+    while_loop)."""
+    return lax.scan(body, carry, xs)
 
 
 def _direction_step(dense, sparse, mode: str, threshold):
@@ -1077,6 +1102,74 @@ def _pull_step_shard(own, remote, val, msg, att_in: ATT, att_out: ATT, axis,
     return _scatter_combine(acc, local_own, ev, prog.combine, prog.ident)
 
 
+def _async_split(src, dst, val, att: ATT, axis, prog: VertexProgram,
+                 lanes: str):
+    """Plan the async placement's *split* push pass (DESIGN.md §14).
+
+    Every resident edge is either **local** (destination owned by this shard
+    — its contribution is applied to the local accumulator immediately) or
+    **remote** (its contribution is folded into the dense ``(S*per, ...)``
+    outbox at `ATT.flat_slot`, to be delivered by the next
+    `offload.buffered_flush`).  A pass is completely collective-free, which
+    is what lets the pacing scan run K of them between global checks.
+
+    Returns ``(pass_, orient, merge, outbox0)``:
+      pass_(msg, outbox) -> (acc, outbox) — acc is the (per[, lanes]) local
+        accumulator in scatter layout, outbox the updated deferred buffer.
+      orient(acc) — scatter layout -> the update_fn's lane layout
+        (transpose for valued lanes, identity otherwise).
+      merge(a, b) — the program's combine, elementwise (folds flushed
+        arrivals into the local accumulator; both in scatter layout).
+      outbox0(msg_aval) -> identity-filled outbox for the msg shape/dtype.
+    """
+    per = att.per_shard
+    me = offload.my_shard(axis)
+    in_range = src >= 0
+    lsrc = jnp.where(in_range, att.local(jnp.maximum(src, 0)), -1)
+    d_safe = jnp.maximum(dst, 0)
+    is_local = in_range & (att.owner(d_safe) == me)
+    lidx = jnp.where(is_local, att.local(d_safe), -1)
+    ridx = jnp.where(in_range & ~is_local, att.flat_slot(d_safe), -1)
+
+    if lanes == "packed":
+        def pass_(msg, outbox):
+            em = offload.dma_gather(msg, lsrc, fill=0).astype(jnp.uint32)
+            acc = offload.segment_or(lidx, em, per)
+            outbox = outbox | offload.segment_or(ridx, em, outbox.shape[0])
+            return acc, outbox
+
+        orient = lambda a: a
+        merge = jnp.bitwise_or
+    else:
+        def pass_(msg, outbox):
+            flat = msg.T if lanes == "valued" else msg       # gather by row
+            em = offload.dma_gather(flat, lsrc, fill=prog.ident)
+            ev = val if lanes == "scalar" else val[:, None]
+            ev = _apply_edge(em, ev, prog.edge_op) \
+                if prog.edge_op != "copy" else em
+            mask = in_range if lanes == "scalar" else in_range[:, None]
+            ev = jnp.where(mask, ev, jnp.asarray(prog.ident, em.dtype))
+            acc0 = jnp.full((per,) + ev.shape[1:], prog.ident, em.dtype)
+            acc = _scatter_combine(acc0, lidx, ev, prog.combine, prog.ident)
+            outbox = _scatter_combine(outbox, ridx, ev, prog.combine,
+                                      prog.ident)
+            return acc, outbox
+
+        orient = (lambda a: a.T) if lanes == "valued" else (lambda a: a)
+        merge = {"add": jnp.add, "min": jnp.minimum,
+                 "max": jnp.maximum}[prog.combine]
+
+    def outbox0(msg_aval):
+        if lanes == "packed":
+            return jnp.zeros((att.n_shards * per,) + tuple(msg_aval.shape[1:]),
+                             jnp.uint32)
+        trail = (msg_aval.shape[0],) if lanes == "valued" else ()
+        return jnp.full((att.n_shards * per,) + trail, prog.ident,
+                        msg_aval.dtype)
+
+    return pass_, orient, merge, outbox0
+
+
 def reverse_graph(csr: CSR, att: ATT) -> ShardedGraph:
     """Shard the *transposed* edge list by destination owner (= `att`, the
     vertex rule) for the distributed pull direction."""
@@ -1089,9 +1182,30 @@ def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                      prog: VertexProgram, state0: Any, frontier0: jnp.ndarray,
                      *, lanes: str, axis, max_iters: int, mode: str,
                      switch_frac: float, push_edge_capacity,
-                     g_rev, return_stats: bool):
+                     g_rev, return_stats: bool, placement: str = "sync",
+                     sync_interval: int = 1):
     """Shared distributed wrapper: plan a sharded ExecutionCore and run the
-    single stepping loop inside one shard_map (cached via `cached_mapped`)."""
+    single stepping loop inside one shard_map (cached via `cached_mapped`).
+
+    placement 'sync' is the per-level bulk-synchronous engine; 'async' is the
+    bounded-staleness variant: sync_interval-1 collective-free local
+    micro-steps (`_async_split` + the pacing scan) between global checks,
+    each check being one `offload.buffered_flush` + the termination psum.
+    """
+    if placement not in ("sync", "async"):
+        raise ValueError(
+            f"placement must be 'sync' or 'async', got {placement!r}")
+    if placement == "async":
+        if prog.structured:
+            raise NotImplementedError(
+                "the async placement defers messages in a dense combine "
+                "outbox: structured combines (argmax_weighted/sample) have "
+                "no identity-mergeable buffer entry")
+        if mode != "push":
+            raise ValueError("the async placement paces the split "
+                             "local/remote push pass: mode must be 'push'")
+        if sync_interval < 1:
+            raise ValueError(f"sync_interval must be >= 1, got {sync_interval}")
     axis = axis if axis is not None else mesh.axis_names[0]
     axes = _axes_list(axis)
     switch_count = max(1, int(att.n_global * switch_frac))
@@ -1112,42 +1226,94 @@ def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
         frontier = frontier[0]
         state = jax.tree.unflatten(state_def, [l[0] for l in leaves])
         msg_of, update, union = _lane_ops(prog, lanes)
-        if lanes == "scalar":
-            def push_step(s, d, v, msg, cap):
-                return _push_step_shard(s, d, v, msg, att, axis, prog,
-                                        capacity=cap)
-        else:
-            push_step = _batched_push_step(att, axis, prog,
-                                           packed=lanes == "packed")
-        push = _push_dispatch(push_step, src, dst, val, att, axes, union,
-                              edge_cap, m_fwd, compact)
 
-        def pull(msg):
-            # g_rev rows: src = output vertex (owned here), dst = input vertex
-            return _pull_step_shard(rsrc, rdst, rval, msg, att, att, axis,
-                                    prog, capacity=m_rev, gather_mode="dgas")
+        def count(f):
+            return offload.hierarchical_psum(
+                union(f).astype(jnp.int32).sum(), axes)
 
-        if mode == "push":
-            def step(msg, frontier, alive, it_key):
-                acc, fb = push(msg, frontier)
-                return acc, jnp.int32(1), fb
-        elif mode == "pull":
-            def step(msg, frontier, alive, it_key):
-                return pull(msg), jnp.int32(0), jnp.int32(0)
+        if placement == "async":
+            # Bounded-staleness pacing: the carried state is (state, outbox).
+            # Each loop body = sync_interval-1 collective-free split passes
+            # (pace), then one globally-checked step: split pass + one
+            # buffered_flush delivering every deferred remote contribution +
+            # the termination psum.  The outbox is always fully drained
+            # before `count`, so alive == 0 means global quiescence.
+            pass_, orient, merge, outbox0 = _async_split(src, dst, val, att,
+                                                         axis, prog, lanes)
+            box_id = outbox0(jax.eval_shape(msg_of, state, frontier))
+
+            def amsg(wrapped, f):
+                st, box = wrapped
+                return msg_of(st, f), box
+
+            def astep(msg_box, f, alive, it_key):
+                m, box = msg_box
+                acc, box = pass_(m, box)
+                arrived = offload.buffered_flush(box, axis,
+                                                 combine=prog.combine)
+                # stats: 'pushes' counts flushes under the async placement
+                return orient(merge(acc, arrived)), jnp.int32(1), jnp.int32(0)
+
+            def aupdate(wrapped, acc, f, it):
+                st, _ = wrapped
+                st, f = update(st, acc, f, it)
+                return (st, box_id), f  # flushed: fresh identity outbox
+
+            def apace(wrapped, f, it):
+                st, box = wrapped
+
+                def micro(carry, step_it):
+                    st_, box_, f_ = carry
+                    acc_, box_ = pass_(msg_of(st_, f_), box_)
+                    st_, f_ = update(st_, orient(acc_), f_, step_it)
+                    return (st_, box_, f_), None
+
+                (st, box, f), _ = _scan_steps(
+                    micro, (st, box, f), it + jnp.arange(sync_interval - 1))
+                return (st, box), f, it + jnp.int32(sync_interval - 1)
+
+            core = ExecutionCore(
+                msg=amsg, step=astep, update=aupdate, count=count,
+                pace=apace if sync_interval > 1 else None)
+            state = (state, box_id)
         else:
-            def step(msg, frontier, alive, it_key):
-                def do_push():
+            if lanes == "scalar":
+                def push_step(s, d, v, msg, cap):
+                    return _push_step_shard(s, d, v, msg, att, axis, prog,
+                                            capacity=cap)
+            else:
+                push_step = _batched_push_step(att, axis, prog,
+                                               packed=lanes == "packed")
+            push = _push_dispatch(push_step, src, dst, val, att, axes, union,
+                                  edge_cap, m_fwd, compact)
+
+            def pull(msg):
+                # g_rev rows: src = output vertex (owned here), dst = input
+                return _pull_step_shard(rsrc, rdst, rval, msg, att, att, axis,
+                                        prog, capacity=m_rev,
+                                        gather_mode="dgas")
+
+            if mode == "push":
+                def step(msg, frontier, alive, it_key):
                     acc, fb = push(msg, frontier)
                     return acc, jnp.int32(1), fb
-                return lax.cond(
-                    alive <= switch_count, do_push,
-                    lambda: (pull(msg), jnp.int32(0), jnp.int32(0)))
+            elif mode == "pull":
+                def step(msg, frontier, alive, it_key):
+                    return pull(msg), jnp.int32(0), jnp.int32(0)
+            else:
+                def step(msg, frontier, alive, it_key):
+                    def do_push():
+                        acc, fb = push(msg, frontier)
+                        return acc, jnp.int32(1), fb
+                    return lax.cond(
+                        alive <= switch_count, do_push,
+                        lambda: (pull(msg), jnp.int32(0), jnp.int32(0)))
 
-        core = ExecutionCore(
-            msg=msg_of, step=step, update=update,
-            count=lambda f: offload.hierarchical_psum(
-                union(f).astype(jnp.int32).sum(), axes))
+            core = ExecutionCore(msg=msg_of, step=step, update=update,
+                                 count=count)
         state, stats = _core_loop(core, state, frontier, max_iters=max_iters)
+        if placement == "async":
+            state = state[0]  # drop the (drained) outbox
         out = tuple(l[None] for l in jax.tree.leaves(state))
         if return_stats:
             out = out + tuple(stats[k][None] for k in
@@ -1164,7 +1330,8 @@ def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                 *state_leaves)
     cache_key = ("core", _mesh_key(mesh), _axis_key(axis), _att_key(att),
                  (lanes, mode, int(max_iters), float(switch_frac), edge_cap,
-                  compact, use_rev, m_fwd, m_rev, return_stats, state_def),
+                  compact, use_rev, m_fwd, m_rev, return_stats, state_def,
+                  placement, int(sync_interval)),
                  tuple((tuple(x.shape), str(x.dtype)) for x in operands))
     out = _shard_apply(mesh, axis, shard_fn, operands, cache_key=cache_key,
                        ident=prog)
@@ -1181,7 +1348,8 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                     g_rev: Optional[ShardedGraph] = None, mode: str = "push",
                     switch_frac: float = 1 / 32,
                     push_edge_capacity: Optional[int] = None,
-                    return_stats: bool = False):
+                    return_stats: bool = False, placement: str = "sync",
+                    sync_interval: Optional[int] = None):
     """Distributed loop; `state0`/`frontier0` are stacked (S, per) per `att`.
 
     The (scalar lanes, distributed placement) point of the ExecutionCore
@@ -1191,6 +1359,14 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
       behavior), 'pull' (requires `g_rev`; every level gathers via dgas), or
       'auto' (push while the globally-psum'd frontier is below
       `switch_frac * n`, pull once it saturates — Beamer's heuristic).
+    placement: 'sync' (one global reduction per level) or 'async'
+      (bounded-staleness pacing: each shard runs `sync_interval` local
+      micro-steps per global check, deferring cross-shard messages into a
+      dense combine outbox flushed once per check — requires mode='push' and
+      a non-structured combine; fixpoints are bit-identical to 'sync' for
+      monotone programs, see DESIGN.md §14).
+    sync_interval: local micro-steps per global check under 'async'
+      (default 8; 1 = flush every step, which reproduces the sync schedule).
     push_edge_capacity: per-peer routing capacity for the *compacted* push
       step.  When a level's globally-agreed active-edge count fits, the shard
       compacts active edges with nonzero-into-capacity and routes at this
@@ -1211,11 +1387,15 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                          "through run_batched_distributed")
     if mode in ("pull", "auto") and g_rev is None:
         raise ValueError(f"mode={mode!r} needs g_rev (see reverse_graph)")
+    if sync_interval is None:
+        sync_interval = 8 if placement == "async" else 1
     return _run_distributed(g, att, mesh, prog, state0, frontier0,
                             lanes="scalar", axis=axis, max_iters=max_iters,
                             mode=mode, switch_frac=switch_frac,
                             push_edge_capacity=push_edge_capacity,
-                            g_rev=g_rev, return_stats=return_stats)
+                            g_rev=g_rev, return_stats=return_stats,
+                            placement=placement,
+                            sync_interval=int(sync_interval))
 
 
 def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
@@ -1224,7 +1404,9 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                             axis: Optional[AxisName] = None, max_iters: int,
                             switch_frac: float = 1 / 32,
                             push_edge_capacity: Optional[int] = None,
-                            return_stats: bool = False):
+                            return_stats: bool = False,
+                            placement: str = "sync",
+                            sync_interval: Optional[int] = None):
     """Distributed batched loop: B concurrent traversals, one push pipeline.
 
     The (valued | packed lanes, distributed placement) points of the
@@ -1247,6 +1429,12 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
     overflows the capacity fall back to full-capacity routing (counted in
     ``stats['fallbacks']``), exactly as in :func:`run_distributed`.
 
+    placement/sync_interval: as :func:`run_distributed` — 'async' paces each
+    shard through `sync_interval` local micro-steps per global check (the
+    batched engine is already push-only, so every batched program with a
+    monotone combine qualifies; under 'async' stats count micro-steps in
+    'iters' and buffered flushes in 'pushes').
+
     Returns the final state pytree stacked (S, ...); ``return_stats`` adds
     {'iters', 'pushes', 'pulls', 'fallbacks'} ((S,) int32, identical on
     every shard; 'pulls' is always 0 — the batched distributed engine is
@@ -1257,12 +1445,16 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
             "structured combines are not lane-batched: sampling is already "
             "batch-shaped (sample_neighbors / run_queue)")
     packed = prog.combine == "or"
+    if sync_interval is None:
+        sync_interval = 8 if placement == "async" else 1
     return _run_distributed(g, att, mesh, prog, state0, frontier0,
                             lanes="packed" if packed else "valued",
                             axis=axis, max_iters=max_iters, mode="push",
                             switch_frac=switch_frac,
                             push_edge_capacity=push_edge_capacity,
-                            g_rev=None, return_stats=return_stats)
+                            g_rev=None, return_stats=return_stats,
+                            placement=placement,
+                            sync_interval=int(sync_interval))
 
 
 def spmv_pass(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,
@@ -1308,7 +1500,8 @@ class QueueProgram:
 def run_queue(mesh: Mesh, prog: QueueProgram, items0: jnp.ndarray,
               payload0: Any, operands: Any, *, n_iters: int,
               axis: Optional[AxisName] = None,
-              key: Optional[jax.Array] = None, state0: Any = ()):
+              key: Optional[jax.Array] = None, state0: Any = (),
+              sync_interval: int = 1):
     """Queue-driven distributed runner — shard_map plumbing owned once.
 
     Frontier programs are bitmap-shaped; walker / sampler workloads are a bag
@@ -1324,6 +1517,13 @@ def run_queue(mesh: Mesh, prog: QueueProgram, items0: jnp.ndarray,
     payload0: pytree of (S, cap, ...) companion data riding with the items.
     operands: pytree of (S, ...) sharded arrays handed to every step
               (graph shards, lookup tables, ...).
+    sync_interval: rebalance cadence (the async placement's knob for queue
+      work): the queue-engine steal/balance — the body's only collective —
+      runs every sync_interval-th iteration, so shards proceed at their own
+      pace in between (entries still read remote data through dgas_gather
+      by global id, so results stay valid; only load placement and the
+      per-(shard, it) key stream differ from cadence 1).  Default 1 keeps
+      the fully-balanced schedule.
     Returns (state, outs) with each `out` leaf stacked (S, n_iters, ...).
     """
     axis = axis if axis is not None else mesh.axis_names[0]
@@ -1353,16 +1553,27 @@ def run_queue(mesh: Mesh, prog: QueueProgram, items0: jnp.ndarray,
                                    payload)
             q = offload.QueueState(items,
                                    (items >= 0).sum().astype(jnp.int32))
-            if pl_leaves:
-                q, payload = offload.queue_balance(q, axis, payload)
+
+            def balance(args):
+                q_, pl_ = args
+                if pl_leaves:
+                    return offload.queue_balance(q_, axis, pl_)
+                return offload.queue_balance(q_, axis), pl_
+
+            if sync_interval > 1:
+                # `it` is the scan index — identical on every shard — so the
+                # branch is globally uniform and the collective inside the
+                # cond is trace-safe (same pattern as _push_dispatch).
+                q, payload = lax.cond((it % sync_interval) == 0, balance,
+                                      lambda args: args, (q, payload))
             else:
-                q = offload.queue_balance(q, axis)
+                q, payload = balance((q, payload))
             items, payload, state, out = prog.step_fn(
                 ops, q.items, payload, state, it,
                 jax.random.fold_in(shard_key, it))
             return (items, payload, state), out
 
-        (items, payload, state), outs = lax.scan(
+        (items, payload, state), outs = _scan_steps(
             body, (items, payload, state), jnp.arange(n_iters))
         return jax.tree.map(lambda l: l[None], (state, outs))
 

@@ -42,6 +42,7 @@ __all__ = [
     "segment_or",
     "dgas_gather", "remote_scatter_add", "remote_scatter_combine",
     "remote_scatter_weighted_mode", "remote_scatter_or",
+    "buffered_flush",
     "all_gather_gather",
     "QueueState", "queue_make", "queue_balance",
     "hierarchical_psum", "barrier", "prefix_scan",
@@ -436,6 +437,46 @@ def remote_scatter_weighted_mode(per_shard_n: int, gidx: jnp.ndarray,
     ridx = jnp.where(recvv, ridx, -1)
     rlab = jnp.where(recvv, rlab, -1)
     return segment_weighted_mode(ridx, rlab, rw, per_shard_n)
+
+
+def buffered_flush(outbox: jnp.ndarray, axis_name: AxisName, *,
+                   combine: str) -> jnp.ndarray:
+    """Deliver a dense deferred-message buffer to its owner shards.
+
+    The async placement's exchange primitive (DESIGN.md §14): between global
+    checks each shard folds remote contributions into a dense ``(S*per, ...)``
+    outbox addressed by flat slot ``owner * per + local`` (`ATT.flat_slot`)
+    using the program's combine, so arbitrarily many local micro-steps of
+    traffic collapse into one fixed-size buffer.  At the sync point this
+    single collective transposes the buffers — peer p's slice lands on shard
+    p — and the S inbound slices are folded with the same combine.  Because
+    the combine is associative and commutative, delivery order (i.e. the
+    staleness window) cannot change the merged value.
+
+    outbox: (S * per, ...) with identity-filled empty slots
+      (0 for 'add'/'or', +inf for 'min', -inf for 'max').
+    combine: 'add' | 'min' | 'max' | 'or' ('or' expects uint32 lane words).
+    Returns the (per, ...) merged arrivals for this shard's residents.
+    """
+    S = axis_size(axis_name)
+    lead = outbox.shape[0]
+    if lead % S != 0:
+        raise ValueError(
+            f"outbox leading dim {lead} is not divisible by {S} shards")
+    box = outbox.reshape((S, lead // S) + outbox.shape[1:])
+    arrived = _all_to_all(box, axis_name)  # [p] = peer p's messages for me
+    if combine == "add":
+        return arrived.sum(axis=0)
+    if combine == "min":
+        return arrived.min(axis=0)
+    if combine == "max":
+        return arrived.max(axis=0)
+    if combine == "or":
+        out = arrived[0]
+        for i in range(1, S):  # static: S is a compile-time mesh size
+            out = out | arrived[i]
+        return out
+    raise ValueError(f"unsupported combine {combine!r} for buffered_flush")
 
 
 def all_gather_gather(local: jnp.ndarray, gidx: jnp.ndarray, att: ATT,

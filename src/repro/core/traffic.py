@@ -24,7 +24,8 @@ from typing import Dict, Optional
 __all__ = ["Machine", "XEON", "PIUMA_NODE", "AccessProfile", "SPMV_PROFILES",
            "APP_PROFILES", "time_per_elem", "speedup", "multinode_time_per_elem",
            "ROUTE_PAYLOAD_BYTES", "CONTRACT_PAYLOAD_BYTES",
-           "push_level_route_bytes", "batched_payload_bytes", "RouteByteCounter"]
+           "push_level_route_bytes", "batched_payload_bytes",
+           "flush_route_bytes", "level_collectives", "RouteByteCounter"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +138,36 @@ def push_level_route_bytes(n_shards: int, per_peer_capacity: int,
     return n_shards * per_peer_capacity * payload_bytes
 
 
+def flush_route_bytes(n_shards: int, per_shard: int, elem_bytes: int) -> int:
+    """Bytes one shard injects per async buffered flush.
+
+    The async placement's outbox (`offload.buffered_flush`) is a dense
+    ``(S * per_shard,)`` combine buffer, so one flush ships ``per_shard``
+    elements to each of the S peers regardless of how many micro-steps of
+    messages it absorbed — the ledger prices *flushes*, not levels.  Dense in
+    the residents, so a flush costs about what a full-capacity push level
+    does; the async win is doing K levels of work per flush, not shrinking
+    any one exchange.
+    """
+    return n_shards * per_shard * elem_bytes
+
+
+def level_collectives(*, placement: str, compact: bool = True,
+                      program_collectives: int = 0) -> int:
+    """Global reductions/exchanges one engine body (level or sync step) costs.
+
+    sync push level: overflow psum (compacted only) + 3 routed all_to_alls
+    (index, value, validity planes of `offload._route`) + the termination
+    psum, plus any program-issued collectives (e.g. delta-stepping's two
+    global-min pmins per level).  async sync step: one buffered flush + the
+    termination psum — the program runs shard-local between checks, so
+    program collectives don't multiply.
+    """
+    if placement == "async":
+        return 2
+    return (1 if compact else 0) + 3 + 1 + program_collectives
+
+
 @dataclasses.dataclass
 class RouteByteCounter:
     """Per-level routed-byte ledger for an engine run (analytical counter).
@@ -167,6 +198,14 @@ class RouteByteCounter:
         self.total_bytes += int(gather_bytes)
         self.levels += 1
         return int(gather_bytes)
+
+    def flush_level(self, per_shard: int, elem_bytes: int = 4) -> int:
+        """One async buffered flush (`offload.buffered_flush`): the dense
+        per-resident outbox changes hands, priced by `flush_route_bytes`."""
+        b = flush_route_bytes(self.n_shards, per_shard, elem_bytes)
+        self.total_bytes += b
+        self.levels += 1
+        return b
 
     def contract_level(self, n_routed_edges: int,
                        payload_bytes: int = CONTRACT_PAYLOAD_BYTES) -> int:

@@ -110,6 +110,86 @@ def test_ppr_valued_golden():
 
 
 # ---------------------------------------------------------------------------
+# async placement (PR 7): bounded-staleness pacing replays the same goldens
+# ---------------------------------------------------------------------------
+# A 1-device mesh makes the distributed runners (and so the async placement)
+# executable inside the ordinary suite — S=1 still traces the full pacing
+# machinery (micro-step scan, buffered flush, termination psum), and the
+# monotone programs must land on the *identical* fixpoint the pre-refactor
+# engine produced, at every staleness bound.  The S=8 partition checks live
+# in tests/_distributed_main.py.
+
+from repro.core import dgas
+from repro.core.algorithms import (bfs_distributed, msbfs_distributed,
+                                   sssp_distributed, sssp_batched_distributed,
+                                   connected_components_distributed,
+                                   symmetrize)
+from repro.core.algorithms.distgraph import shard_graph
+from repro.launch.mesh import make_cores_mesh
+
+INTERVALS = (1, 2, 8)
+_MESH1 = make_cores_mesh(1)
+_GSH1, _ATT1 = shard_graph(G, 1, row_att=dgas.block_rule(G.n_rows, 1))
+_US = symmetrize(U)
+_GSH1_U, _ATT1_U = shard_graph(_US, 1, row_att=dgas.block_rule(_US.n_rows, 1))
+
+
+def _unshard1(x, n):
+    return np.asarray(x).reshape(-1)[:n]
+
+
+@pytest.mark.parametrize("k", INTERVALS)
+def test_bfs_async_golden(k):
+    lv = bfs_distributed(_GSH1, _ATT1, 0, _MESH1, placement="async",
+                         sync_interval=k)
+    np.testing.assert_array_equal(_unshard1(lv, G.n_rows),
+                                  _gold("bfs/scalar/push"))
+
+
+@pytest.mark.parametrize("k", INTERVALS)
+def test_msbfs_async_golden(k):
+    lv = msbfs_distributed(_GSH1, _ATT1, SOURCES, _MESH1, placement="async",
+                           sync_interval=k)
+    lv = np.asarray(lv).transpose(1, 0, 2).reshape(len(SOURCES), -1)
+    np.testing.assert_array_equal(lv[:, : G.n_rows], _gold("bfs/packed/push"))
+
+
+@pytest.mark.parametrize("k", INTERVALS)
+def test_sssp_async_golden(k):
+    d = sssp_distributed(_GSH1, _ATT1, 0, _MESH1, delta=DELTA,
+                         max_iters=4 * G.n_rows, placement="async",
+                         sync_interval=k)
+    np.testing.assert_array_equal(_unshard1(d, G.n_rows),
+                                  _gold("sssp/scalar/push"))
+
+
+@pytest.mark.parametrize("k", INTERVALS)
+def test_sssp_batched_async_golden(k):
+    d = sssp_batched_distributed(_GSH1, _ATT1, SOURCES, _MESH1, delta=DELTA,
+                                 max_iters=4 * G.n_rows, placement="async",
+                                 sync_interval=k)
+    d = np.asarray(d).transpose(1, 0, 2).reshape(len(SOURCES), -1)
+    np.testing.assert_array_equal(d[:, : G.n_rows], _gold("sssp/valued/push"))
+
+
+@pytest.mark.parametrize("k", INTERVALS)
+def test_cc_async_golden(k):
+    lab = connected_components_distributed(_GSH1_U, _ATT1_U, _MESH1,
+                                           placement="async", sync_interval=k)
+    np.testing.assert_array_equal(_unshard1(lab, U.n_rows),
+                                  _gold("cc/scalar/push"))
+
+
+def test_async_rejects_structured_and_pull():
+    with pytest.raises(ValueError):
+        bfs_distributed(_GSH1, _ATT1, 0, _MESH1, mode="pull",
+                        placement="async")
+    with pytest.raises(ValueError):
+        sssp_distributed(_GSH1, _ATT1, 0, _MESH1, placement="async",
+                         sync_interval=0)
+
+
+# ---------------------------------------------------------------------------
 # direction-decision traces (the refactor must not re-route any level)
 # ---------------------------------------------------------------------------
 

@@ -258,6 +258,54 @@ def test_cost_ewma_learns_from_measured_batches():
     assert svc._cost_ewma["reach"] > 0      # EWMA keeps tracking
 
 
+def test_cost_seed_warms_the_ewma():
+    """An explicit cost_seed becomes the EWMA's starting estimate (PR 7):
+    deadline slack is computed from it before any batch has run, and a
+    measured batch blends into — not replaces — the prior."""
+    svc = make_service(cost_seed={"reach": 2.0, "dist": 0.25})
+    assert svc._est_cost("reach") == 2.0 and svc._est_cost("dist") == 0.25
+    assert svc._est_cost("ppr") == 0.0      # unseeded kinds stay unknown
+    # a seeded cost shorter than the deadline's slack defers the flush; one
+    # longer forces it on admission (the test_negative_slack rule, but from
+    # the seed rather than a measured batch)
+    clk = FakeClock()
+    svc2 = make_service(clock=clk, cost_seed={"reach": 2.0})
+    t = svc2.submit(Reachability(0, 1), deadline=1.5)
+    assert t in svc2._results               # served the moment it was admitted
+    svc3 = make_service(clock=clk, cost_seed={"reach": 2.0})
+    svc3.submit(Reachability(0, 1), deadline=10.0)
+    assert svc3.stats.batches == 0          # slack remains: batch-fill wait
+    # EWMA update blends the measurement with the seed rather than replacing
+    # it: under the fake clock a batch measures 0 s, so exactly (1-a)*seed
+    svc3.flush()
+    a = GraphService.COST_EWMA_ALPHA
+    assert svc3._cost_ewma["reach"] == pytest.approx((1 - a) * 2.0)
+
+
+def test_cost_seed_auto_reads_newest_bench_doc(tmp_path, monkeypatch):
+    """cost_seed='auto' resolves through load_cost_priors: the newest
+    BENCH_pr<N>.json wins, the local section prices a batch as budget/qps,
+    and a missing/unusable doc degrades to the unseeded behavior."""
+    import json
+    from repro.core.service import load_cost_priors
+    (tmp_path / "BENCH_pr6.json").write_text(json.dumps(
+        {"service": {"budgets": {"4": {"qps": 1.0}}}}))
+    (tmp_path / "BENCH_pr7.json").write_text(json.dumps(
+        {"service": {"budgets": {"4": {"qps": 100.0}}},
+         "service_distributed": {"budgets": {
+             "4": {"latency_p50_ms": 500.0}}}}))
+    pri = load_cost_priors(budget=4, bench_dir=str(tmp_path))
+    assert pri["reach"] == pytest.approx(4 / 100.0)   # pr7, not pr6
+    pri_d = load_cost_priors(distributed=True, budget=4,
+                             bench_dir=str(tmp_path))
+    assert pri_d["dist"] == pytest.approx(0.5)
+    assert load_cost_priors(budget=999, bench_dir=str(tmp_path)) == {}
+    assert load_cost_priors(bench_dir=str(tmp_path / "nowhere")) == {}
+    monkeypatch.chdir(tmp_path)
+    svc = make_service(cost_seed="auto")
+    assert svc._est_cost("reach") == pytest.approx(4 / 100.0)
+
+
 def test_deadline_validation():
     svc = make_service()
     with pytest.raises(ValueError, match="deadline"):
