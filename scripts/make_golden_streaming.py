@@ -1,0 +1,101 @@
+"""Capture the golden streaming-replay trace for DESIGN.md §16.
+
+Run ONCE to persist a fixed RMAT graph's update stream and the FROM-SCRATCH
+BFS/CC/SSSP results after every epoch:
+
+    PYTHONPATH=src python scripts/make_golden_streaming.py
+
+writes ``tests/golden/streaming.npz``, which ``tests/test_streaming.py``
+replays through ``GraphHandle.apply`` + ``repair_or_recompute`` and checks
+bit-exact agreement at every epoch — pinning both the overlay-splice CSR
+semantics and the incremental-repair fixpoints across future refactors.
+
+The stream is deliberately mixed: insert-only epochs (label-correcting
+repair path), a weight-raising upsert epoch and a delete epoch (both must
+take the logged full-recompute fallback).  Weights for the "safe" epochs
+are drawn below the RMAT weight floor-ish (tiny constants) so upserts only
+ever decrease — ``monotone_safe`` flags are recorded too, so the replay
+asserts the dispatcher took the intended path.
+
+Regenerating against a changed engine defeats the purpose — only do so when
+a PR *deliberately* changes numerical behavior, and say so in the PR.
+"""
+import os
+
+import numpy as np
+
+from repro.core import GraphHandle, rmat
+from repro.core.algorithms import (auto_delta, bfs, connected_components,
+                                   repair_or_recompute, sssp)
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "tests", "golden", "streaming.npz")
+
+SCALE, EDGE_FACTOR, SEED = 8, 8, 42
+N_EPOCHS = 6
+SOURCE = 0
+
+
+def make_stream(n, rng):
+    """Per-epoch (ins_r, ins_c, ins_v, del_r, del_c) batches."""
+    stream = []
+    for e in range(N_EPOCHS):
+        k = int(rng.integers(8, 40))
+        ins_r = rng.integers(0, n, k)
+        ins_c = rng.integers(0, n, k)
+        if e == 3:       # weight-raising upserts -> fallback epoch
+            ins_v = rng.uniform(1.5, 2.0, k).astype(np.float32)
+        else:            # below any plausible existing weight -> safe
+            ins_v = rng.uniform(1e-4, 1e-3, k).astype(np.float32)
+        if e == 4:       # delete epoch -> fallback
+            d = int(rng.integers(4, 12))
+            del_r = rng.integers(0, n, d)
+            del_c = rng.integers(0, n, d)
+        else:
+            del_r = del_c = np.zeros(0, np.int64)
+        stream.append((ins_r.astype(np.int64), ins_c.astype(np.int64), ins_v,
+                       del_r.astype(np.int64), del_c.astype(np.int64)))
+    return stream
+
+
+def build():
+    g = rmat(SCALE, EDGE_FACTOR, seed=SEED)
+    n = g.n_rows
+    rng = np.random.default_rng(7)
+    stream = make_stream(n, rng)
+    handle = GraphHandle.wrap(g, n_partitions=8)
+    out = {"meta": np.asarray([SCALE, EDGE_FACTOR, SEED, N_EPOCHS, SOURCE],
+                              np.int64)}
+    prev = {"bfs": bfs(handle.csr, SOURCE),
+            "cc": connected_components(handle.csr),
+            "sssp": sssp(handle.csr, SOURCE, delta=auto_delta(handle.csr))}
+    out["epoch0/bfs"] = np.asarray(prev["bfs"])
+    out["epoch0/cc"] = np.asarray(prev["cc"])
+    out["epoch0/sssp"] = np.asarray(prev["sssp"])
+    for e, (ir, ic, iv, dr, dc) in enumerate(stream, start=1):
+        out[f"epoch{e}/ins_r"], out[f"epoch{e}/ins_c"] = ir, ic
+        out[f"epoch{e}/ins_v"] = iv
+        out[f"epoch{e}/del_r"], out[f"epoch{e}/del_c"] = dr, dc
+        handle, report = handle.apply((ir, ic, iv), (dr, dc))
+        out[f"epoch{e}/monotone_safe"] = np.asarray([report.monotone_safe])
+        # the golden values are FROM SCRATCH on the updated graph — the
+        # replay goes through repair_or_recompute and must match bit-exactly
+        csr = handle.csr
+        out[f"epoch{e}/bfs"] = np.asarray(bfs(csr, SOURCE))
+        out[f"epoch{e}/cc"] = np.asarray(connected_components(csr))
+        out[f"epoch{e}/sssp"] = np.asarray(
+            sssp(csr, SOURCE, delta=auto_delta(csr)))
+        # sanity while generating: the repair path agrees already
+        for kind in ("bfs", "cc", "sssp"):
+            got = np.asarray(repair_or_recompute(kind, handle, prev[kind],
+                                                 report, source=SOURCE))
+            assert (got == out[f"epoch{e}/{kind}"]).all(), (e, kind)
+            prev[kind] = got
+    return out
+
+
+if __name__ == "__main__":
+    grid = build()
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez_compressed(OUT, **grid)
+    print(f"wrote {OUT} ({len(grid)} entries)")

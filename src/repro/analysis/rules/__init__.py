@@ -11,6 +11,7 @@ from __future__ import annotations
 from .cache_key import CacheKeyRule
 from .compat_boundary import CompatBoundaryRule
 from .host_sync import HostSyncRule
+from .mutable_handle import MutableHandleRule
 from .shard_safety import ShardSafetyRule
 from .single_core import SingleCoreRule
 
@@ -20,9 +21,11 @@ ALL_RULES = [
     HostSyncRule(),
     ShardSafetyRule(),
     CacheKeyRule(),
+    MutableHandleRule(),
 ]
 
 RULES_BY_ID = {rule.id: rule for rule in ALL_RULES}
 
 __all__ = ["ALL_RULES", "RULES_BY_ID", "SingleCoreRule", "CompatBoundaryRule",
-           "HostSyncRule", "ShardSafetyRule", "CacheKeyRule"]
+           "HostSyncRule", "ShardSafetyRule", "CacheKeyRule",
+           "MutableHandleRule"]

@@ -1,0 +1,81 @@
+"""mutable-handle: graph epoch/CSR identity belongs to GraphHandle.
+
+DESIGN.md §16 makes the epoch-versioned :class:`GraphHandle` the one graph
+currency: the epoch, the CSR it versions, and the per-partition mutation
+stamps are bookkeeping that must only ever change inside ``core/graph.py``
+(``apply`` / ``replace`` / ``compact`` return NEW handles).  A stray
+``svc.epoch += 1`` or ``self.csr = new_csr`` elsewhere silently desyncs the
+epoch from the delta log and the partition stamps — the cache then serves
+stale results with no failing invariant to catch it (the exact bug class
+the pre-PR-8 service's hand-maintained ``self.epoch`` invited).
+
+Flagged, outside ``core/graph.py``:
+
+* any attribute assignment (plain, augmented, annotated, or tuple-unpacked)
+  to ``.epoch``, ``.csr``, or ``.stamps``;
+* ``object.__setattr__(x, "epoch"/"csr"/"stamps", ...)`` — the frozen-
+  dataclass backdoor.
+
+Reading the fields is fine (that is the API); so is any other attribute
+name.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..callgraph import dotted_name
+from ..core import Finding, ParsedModule, Rule
+
+_FIELDS = ("epoch", "csr", "stamps")
+_HOME = "core/graph.py"
+
+
+def _attr_targets(node: ast.AST):
+    """Yield Attribute nodes assigned to by an Assign/AugAssign/AnnAssign,
+    descending through tuple/list unpacking and starred targets."""
+    if isinstance(node, ast.Assign):
+        stack = list(node.targets)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        stack = [node.target]
+    else:
+        return
+    while stack:
+        t = stack.pop()
+        if isinstance(t, ast.Attribute):
+            yield t
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            stack.extend(t.elts)
+        elif isinstance(t, ast.Starred):
+            stack.append(t.value)
+
+
+class MutableHandleRule(Rule):
+    id = "mutable-handle"
+    doc = ("graph epoch/CSR/stamp bookkeeping is GraphHandle's: no "
+           ".epoch/.csr/.stamps assignment (or object.__setattr__) outside "
+           "core/graph.py")
+
+    def check(self, module: ParsedModule) -> Iterable[Finding]:
+        if module.path.endswith(_HOME):
+            return
+        for node in ast.walk(module.tree):
+            for tgt in _attr_targets(node):
+                if tgt.attr in _FIELDS:
+                    yield self.finding(
+                        module, tgt,
+                        f"assignment to `.{tgt.attr}` outside core/graph.py "
+                        "— epoch/CSR identity is GraphHandle bookkeeping",
+                        "mutate through GraphHandle.apply/replace and store "
+                        "the returned handle")
+            if isinstance(node, ast.Call) and \
+                    dotted_name(node.func) == "object.__setattr__" and \
+                    len(node.args) >= 2 and \
+                    isinstance(node.args[1], ast.Constant) and \
+                    node.args[1].value in _FIELDS:
+                yield self.finding(
+                    module, node,
+                    f"object.__setattr__(..., {node.args[1].value!r}, ...) "
+                    "outside core/graph.py bypasses the frozen GraphHandle",
+                    "build a new handle via GraphHandle.apply/replace "
+                    "instead of mutating one in place")

@@ -2,6 +2,7 @@
 and the graph query service (batched multi-source serving)."""
 from . import dgas, graph, offload, traffic
 from .dgas import ATT, interleave_rule, block_rule, degree_balanced_rule
-from .graph import CSR, BBCSR, rmat, uniform_random_graph, to_padded_ell, to_bbcsr
+from .graph import (CSR, BBCSR, rmat, uniform_random_graph, to_padded_ell,
+                    to_bbcsr, DeltaLog, GraphHandle, UpdateReport)
 from .service import (GraphService, ServiceStats, Reachability, Distance,
                       PPRTopK, NeighborSample)

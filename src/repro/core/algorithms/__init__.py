@@ -14,6 +14,9 @@ from .louvain import (label_propagation, label_propagation_distributed,
                       lpa_program, modularity, modularity_distributed,
                       multilevel, multilevel_distributed, contract_distributed)
 from .sampling import ties_sample, neighbor_sample
+from .incremental import (bfs_repair, cc_repair, sssp_repair,
+                          bfs_repair_distributed, cc_repair_distributed,
+                          repair_or_recompute)
 
 __all__ = [
     "spmv", "spmv_ell", "spmv_bbcsr", "spmv_distributed",
@@ -30,4 +33,6 @@ __all__ = [
     "modularity", "modularity_distributed",
     "multilevel", "multilevel_distributed", "contract_distributed",
     "ties_sample", "neighbor_sample",
+    "bfs_repair", "cc_repair", "sssp_repair",
+    "bfs_repair_distributed", "cc_repair_distributed", "repair_or_recompute",
 ]

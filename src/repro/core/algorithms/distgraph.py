@@ -20,7 +20,8 @@ import numpy as np
 from ..dgas import ATT, block_rule, degree_balanced_rule
 from ..graph import CSR
 
-__all__ = ["ShardedGraph", "shard_graph", "shard_vertex_array", "unshard_vertex_array"]
+__all__ = ["ShardedGraph", "shard_graph", "update_shards",
+           "shard_vertex_array", "unshard_vertex_array"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -76,6 +77,47 @@ def shard_graph(csr: CSR, n_shards: int, row_att: Optional[ATT] = None) -> tuple
     g = ShardedGraph(jnp.asarray(src_b), jnp.asarray(dst_b), jnp.asarray(val_b),
                      csr.n_rows, S)
     return g, row_att
+
+
+def update_shards(gsh: ShardedGraph, csr: CSR, att: ATT,
+                  shards) -> Optional[ShardedGraph]:
+    """Rebuild only `shards`' rows of the stacked edge arrays from the
+    (updated) `csr` — the streaming-ingest reshard (DESIGN.md §16): an
+    update batch whose changed edges all live in a few partitions only
+    reships those partitions' edge lists, not the world.
+
+    Returns the patched ShardedGraph, or ``None`` when any touched shard's
+    new edge count exceeds the existing padding capacity
+    (``edges_per_shard``) — the caller must then fall back to a full
+    ``shard_graph`` reshard (the streaming layer treats that as a
+    compaction event and prices it accordingly).
+    """
+    shards = sorted({int(s) for s in np.asarray(shards).reshape(-1)})
+    if not shards:
+        return gsh
+    m = gsh.edges_per_shard
+    indptr = np.asarray(csr.indptr)
+    cols = np.asarray(csr.indices)
+    vals = (np.asarray(csr.values) if csr.values is not None
+            else np.ones_like(cols, np.float32))
+    rows = np.repeat(np.arange(csr.n_rows), np.diff(indptr))
+    owner = np.asarray(att.owner(jnp.asarray(rows)))
+    src_b = np.asarray(gsh.src).copy()
+    dst_b = np.asarray(gsh.dst).copy()
+    val_b = np.asarray(gsh.val).copy()
+    for s in shards:
+        sel = owner == s
+        k = int(sel.sum())
+        if k > m:
+            return None
+        src_b[s, :k] = rows[sel]
+        dst_b[s, :k] = cols[sel]
+        val_b[s, :k] = vals[sel]
+        src_b[s, k:] = -1
+        dst_b[s, k:] = -1
+        val_b[s, k:] = 0.0
+    return ShardedGraph(jnp.asarray(src_b), jnp.asarray(dst_b),
+                        jnp.asarray(val_b), csr.n_rows, gsh.n_shards)
 
 
 def shard_vertex_array(x: np.ndarray, att: ATT) -> jnp.ndarray:

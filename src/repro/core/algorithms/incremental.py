@@ -1,0 +1,210 @@
+"""Incremental recompute for monotone programs (DESIGN.md §16).
+
+After a batch of edge inserts, the previous fixpoint of a monotone
+(min-combining) program is still a *feasible labeling*: it satisfies the
+relaxation inequality on every old edge and can violate it only on the new
+edges — whose source endpoints we know (``UpdateReport.changed_sources``).
+Re-running the engine with the old fixpoint as ``state0`` and the changed
+endpoints as ``frontier0`` is therefore pure label-correcting repair: the
+sparse push relaxes outward from the touched region only, and because the
+fixpoint of a monotone min-combine is schedule-independent (the same
+argument that makes the async placement bit-identical to sync, DESIGN.md
+§14), the repaired labels equal a from-scratch run **bit for bit** — f32
+min never rounds, and every candidate value is a path evaluation both
+schedules generate.
+
+Deletions (and weight *increases*, which are delete+insert in disguise)
+break the feasibility invariant — the old fixpoint may be an unreachable
+over-optimistic labeling — so they fall back to full recompute; the
+decision is logged on the ``repro.streaming`` logger so a deployment can
+see what its update mix costs.
+
+The repair functions take and return the same arrays as their from-scratch
+counterparts (``bfs`` levels, ``connected_components`` labels, ``sssp``
+distances), so callers can hold one result and fold updates into it.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .. import engine
+from ..dgas import ATT
+from ..graph import CSR, GraphHandle, UpdateReport
+from .bfs import _levels_from_dist, bfs_level_program
+from .cc import cc_program, symmetrize
+from .distgraph import ShardedGraph
+from .sssp import auto_delta, sssp_program
+
+__all__ = ["bfs_repair", "cc_repair", "sssp_repair",
+           "bfs_repair_distributed", "cc_repair_distributed",
+           "repair_or_recompute"]
+
+log = logging.getLogger("repro.streaming")
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _indicator(n: int, vertices) -> jnp.ndarray:
+    v = np.asarray(vertices, np.int64)
+    out = np.zeros((n,), np.int32)
+    out[v] = 1
+    return jnp.asarray(out)
+
+
+def bfs_repair(csr: CSR, prev_levels, changed, *, mode: str = "auto",
+               max_levels: Optional[int] = None) -> jnp.ndarray:
+    """Repair BFS levels after an insert-only batch.
+
+    csr: the UPDATED graph.  prev_levels: (n,) int32 levels on the
+    pre-update graph (unreachable = -1, i.e. ``bfs`` output).  changed:
+    source endpoints of the inserted edges.  Returns levels bit-identical
+    to ``bfs(csr, source)`` on the updated graph.
+
+    Repair runs the monotone :func:`bfs_level_program` (min hop distance) —
+    the iteration-stamped ``bfs_program`` is order-dependent and cannot be
+    warm-started — but both compute the exact hop distance, so the int32
+    levels agree exactly.
+    """
+    n = csr.n_rows
+    prev = jnp.asarray(prev_levels)
+    dist0 = jnp.where(prev >= 0, prev.astype(jnp.float32), _INF)
+    # only changed endpoints the old traversal reached can push improvements
+    f0 = _indicator(n, changed) * jnp.isfinite(dist0).astype(jnp.int32)
+    state = engine.run(csr, bfs_level_program(), {"dist": dist0}, f0,
+                       max_iters=max_levels or n, mode=mode)
+    return _levels_from_dist(state["dist"])
+
+
+def cc_repair(csr: CSR, prev_labels, changed, *, mode: str = "auto",
+              symmetrize_input: bool = True,
+              max_iters: Optional[int] = None) -> jnp.ndarray:
+    """Repair connected-component labels after an insert-only batch.
+
+    csr: the UPDATED graph (symmetrized here by default, matching
+    ``connected_components``).  changed: endpoints of inserted edges —
+    pass BOTH sides (``UpdateReport.changed_vertices``): components are
+    undirected, so either endpoint's label can be the one that shrinks.
+    Labels are always finite (every vertex labels itself), so every changed
+    endpoint seeds the frontier.
+    """
+    g = symmetrize(csr) if symmetrize_input else csr
+    n = g.n_rows
+    state0 = {"label": jnp.asarray(prev_labels).astype(jnp.int32)}
+    f0 = _indicator(n, changed)
+    state = engine.run(g, cc_program(), state0, f0,
+                       max_iters=max_iters if max_iters is not None else n,
+                       mode=mode)
+    return state["label"]
+
+
+def sssp_repair(csr: CSR, prev_dist, changed, *,
+                max_iters: Optional[int] = None,
+                mode: str = "auto") -> jnp.ndarray:
+    """Repair SSSP distances after a batch of inserts / weight decreases.
+
+    csr: the UPDATED graph.  prev_dist: (n,) f32 distances on the
+    pre-update graph (unreachable = +inf).  changed: source endpoints of
+    the changed edges.  Returns distances bit-identical to
+    ``sssp(csr, source)`` — the (min, +) fixpoint is schedule-independent,
+    so the repair wave's Bellman–Ford-style schedule (bound = inf: every
+    pending vertex stays active, no bucket pacing — repair regions are
+    small, so delta-stepping's re-relaxation bound buys nothing) lands on
+    the same f32 values as scratch delta-stepping.
+    """
+    n = csr.n_rows
+    dist0 = jnp.asarray(prev_dist, jnp.float32)
+    seeds = _indicator(n, changed) * jnp.isfinite(dist0).astype(jnp.int32)
+    state0 = {"dist": dist0, "pending": seeds.astype(bool), "bound": _INF}
+    state = engine.run(csr, sssp_program(float("inf")), state0, seeds,
+                       max_iters=max_iters if max_iters is not None else 4 * n,
+                       mode=mode)
+    return state["dist"]
+
+
+def bfs_repair_distributed(g: ShardedGraph, att: ATT, prev_levels, changed,
+                           mesh: Mesh, *, axis=None, max_levels: int = 64,
+                           placement: str = "sync",
+                           sync_interval: Optional[int] = None) -> jnp.ndarray:
+    """Distributed :func:`bfs_repair`: prev_levels stacked (S, per) under
+    `att` (``bfs_distributed`` output), `g` the UPDATED sharded graph.
+    Returns repaired levels in the same stacked layout."""
+    S, per = att.n_shards, att.per_shard
+    prev = jnp.asarray(prev_levels)
+    dist0 = jnp.where(prev >= 0, prev.astype(jnp.float32), _INF)
+    ch = np.asarray(changed, np.int64)
+    f0 = np.zeros((S, per), np.int32)
+    if ch.size:
+        chj = jnp.asarray(ch, jnp.int32)
+        f0[np.asarray(att.owner(chj)), np.asarray(att.local(chj))] = 1
+    f0 = jnp.asarray(f0) * jnp.isfinite(dist0).astype(jnp.int32)
+    state = engine.run_distributed(
+        g, att, mesh, bfs_level_program(), {"dist": dist0}, f0, axis=axis,
+        max_iters=max_levels * (int(sync_interval or 8)
+                                if placement == "async" else 1),
+        mode="push", placement=placement, sync_interval=sync_interval)
+    return _levels_from_dist(state["dist"])
+
+
+def cc_repair_distributed(g: ShardedGraph, att: ATT, prev_labels, changed,
+                          mesh: Mesh, *, axis=None, max_iters: int = 256,
+                          placement: str = "sync",
+                          sync_interval: Optional[int] = None) -> jnp.ndarray:
+    """Distributed :func:`cc_repair`: `g` must hold the UPDATED *symmetric*
+    edge set (build from ``symmetrize(csr)``), prev_labels stacked (S, per).
+    changed: both endpoints of the inserted edges (global ids)."""
+    S, per = att.n_shards, att.per_shard
+    state0 = {"label": jnp.asarray(prev_labels).astype(jnp.int32)}
+    ch = np.asarray(changed, np.int64)
+    f0 = np.zeros((S, per), np.int32)
+    if ch.size:
+        chj = jnp.asarray(ch, jnp.int32)
+        f0[np.asarray(att.owner(chj)), np.asarray(att.local(chj))] = 1
+    state = engine.run_distributed(
+        g, att, mesh, cc_program(), state0, jnp.asarray(f0), axis=axis,
+        max_iters=max_iters, mode="push", placement=placement,
+        sync_interval=sync_interval)
+    return state["label"]
+
+
+def repair_or_recompute(kind: str, handle: GraphHandle, prev,
+                        report: UpdateReport, *, source: int = 0,
+                        mode: str = "auto"):
+    """Dispatch: incremental repair when the batch was monotone-safe, else
+    the logged full-recompute fallback (DESIGN.md §16 deletion policy).
+
+    kind: 'bfs' | 'cc' | 'sssp'.  prev: the pre-update result for `kind`
+    (ignored on fallback).  Returns the post-update result either way.
+    """
+    from .bfs import bfs
+    from .cc import connected_components
+    from .sssp import sssp
+
+    csr = handle.csr
+    if report.monotone_safe:
+        log.info("epoch %d: %s repair from %d changed endpoints "
+                 "(+%d edges, %d upserts)", report.epoch, kind,
+                 report.changed_sources.size, report.n_inserted,
+                 report.n_upserted)
+        if kind == "bfs":
+            return bfs_repair(csr, prev, report.changed_sources, mode=mode)
+        if kind == "cc":
+            return cc_repair(csr, prev, report.changed_vertices, mode=mode)
+        if kind == "sssp":
+            return sssp_repair(csr, prev, report.changed_sources, mode=mode)
+        raise ValueError(f"unknown repair kind {kind!r}")
+    log.info("epoch %d: %s full recompute fallback (%d deletes, "
+             "weight increases=%s — old fixpoint not feasible)",
+             report.epoch, kind, report.n_deleted, not report.monotone_safe
+             and report.n_deleted == 0)
+    if kind == "bfs":
+        return bfs(csr, source, mode=mode)
+    if kind == "cc":
+        return connected_components(csr, mode=mode)
+    if kind == "sssp":
+        return sssp(csr, source, delta=auto_delta(csr), mode=mode)
+    raise ValueError(f"unknown repair kind {kind!r}")

@@ -687,6 +687,14 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
 
     The (scalar lanes, local placement) point of the ExecutionCore grid.
 
+    Warm-start contract (the streaming-repair seed, DESIGN.md §16):
+    `state0` need not be the program's cold initial state — any *feasible*
+    labeling works, with `frontier0` marking the vertices whose outgoing
+    relaxations might still fire.  For a monotone (min-combining) program
+    the fixpoint is schedule-independent, so running from an old fixpoint
+    plus a changed-endpoint frontier lands bit-identically on the
+    from-scratch result (`algorithms.incremental` builds on exactly this).
+
     mode: 'auto' (direction-optimizing), 'push' (always sparse), 'pull'
       (always dense).  'auto' switches on the frontier population count:
       sparse while it fits `push_capacity` (default n/32), dense otherwise.

@@ -8,6 +8,17 @@ layer plus the two derived formats the TPU kernels need:
   Pallas kernel can DMA one dense-vector block into VMEM and service every
   nonzero that touches it (the TPU-native re-expression of PIUMA's 8-byte
   gather; see DESIGN.md §2).
+
+Streaming mutation (DESIGN.md §16): :class:`GraphHandle` is the one graph
+currency for code that serves a graph *changing under the queries* — an
+immutable (CSR, epoch, delta log, per-partition mutation stamps) tuple.
+``handle.apply(inserts, deletes)`` splices a batch of edge updates into the
+CSR as an overlay delta (no global re-sort), bumps the epoch, stamps the
+touched partitions, and appends to the :class:`DeltaLog`; once the log
+outgrows ``compact_threshold`` of the edge count, the handle compacts back
+into a clean ``CSR.from_coo`` rebuild.  Epoch and stamp bookkeeping lives
+HERE and only here — the `mutable-handle` repro-lint rule rejects
+``.epoch`` / ``.csr`` assignment anywhere else.
 """
 from __future__ import annotations
 
@@ -19,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["CSR", "rmat", "uniform_random_graph", "to_padded_ell", "to_bbcsr", "BBCSR",
-           "contract"]
+           "contract", "DeltaLog", "UpdateReport", "GraphHandle"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -193,6 +204,318 @@ def uniform_random_graph(n: int, avg_degree: int, *, seed: int = 0, weighted: bo
     cols = rng.integers(0, n, m)
     vals = rng.random(m).astype(np.float32) if weighted else None
     return CSR.from_coo(rows, cols, vals, n, n, sum_duplicates=True)
+
+
+# ---------------------------------------------------------------------------
+# Streaming mutation: DeltaLog + epoch-versioned GraphHandle (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def _edge_keys(csr: CSR) -> np.ndarray:
+    """(nnz,) int64 ``row * n_cols + col`` keys.  Canonical CSRs (everything
+    a GraphHandle holds) have strictly increasing keys: row-major, columns
+    sorted within each row, no duplicate (row, col) pairs."""
+    indptr = np.asarray(csr.indptr, np.int64)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    return rows * np.int64(csr.n_cols) + np.asarray(csr.indices, np.int64)
+
+
+def _canonical(csr: CSR) -> CSR:
+    """Return `csr` if its keys are strictly increasing, else a
+    duplicate-summed `from_coo` rebuild (the handle's splice arithmetic
+    relies on sorted-unique keys)."""
+    key = _edge_keys(csr)
+    if key.size == 0 or bool(np.all(key[1:] > key[:-1])):
+        return csr
+    rows, cols = key // csr.n_cols, key % csr.n_cols
+    vals = None if csr.values is None else np.asarray(csr.values)
+    return CSR.from_coo(rows, cols, vals, csr.n_rows, csr.n_cols,
+                        sum_duplicates=True)
+
+
+def _coerce_edges(edges, *, weighted: bool):
+    """Normalize an (rows, cols[, vals]) tuple / None to int64/f32 arrays."""
+    if edges is None:
+        e = np.zeros((0,), np.int64)
+        return e, e.copy(), (np.zeros((0,), np.float32) if weighted else None)
+    rows, cols = np.asarray(edges[0], np.int64), np.asarray(edges[1], np.int64)
+    if rows.shape != cols.shape or rows.ndim != 1:
+        raise ValueError(f"edge endpoints must be matching 1-d arrays, got "
+                         f"{rows.shape} vs {cols.shape}")
+    vals = None
+    if weighted:
+        vals = (np.asarray(edges[2], np.float32) if len(edges) > 2
+                and edges[2] is not None else np.ones(rows.shape, np.float32))
+        if vals.shape != rows.shape:
+            raise ValueError(f"edge values shape {vals.shape} != {rows.shape}")
+    return rows, cols, vals
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaLog:
+    """Pending edge updates since the last compaction, as flat COO arrays.
+
+    The log is *bookkeeping*, not the source of truth: every ``apply``
+    already splices the batch into the handle's canonical CSR.  The log
+    records what changed since the CSR was last rebuilt clean — its size
+    drives the compaction trigger, and its endpoint set is what a
+    distributed deployment must reship (only the touched partitions)."""
+
+    ins_rows: np.ndarray
+    ins_cols: np.ndarray
+    ins_vals: Optional[np.ndarray]
+    del_rows: np.ndarray
+    del_cols: np.ndarray
+
+    @classmethod
+    def empty(cls, *, weighted: bool = True) -> "DeltaLog":
+        e = np.zeros((0,), np.int64)
+        return cls(e, e.copy(), np.zeros((0,), np.float32) if weighted
+                   else None, e.copy(), e.copy())
+
+    @property
+    def size(self) -> int:
+        """Pending update count (inserts + deletes since last compaction)."""
+        return int(self.ins_rows.size + self.del_rows.size)
+
+    def extend(self, ins_r, ins_c, ins_v, del_r, del_c) -> "DeltaLog":
+        return DeltaLog(
+            np.concatenate([self.ins_rows, ins_r]),
+            np.concatenate([self.ins_cols, ins_c]),
+            None if self.ins_vals is None
+            else np.concatenate([self.ins_vals, ins_v]),
+            np.concatenate([self.del_rows, del_r]),
+            np.concatenate([self.del_cols, del_c]))
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateReport:
+    """What one ``GraphHandle.apply`` batch did — the repair/invalidation
+    contract: ``changed_sources`` seeds incremental monotone recompute
+    (algorithms.incremental), ``touched_partitions`` scopes cache eviction
+    and distributed resharding, ``monotone_safe`` says whether label-
+    correcting repair is valid (insert-only, no weight increases) or the
+    caller must fall back to full recompute."""
+
+    epoch: int
+    n_inserted: int          # new edges spliced in (upserts excluded)
+    n_deleted: int           # edges actually removed
+    n_upserted: int          # existing edges whose weight was replaced
+    changed_sources: np.ndarray     # unique source endpoints of changed edges
+    changed_vertices: np.ndarray    # unique endpoints, both sides
+    touched_partitions: np.ndarray  # unique partition ids (both endpoints)
+    monotone_safe: bool
+    compacted: bool
+
+    @property
+    def n_changed(self) -> int:
+        return self.n_inserted + self.n_deleted + self.n_upserted
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphHandle:
+    """Epoch-versioned graph: the one currency for mutable-graph serving.
+
+    Immutable — every mutation returns a NEW handle (so readers holding the
+    old one keep a consistent graph+epoch pair):
+
+    * ``apply(inserts, deletes)``: splice one update batch into the CSR as
+      an overlay delta — deletes mask matched edges, inserts upsert existing
+      (row, col) pairs in place and splice genuinely new edges at their
+      sorted positions (O(m + d), no global re-sort).  Bumps the epoch,
+      stamps the partitions owning either endpoint of any changed edge, and
+      extends the :class:`DeltaLog`.  Batch semantics: deletes apply before
+      inserts; duplicate inserts in one batch keep the LAST occurrence;
+      inserting an existing edge replaces its weight; deleting a missing
+      edge is a no-op; self-loops are ordinary edges.
+    * ``replace(csr)``: whole-graph swap (the deprecated
+      ``GraphService.update_graph`` shim) — every partition is stamped.
+    * ``compact()``: rebuild the CSR clean via ``CSR.from_coo`` and clear
+      the log; ``apply`` auto-compacts once the log exceeds
+      ``compact_threshold`` × nnz.
+
+    Partitions are contiguous vertex blocks (``ceil(n / n_partitions)`` per
+    block — the same arithmetic as ``dgas.block_rule``), so partition ids
+    line up with the distributed service's shard ids.  ``stamps[p]`` is the
+    epoch partition ``p`` last mutated: a cached result that only touched
+    partitions whose stamp predates it is still valid (DESIGN.md §16).
+    """
+
+    csr: CSR
+    epoch: int
+    delta: DeltaLog
+    stamps: np.ndarray          # (n_partitions,) int64 last-mutated epoch
+    n_partitions: int
+    compact_threshold: float = 0.25
+
+    @classmethod
+    def wrap(cls, csr: CSR, *, n_partitions: int = 8,
+             compact_threshold: float = 0.25) -> "GraphHandle":
+        if n_partitions < 1:
+            raise ValueError("n_partitions must be >= 1")
+        return cls(_canonical(csr), 0,
+                   DeltaLog.empty(weighted=csr.values is not None),
+                   np.zeros((n_partitions,), np.int64), int(n_partitions),
+                   float(compact_threshold))
+
+    @property
+    def per_partition(self) -> int:
+        return -(-self.csr.n_rows // self.n_partitions)
+
+    def partition_of(self, vertices) -> np.ndarray:
+        """Owning partition of each vertex (block rule)."""
+        return np.asarray(vertices, np.int64) // self.per_partition
+
+    def partition_edge_counts(self) -> np.ndarray:
+        """(n_partitions,) edges whose SOURCE row each partition owns —
+        what a block-sharded deployment stores (and must reship) per
+        partition."""
+        indptr = np.asarray(self.csr.indptr, np.int64)
+        per = self.per_partition
+        bounds = np.minimum(np.arange(self.n_partitions + 1) * per,
+                            self.csr.n_rows)
+        return np.diff(indptr[bounds])
+
+    # -- mutation ----------------------------------------------------------
+
+    def apply(self, inserts=None, deletes=None) -> tuple["GraphHandle",
+                                                         UpdateReport]:
+        """Apply one update batch; returns (new handle, report).
+
+        inserts: (rows, cols) or (rows, cols, vals) arrays; vals default 1.0
+          on weighted graphs and are ignored on unweighted (values=None)
+          graphs.
+        deletes: (rows, cols) arrays.
+        """
+        weighted = self.csr.values is not None
+        ins_r, ins_c, ins_v = _coerce_edges(inserts, weighted=weighted)
+        del_r, del_c, _ = _coerce_edges(deletes, weighted=False)
+        n, ncol = self.csr.n_rows, self.csr.n_cols
+        for name, (r, c) in (("insert", (ins_r, ins_c)),
+                             ("delete", (del_r, del_c))):
+            if r.size and not ((0 <= r).all() and (r < n).all()
+                               and (0 <= c).all() and (c < ncol).all()):
+                raise ValueError(f"{name} endpoints outside [0, {n}) x "
+                                 f"[0, {ncol})")
+
+        csr, stats = _splice_updates(self.csr, ins_r, ins_c, ins_v,
+                                     del_r, del_c)
+        n_ins, n_del, n_ups, weight_grew = stats
+        epoch = self.epoch + 1
+
+        ch_src = np.unique(np.concatenate([ins_r, del_r]))
+        ch_all = np.unique(np.concatenate([ins_r, ins_c, del_r, del_c]))
+        touched = np.unique(self.partition_of(ch_all)) if ch_all.size \
+            else np.zeros((0,), np.int64)
+        stamps = self.stamps.copy()
+        stamps[touched] = epoch
+
+        delta = self.delta.extend(ins_r, ins_c, ins_v, del_r, del_c)
+        compacted = delta.size > self.compact_threshold * max(1, csr.nnz)
+        if compacted:
+            csr = _canonical(CSR.from_coo(
+                *_coo_of(csr), csr.n_rows, csr.n_cols))
+            delta = DeltaLog.empty(weighted=weighted)
+        handle = GraphHandle(csr, epoch, delta, stamps, self.n_partitions,
+                             self.compact_threshold)
+        report = UpdateReport(
+            epoch=epoch, n_inserted=n_ins, n_deleted=n_del, n_upserted=n_ups,
+            changed_sources=ch_src, changed_vertices=ch_all,
+            touched_partitions=touched,
+            monotone_safe=(n_del == 0 and not weight_grew),
+            compacted=compacted)
+        return handle, report
+
+    def replace(self, csr: CSR) -> "GraphHandle":
+        """Whole-graph swap: epoch bumps, every partition is stamped."""
+        epoch = self.epoch + 1
+        csr = _canonical(csr)
+        n_p = self.n_partitions
+        return GraphHandle(csr, epoch,
+                           DeltaLog.empty(weighted=csr.values is not None),
+                           np.full((n_p,), epoch, np.int64), n_p,
+                           self.compact_threshold)
+
+    def compact(self) -> "GraphHandle":
+        """Explicit compaction: clean ``from_coo`` rebuild + empty log.
+        Bit-identical arrays (the overlay splice already keeps the CSR
+        canonical — the round-trip test pins this)."""
+        csr = CSR.from_coo(*_coo_of(self.csr), self.csr.n_rows,
+                           self.csr.n_cols)
+        return GraphHandle(csr, self.epoch,
+                           DeltaLog.empty(weighted=csr.values is not None),
+                           self.stamps.copy(), self.n_partitions,
+                           self.compact_threshold)
+
+
+def _coo_of(csr: CSR):
+    indptr = np.asarray(csr.indptr)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    vals = None if csr.values is None else np.asarray(csr.values)
+    return rows, np.asarray(csr.indices, np.int64), vals
+
+
+def _splice_updates(csr: CSR, ins_r, ins_c, ins_v, del_r, del_c):
+    """Overlay-splice one update batch into a canonical CSR.
+
+    Returns (new CSR, (n_inserted, n_deleted, n_upserted, weight_grew)).
+    O(m + d log d): delete by sorted-key membership mask, upsert in place,
+    splice new edges at their searchsorted positions — the result is
+    bit-identical to a clean ``CSR.from_coo`` over the effective edge set.
+    """
+    n_cols = np.int64(csr.n_cols)
+    key = _edge_keys(csr)
+    cols = np.asarray(csr.indices, np.int64)
+    vals = None if csr.values is None else np.asarray(csr.values, np.float32)
+
+    n_del = 0
+    if del_r.size:
+        dkey = np.unique(del_r * n_cols + del_c)
+        keep = ~np.isin(key, dkey)
+        n_del = int(key.size - keep.sum())
+        key, cols = key[keep], cols[keep]
+        if vals is not None:
+            vals = vals[keep]
+
+    n_ins = n_ups = 0
+    weight_grew = False
+    if ins_r.size:
+        ikey = ins_r * n_cols + ins_c
+        order = np.argsort(ikey, kind="stable")
+        ikey = ikey[order]
+        iv = None if ins_v is None else ins_v[order]
+        last = np.ones(ikey.size, bool)          # duplicate keys: last wins
+        last[:-1] = ikey[1:] != ikey[:-1]
+        ikey = ikey[last]
+        if iv is not None:
+            iv = iv[last]
+        pos = np.searchsorted(key, ikey)
+        exists = (pos < key.size)
+        exists[exists] = key[pos[exists]] == ikey[exists]
+        n_ups = int(exists.sum())
+        n_ins = int(ikey.size - n_ups)
+        if vals is not None and n_ups:
+            old = vals[pos[exists]]
+            new = iv[exists]
+            weight_grew = bool((new > old).any())
+            vals = vals.copy()
+            vals[pos[exists]] = new
+        newkey = ikey[~exists]
+        if newkey.size:
+            at = pos[~exists]
+            key = np.insert(key, at, newkey)
+            cols = np.insert(cols, at, newkey % n_cols)
+            if vals is not None:
+                vals = np.insert(vals, at, iv[~exists])
+
+    rows = key // n_cols
+    indptr = np.zeros(csr.n_rows + 1, np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    out = CSR(jnp.asarray(np.asarray(indptr, np.int32)),
+              jnp.asarray(np.asarray(cols, np.int32)),
+              None if vals is None else jnp.asarray(vals),
+              csr.n_rows, csr.n_cols)
+    return out, (n_ins, n_del, n_ups, weight_grew)
 
 
 # ---------------------------------------------------------------------------

@@ -55,20 +55,36 @@ waiting is free.  ``poll()`` is the client-driven tick between submissions.
 The deadline never changes *what* is computed — only when the batch is cut —
 so it stays out of the cache key.
 
-Cache keying rule: ``(epoch, query)`` — the query dataclasses are frozen and
-hashable, and ``update_graph`` bumps the epoch, so a mutated graph can never
-serve stale results while an unchanged graph keeps its whole cache.  Sampled
-results are cached too (a repeated NeighborSample query returns the *same*
-draw until evicted or the epoch moves — the draw is keyed by
-(seed, epoch, query), not by batch composition, so identical resubmissions
-after eviction also redraw identically).
+Graph mutation (DESIGN.md §16): the service's graph currency is an
+epoch-versioned :class:`~repro.core.graph.GraphHandle` — CSR + epoch +
+delta log + per-partition mutation stamps, with all epoch bookkeeping in
+``graph.py`` (machine-enforced by the `mutable-handle` repro-lint rule).
+``apply_updates(inserts, deletes)`` splices an edge-update batch through
+``GraphHandle.apply`` and invalidates the cache **partition-scoped**: each
+cached entry records which partitions its computation touched (the
+traversal's reached set, mapped to block partitions), and an update evicts
+only the entries whose touched set intersects the mutated partitions.
+That is sound because an edge change at (u, v) can alter a traversal's
+result only if the traversal reached u's (or, symmetrically priced, v's)
+partition — an entry that never touched them never saw the edge.  The
+legacy ``update_graph(csr)`` whole-swap survives as a deprecated shim over
+``GraphHandle.replace`` (every partition stamped, so everything evicts).
+
+Cache keying rule: the frozen query dataclass itself — epochs no longer
+live in the key because invalidation is eager: a mutation evicts exactly
+the entries it could have changed, and what survives is still correct.
+Sampled results are cached too (a repeated NeighborSample query returns
+the *same* draw until evicted or its partition is mutated — the draw is
+keyed by (seed, epoch, query), not by batch composition).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import os
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -77,9 +93,9 @@ import numpy as np
 
 from . import engine, traffic
 from .dgas import block_rule
-from .graph import CSR
+from .graph import CSR, GraphHandle, UpdateReport
 from .algorithms.bfs import msbfs, msbfs_distributed
-from .algorithms.distgraph import shard_graph
+from .algorithms.distgraph import shard_graph, update_shards
 from .algorithms.pagerank import ppr_topk
 from .algorithms.sssp import auto_delta, sssp_batched, sssp_batched_distributed
 
@@ -87,6 +103,8 @@ __all__ = [
     "Reachability", "Distance", "PPRTopK", "NeighborSample",
     "ServiceStats", "GraphService", "load_cost_priors",
 ]
+
+_log = logging.getLogger("repro.streaming")
 
 
 # trace-safe: host-side bench-doc discovery at service construction —
@@ -216,6 +234,9 @@ class ServiceStats:
     pull_levels: int = 0
     deadline_queries: int = 0
     deadline_misses: int = 0
+    updates: int = 0            # apply_updates batches ingested
+    update_edges: int = 0       # edges changed across those batches
+    cache_evicted: int = 0      # entries evicted by partition-scoped purges
     latencies_s: "collections.deque" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=65536))
 
@@ -271,6 +292,8 @@ class ServiceStats:
             "deadline_queries": self.deadline_queries,
             "deadline_misses": self.deadline_misses,
             "deadline_miss_rate": self.deadline_miss_rate,
+            "updates": self.updates, "update_edges": self.update_edges,
+            "cache_evicted": self.cache_evicted,
         }
 
     def __str__(self) -> str:
@@ -333,7 +356,7 @@ class GraphService:
     #: subtracts; ~0.3 tracks warmup -> steady-state within a few batches.
     COST_EWMA_ALPHA = 0.3
 
-    def __init__(self, csr: CSR, *, batch_budget: int = 32,
+    def __init__(self, csr, *, batch_budget: int = 32,
                  cache_capacity: int = 4096, results_capacity: int = 65536,
                  ppr_iters: int = 20, damping: float = 0.85,
                  mode: str = "auto", ppr_k_max: int = 64,
@@ -355,7 +378,6 @@ class GraphService:
         self.damping = damping
         self.mode = mode
         self.seed = seed
-        self.epoch = 0
         self.mesh = mesh
         self.placement = placement
         self.sync_interval = int(sync_interval) if sync_interval is not None \
@@ -384,19 +406,52 @@ class GraphService:
                                          budget=self.budget)
         self._cost_ewma.update({k: float(v)
                                 for k, v in (cost_seed or {}).items()})
-        self._set_graph(csr)
+        handle = csr if isinstance(csr, GraphHandle) else \
+            GraphHandle.wrap(csr, n_partitions=n_model_shards)
+        self._att = self._gsh = None
+        self._set_graph(handle)
 
-    # -- graph epoch -------------------------------------------------------
+    # -- graph epoch (GraphHandle is the currency; see graph.py) -----------
 
-    def _set_graph(self, csr: CSR) -> None:
-        self.csr = csr
+    @property
+    def epoch(self) -> int:
+        """The served graph's epoch — read-only handle bookkeeping."""
+        return self.handle.epoch
+
+    @property
+    def csr(self) -> CSR:
+        """The served graph's CSR (the handle's current effective graph)."""
+        return self.handle.csr
+
+    # trace-safe: host-side graph installation — concrete handle/ATT
+    # arithmetic before any runner is (re)compiled —
+    # repro-lint: disable=host-sync
+    def _set_graph(self, handle: GraphHandle,
+                   report: Optional[UpdateReport] = None) -> None:
+        self.handle = handle
+        csr = handle.csr
         self.delta = auto_delta(csr)
         self._ppr_k = min(self.ppr_k_max, csr.n_rows)
+        # compiled runners capture the old CSR as trace constants: drop them
         self._runners: Dict[Tuple, Any] = {}
         if self.mesh is not None:
             S = self.stats.n_model_shards
-            self._att = block_rule(csr.n_rows, S)
-            self._gsh, _ = shard_graph(csr, S, row_att=self._att)
+            gsh = None
+            if report is not None and self._gsh is not None \
+                    and not report.compacted:
+                # incremental reshard: only shards owning a changed SOURCE
+                # row moved edges (the stacked layout is source-partitioned)
+                srcs = jnp.asarray(report.changed_sources, jnp.int32)
+                shards = np.unique(np.asarray(self._att.owner(srcs))) \
+                    if report.changed_sources.size else np.zeros(0, np.int64)
+                gsh = update_shards(self._gsh, csr, self._att, shards)
+                if gsh is None:
+                    _log.info("epoch %d: shard padding overflow — full "
+                              "reshard", handle.epoch)
+            if gsh is None:           # cold start / compaction / overflow
+                self._att = block_rule(csr.n_rows, S)
+                gsh, _ = shard_graph(csr, S, row_att=self._att)
+            self._gsh = gsh
             m_per = self._gsh.edges_per_shard
         else:
             self._att = self._gsh = None
@@ -404,19 +459,57 @@ class GraphService:
         self._edge_cap = engine.frontier_edge_capacity(m_per, 1 / 32)
         self._m_per_shard = m_per
 
-    def update_graph(self, csr: CSR) -> int:
-        """Swap the served graph; bumps the epoch (old cache entries can
-        never be served again) and drops the compiled runners.  Pending
-        queries were *admitted* (and bounds-validated) against the old graph,
-        so they are flushed against it first — a query never executes on a
-        different graph than the one it was accepted for."""
+    # trace-safe: host-side ingest driver — the report's concrete partition
+    # counts feed the ledger, nothing here is traced —
+    # repro-lint: disable=host-sync
+    def apply_updates(self, inserts=None, deletes=None) -> UpdateReport:
+        """Ingest one edge-update batch (DESIGN.md §16).
+
+        inserts: (rows, cols) or (rows, cols, vals); deletes: (rows, cols)
+        — ``GraphHandle.apply`` semantics (deletes first, duplicate inserts
+        last-wins, upserts replace weights).  Bumps the epoch, reshards only
+        the touched partitions under a mesh, and invalidates the cache
+        partition-scoped: entries whose recorded touched-partition set is
+        disjoint from the mutation survive.  Pending queries were admitted
+        against the old graph, so they flush against it first.  Returns the
+        :class:`~repro.core.graph.UpdateReport` (the repair seed for
+        ``algorithms.incremental``).
+        """
         if self._queue:
             self.flush()
-        self.epoch += 1
-        self._set_graph(csr)
-        # keys embed the epoch, so stale entries are unreachable — purge them
-        # eagerly rather than letting them age out of the LRU
-        self._cache.clear()
+        handle, report = self.handle.apply(inserts, deletes)
+        self._set_graph(handle, report=report)
+        evicted = self._invalidate_partitions(report.touched_partitions)
+        # route-byte model: a deployment reships the touched partitions'
+        # edge lists (every partition on compaction), one contract-payload
+        # item per surviving edge — the §9 contract_level pricing
+        counts = handle.partition_edge_counts()
+        self._charge_ingest(int(counts.sum()) if report.compacted
+                            else int(counts[report.touched_partitions].sum()))
+        st = self.stats
+        st.updates += 1
+        st.update_edges += report.n_changed
+        st.cache_evicted += evicted
+        return report
+
+    def update_graph(self, csr: CSR) -> int:
+        """Deprecated whole-graph swap — a thin shim over
+        ``GraphHandle.replace`` (every partition is stamped, so the
+        partition-scoped invalidation evicts everything).  Use
+        :meth:`apply_updates` for streaming deltas.  Pending queries were
+        *admitted* (and bounds-validated) against the old graph, so they are
+        flushed against it first — a query never executes on a different
+        graph than the one it was accepted for."""
+        warnings.warn(
+            "GraphService.update_graph(csr) is deprecated; use "
+            "apply_updates(inserts, deletes) for streaming edge deltas, or "
+            "rebuild the service from GraphHandle.replace(csr) for a "
+            "whole-graph swap", DeprecationWarning, stacklevel=2)
+        if self._queue:
+            self.flush()
+        self._set_graph(self.handle.replace(csr))
+        self._invalidate_partitions(range(self.handle.n_partitions))
+        self._charge_ingest(self.csr.nnz)
         return self.epoch
 
     def reset_stats(self) -> None:
@@ -424,22 +517,74 @@ class GraphService:
                                   n_model_shards=self.stats.n_model_shards)
 
     # -- cache -------------------------------------------------------------
+    # entries are q -> (value, touched_parts): `touched_parts` is the
+    # frozenset of block partitions the computation read (None = all, the
+    # conservative default), recorded so apply_updates can evict exactly the
+    # entries a mutation could have changed (module docstring soundness
+    # argument) instead of purging the world.
 
     def _cache_get(self, q) -> Tuple[bool, Any]:
-        key = (self.epoch, q)
-        if key in self._cache:
-            self._cache.move_to_end(key)
-            return True, self._cache[key]
+        if q in self._cache:
+            self._cache.move_to_end(q)
+            return True, self._cache[q][0]
         return False, None
 
-    def _cache_put(self, q, value) -> None:
+    def _cache_put(self, q, value, parts: Optional[frozenset] = None) -> None:
         if self.cache_capacity <= 0:
             return
-        key = (self.epoch, q)
-        self._cache[key] = value
-        self._cache.move_to_end(key)
+        self._cache[q] = (value, parts)
+        self._cache.move_to_end(q)
         while len(self._cache) > self.cache_capacity:
             self._cache.popitem(last=False)
+
+    # trace-safe: host-side cache sweep over concrete partition ids —
+    # repro-lint: disable=host-sync
+    def _invalidate_partitions(self, parts) -> int:
+        """Evict entries whose touched-partition set intersects `parts`
+        (entries with no recorded set count as touching everything).
+        Returns the number evicted."""
+        ps = {int(p) for p in np.asarray(list(parts)).reshape(-1)}
+        evict = [k for k, (_, ent) in self._cache.items()
+                 if ent is None or ent & ps]
+        for k in evict:
+            del self._cache[k]
+        return len(evict)
+
+    def _charge_ingest(self, n_edges: int) -> None:
+        """Price a reshard of `n_edges` surviving edges in the route-byte
+        ledger — contract-payload items (src, dst, weight), §9 pricing."""
+        ctr = traffic.RouteByteCounter(self.stats.n_model_shards)
+        ctr.contract_level(int(n_edges))
+        self.stats.route_bytes += ctr.total_bytes
+
+    # partition attribution of results: block partitions are contiguous
+    # vertex ranges (GraphHandle arithmetic), so a traversal's touched set
+    # is the owners of its reached vertices — computed from the result
+    # arrays the executors already pulled to host.
+
+    # trace-safe: partition attribution over result arrays the executors
+    # already pulled to host — repro-lint: disable=host-sync
+    def _parts_of_mask(self, reached: np.ndarray) -> frozenset:
+        """Touched partitions of one lane's (n,) reached mask."""
+        idx = np.nonzero(reached)[0]
+        return frozenset(
+            int(p) for p in np.unique(self.handle.partition_of(idx)))
+
+    # trace-safe: same host-side attribution, per-shard variant —
+    # repro-lint: disable=host-sync
+    def _parts_of_shard_mask(self, shard_mask: np.ndarray) -> frozenset:
+        """Touched partitions from a per-shard reached indicator (S,) —
+        shards are contiguous global ranges under the block ATT, so each
+        reached shard maps to the partition range covering it."""
+        per = self._att.per_shard
+        n = self.csr.n_rows
+        parts = set()
+        for s in np.nonzero(shard_mask)[0]:
+            lo, hi = int(s) * per, min(n, (int(s) + 1) * per) - 1
+            if hi >= lo:
+                parts.update(range(int(self.handle.partition_of(lo)),
+                                   int(self.handle.partition_of(hi)) + 1))
+        return frozenset(parts)
 
     # -- admission ---------------------------------------------------------
 
@@ -517,7 +662,7 @@ class GraphService:
         lanes: Dict[str, Any] = {k: set() for k in _KIND_ROTATION}
         slots = 0
         for _, q, _, _ in self._queue:
-            if (self.epoch, q) in self._cache:
+            if q in self._cache:
                 continue            # will be served from cache, takes no lane
             kind = _KIND[type(q)]
             if kind == "sample":
@@ -697,6 +842,17 @@ class GraphService:
         srcs = jnp.asarray(self._pad(lanes))
         lane_of = {s: i for i, s in enumerate(lanes)}
         distributed = self.mesh is not None and kind in ("reach", "dist")
+        lane_parts: Dict[int, frozenset] = {}
+
+        def parts_of(ln: int, reached) -> frozenset:
+            # reached: (n,) lane mask locally, (S, per) stacked distributed —
+            # memoised per lane (dedup'd queries share the computation)
+            if ln not in lane_parts:
+                lane_parts[ln] = (
+                    self._parts_of_shard_mask(reached.any(axis=1))
+                    if distributed else self._parts_of_mask(reached))
+            return lane_parts[ln]
+
         if kind == "reach":
             if distributed:
                 run = self._runner(("reach", self.budget), lambda: jax.jit(
@@ -714,12 +870,14 @@ class GraphService:
             if distributed:
                 own, loc = self._vertex_slots([q.target for _, q, *_ in batch])
                 for (t, q, *_), o, l in zip(batch, own, loc):
-                    self._finish(t, q, bool(levels[o, lane_of[q.source],
-                                                   l] >= 0))
+                    ln = lane_of[q.source]
+                    self._finish(t, q, bool(levels[o, ln, l] >= 0),
+                                 parts=parts_of(ln, levels[:, ln, :] >= 0))
             else:
                 for t, q, *_ in batch:
-                    self._finish(t, q, bool(levels[lane_of[q.source],
-                                                   q.target] >= 0))
+                    ln = lane_of[q.source]
+                    self._finish(t, q, bool(levels[ln, q.target] >= 0),
+                                 parts=parts_of(ln, levels[ln] >= 0))
             self._charge_traversal(stats, packed=True, distributed=distributed)
         elif kind == "dist":
             if distributed:
@@ -739,11 +897,15 @@ class GraphService:
             if distributed:
                 own, loc = self._vertex_slots([q.target for _, q, *_ in batch])
                 for (t, q, *_), o, l in zip(batch, own, loc):
-                    self._finish(t, q, float(dist[o, lane_of[q.source], l]))
+                    ln = lane_of[q.source]
+                    self._finish(t, q, float(dist[o, ln, l]),
+                                 parts=parts_of(ln, np.isfinite(
+                                     dist[:, ln, :])))
             else:
                 for t, q, *_ in batch:
-                    self._finish(t, q, float(dist[lane_of[q.source],
-                                                  q.target]))
+                    ln = lane_of[q.source]
+                    self._finish(t, q, float(dist[ln, q.target]),
+                                 parts=parts_of(ln, np.isfinite(dist[ln])))
             self._charge_traversal(stats, packed=False,
                                    distributed=distributed)
         elif kind == "ppr":
@@ -757,6 +919,8 @@ class GraphService:
             vals, ids = np.asarray(vals), np.asarray(ids)
             for t, q, *_ in batch:
                 ln = lane_of[q.source]
+                # PPR iterates dense over the whole graph: parts=None means
+                # "touched everything", so any mutation evicts it
                 self._finish(t, q, (ids[ln, : q.k].copy(),
                                     vals[ln, : q.k].copy()))
             self._charge_traversal(stats, packed=False, distributed=False)
@@ -826,7 +990,11 @@ class GraphService:
         run = self._runner(("sample", self.budget), build)
         nbrs = np.asarray(run(jnp.asarray(verts), jnp.asarray(salts)))
         for (t, q, *_), (s, take) in zip(batch, spans):
-            self._finish(t, q, nbrs[s: s + take].copy())
+            # a one-hop draw reads only the vertex's own out-edge list,
+            # which lives in its source partition
+            self._finish(t, q, nbrs[s: s + take].copy(),
+                         parts=frozenset(
+                             {int(self.handle.partition_of(q.vertex))}))
         ctr = traffic.RouteByteCounter(self.stats.n_model_shards)
         ctr.push_level(self.budget,
                        payload_bytes=traffic.ROUTE_PAYLOAD_BYTES)
@@ -840,6 +1008,7 @@ class GraphService:
         while len(self._results) > self.results_capacity:
             self._results.popitem(last=False)  # oldest unclaimed ticket
 
-    def _finish(self, ticket: int, q, value) -> None:
+    def _finish(self, ticket: int, q, value,
+                parts: Optional[frozenset] = None) -> None:
         self._store_result(ticket, value)
-        self._cache_put(q, value)
+        self._cache_put(q, value, parts)

@@ -212,7 +212,12 @@ class RouteByteCounter:
         """One multi-level contraction: `n_routed_edges` locally pre-reduced
         coarse edges change owner shard (unlike the fixed-capacity push
         exchange, contraction ships exactly the surviving edges — the
-        between-levels repartition is host-driven, not a static all_to_all)."""
+        between-levels repartition is host-driven, not a static all_to_all).
+
+        Streaming ingest (DESIGN.md §16) prices through the same call: an
+        `apply_updates` batch reships the touched partitions' edge lists
+        (every partition on compaction) as (src, dst, weight) contract
+        payloads — same item shape, same host-driven repartition."""
         b = int(n_routed_edges) * payload_bytes
         self.total_bytes += b
         self.levels += 1

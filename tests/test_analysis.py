@@ -17,8 +17,8 @@ import pytest
 from repro.analysis import ALL_RULES, RULES_BY_ID, Analyzer, collect_files
 from repro.analysis.core import load_baseline, write_baseline
 from repro.analysis.rules import (CacheKeyRule, CompatBoundaryRule,
-                                  HostSyncRule, ShardSafetyRule,
-                                  SingleCoreRule)
+                                  HostSyncRule, MutableHandleRule,
+                                  ShardSafetyRule, SingleCoreRule)
 
 ROOT = Path(__file__).resolve().parent.parent
 
@@ -382,6 +382,70 @@ def test_cache_key_true_negatives():
 
 
 # ---------------------------------------------------------------------------
+# mutable-handle
+# ---------------------------------------------------------------------------
+
+def test_mutable_handle_flags_epoch_assignment():
+    src = """
+        class GraphService:
+            def bump(self):
+                self.epoch += 1
+    """
+    findings = run_rule(MutableHandleRule(), src,
+                        "src/repro/core/service.py")
+    assert any(".epoch" in f.message for f in findings)
+
+
+def test_mutable_handle_flags_csr_and_tuple_targets():
+    src = """
+        def swap(svc, new_csr, new_stamps):
+            svc.csr = new_csr
+            svc.other, svc.stamps = 1, new_stamps
+    """
+    findings = run_rule(MutableHandleRule(), src,
+                        "src/repro/core/service.py")
+    msgs = " | ".join(f.message for f in findings)
+    assert ".csr" in msgs and ".stamps" in msgs
+    # `.other` is not a handle field
+    assert ".other" not in msgs
+
+
+def test_mutable_handle_flags_frozen_backdoor():
+    src = """
+        def sneak(handle, e):
+            object.__setattr__(handle, "epoch", e)
+    """
+    findings = run_rule(MutableHandleRule(), src,
+                        "src/repro/core/service.py")
+    assert any("__setattr__" in f.message for f in findings)
+
+
+def test_mutable_handle_true_negatives():
+    # reads are the API; unrelated attributes are fine; graph.py is home turf
+    good = """
+        def snapshot(svc):
+            e = svc.epoch
+            c = svc.csr
+            svc.stats = e
+            return e, c
+    """
+    assert run_rule(MutableHandleRule(), good,
+                    "src/repro/core/service.py") == []
+    home = """
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True)
+        class GraphHandle:
+            epoch: int = 0
+
+            def _bump(self):
+                object.__setattr__(self, "epoch", self.epoch + 1)
+    """
+    assert run_rule(MutableHandleRule(), home,
+                    "src/repro/core/graph.py") == []
+
+
+# ---------------------------------------------------------------------------
 # framework: pragmas, baseline, CLI
 # ---------------------------------------------------------------------------
 
@@ -463,7 +527,8 @@ def test_cli_exit_codes_and_no_jax_import(tmp_path):
 
 def test_rule_registry_complete():
     assert set(RULES_BY_ID) == {"single-core", "compat-boundary",
-                                "host-sync", "shard-safety", "cache-key"}
+                                "host-sync", "shard-safety", "cache-key",
+                                "mutable-handle"}
     for rule in ALL_RULES:
         assert rule.doc, rule.id
 

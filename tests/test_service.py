@@ -417,3 +417,82 @@ def test_stats_ledger_accumulates_and_resets():
     assert set(d) >= {"qps", "occupancy", "hit_rate", "route_bytes_per_query"}
     svc.reset_stats()
     assert svc.stats.queries == 0 and svc.stats.route_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# streaming updates: partition-scoped invalidation (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def _two_blob_graph(n=256, seed=21):
+    """Two disconnected 128-vertex blobs: queries inside blob B (vertices
+    128..255, partitions 4..7 under the default 8-partition block rule)
+    can never touch blob A's partitions."""
+    from repro.core import CSR
+    half = n // 2
+    a = uniform_random_graph(half, 3, seed=seed)
+    b = uniform_random_graph(half, 3, seed=seed + 1)
+
+    def coo(g, off):
+        indptr = np.asarray(g.indptr)
+        rows = np.repeat(np.arange(half), np.diff(indptr)) + off
+        return rows, np.asarray(g.indices) + off, np.asarray(g.values)
+
+    ra, ca, va = coo(a, 0)
+    rb, cb, vb = coo(b, half)
+    return CSR.from_coo(np.concatenate([ra, rb]), np.concatenate([ca, cb]),
+                        np.concatenate([va, vb]), n, n)
+
+
+def test_apply_updates_keeps_untouched_partition_entries():
+    g = _two_blob_graph()
+    svc = GraphService(g, batch_budget=4, cache_capacity=64)
+    qa = [Reachability(1, 40), Distance(2, 50)]            # blob A
+    qb = [Reachability(130, 170), Distance(140, 200),      # blob B
+          Reachability(150, 255), Distance(160, 129)]
+    for q in qa + qb:
+        svc.query(q)
+    n_cached = len(svc._cache)
+    assert n_cached == len(qa) + len(qb)
+    # insert an edge confined to blob A's first partition (vertices 0..31)
+    rep = svc.apply_updates(inserts=(np.array([3]), np.array([4]),
+                                     np.array([1e-4], np.float32)))
+    assert svc.epoch == 1
+    assert sorted(rep.touched_partitions.tolist()) == [0]
+    # blob B entries survive (>= 50% of the cache), blob A entries are gone
+    assert len(svc._cache) >= n_cached // 2
+    hits_before = svc.stats.cache_hits
+    batches_before = svc.stats.batches
+    for q in qb:
+        svc.query(q)
+    assert svc.stats.cache_hits == hits_before + len(qb)
+    assert svc.stats.batches == batches_before     # served from cache
+    # blob A entries recompute against the updated graph
+    svc.query(qa[0])
+    assert svc.stats.batches == batches_before + 1
+    lv = np.asarray(bfs(svc.csr, 1))
+    assert svc.query(qa[0]) == bool(lv[40] >= 0)
+
+
+def test_apply_updates_correctness_and_ledger():
+    svc = make_service()
+    d_before = svc.query(Distance(5, 60))
+    rb_before = svc.stats.route_bytes
+    # a tiny-weight shortcut 5 -> 60 must change the served distance
+    rep = svc.apply_updates(inserts=(np.array([5]), np.array([60]),
+                                     np.array([1e-4], np.float32)))
+    assert rep.monotone_safe and svc.epoch == 1
+    assert svc.stats.updates == 1 and svc.stats.update_edges >= 1
+    assert svc.stats.route_bytes > rb_before       # ingest reshard is priced
+    d_after = svc.query(Distance(5, 60))
+    ref = float(np.asarray(sssp(svc.csr, 5, delta=svc.delta))[60])
+    assert d_after == ref and d_after <= d_before
+
+
+def test_update_graph_is_deprecated_shim():
+    svc = make_service()
+    svc.query(Reachability(0, 5))
+    g2 = uniform_random_graph(G.n_rows, 3, seed=9)
+    with pytest.warns(DeprecationWarning):
+        epoch = svc.update_graph(g2)
+    assert epoch == 1 and svc.epoch == 1
+    assert len(svc._cache) == 0        # whole-graph swap stamps everything
