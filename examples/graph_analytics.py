@@ -12,6 +12,11 @@ traversal latency comparison alongside the served stream.
 batches ingested through `GraphService.apply_updates` while the service keeps
 answering queries, printing per-epoch repair-vs-scratch latency and the
 partition-scoped cache survival.
+
+`--trace out.json` (DESIGN §17, PR 9) attaches a telemetry bundle to the
+served stream — the deadline mix when >= 8 devices, the local mixed stream
+otherwise — writes the Chrome ``trace_event`` JSON (load it at
+chrome://tracing or ui.perfetto.dev) and prints the per-phase summary table.
 """
 import argparse
 import time
@@ -36,6 +41,10 @@ ap.add_argument("--sync-interval", type=int, default=8,
 ap.add_argument("--stream", type=int, default=0, metavar="N",
                 help="streaming demo: ingest N update batches and print "
                      "repair-vs-scratch latency per epoch (DESIGN §16)")
+ap.add_argument("--trace", metavar="PATH",
+                help="record the served stream (spans + per-level engine "
+                     "traces) and write a Chrome trace_event JSON (DESIGN "
+                     "§17)")
 args = ap.parse_args()
 
 g = rmat(args.scale, 16, seed=7)
@@ -71,11 +80,23 @@ nodes, n_nodes, mask = timed("TIES sampler", jax.jit(lambda: ties_sample(
 from repro.core import (GraphService, Reachability, Distance, PPRTopK,
                         NeighborSample)
 
-svc = GraphService(g, batch_budget=32, cache_capacity=1024)
+# --trace: one telemetry bundle for the served stream (DESIGN §17) — it
+# rides the deadline-mix service when the distributed demo runs, else the
+# local mixed stream, and is exported + summarized after serving
+obs = None
+if args.trace:
+    from repro.obs import MetricsRegistry, Observability, format_summary
+    obs = Observability(metrics=MetricsRegistry())
+use_dist = len(jax.devices()) >= 8
+
+svc = GraphService(g, batch_budget=32, cache_capacity=1024,
+                   obs=None if use_dist else obs)
 for warm in (Reachability(0, 1), Distance(0, 1), PPRTopK(0, k=4),
              NeighborSample(0, fanout=2)):
     svc.query(warm)  # compile each kind's runner before timing the stream
 svc.reset_stats()
+if obs is not None and not use_dist:
+    obs.clear()      # the trace shows serving, not the warmup compiles
 rng = np.random.default_rng(3)
 stream = []
 for i in range(96):  # a mixed query stream, as a client would submit it
@@ -94,7 +115,7 @@ print(f"  first query            {stream[0]} -> {reach}")
 # --- distributed serving with deadlines (DESIGN §14): the same facade on the
 # sharded engine — reach/dist ride run_batched_distributed, every query
 # carries a latency SLO, and the stats report p50/p95 + deadline-miss rate.
-if len(jax.devices()) >= 8:
+if use_dist:
     from repro.launch.mesh import make_cores_mesh
 
     mesh = make_cores_mesh(8)
@@ -118,10 +139,12 @@ if len(jax.devices()) >= 8:
     dsvc = GraphService(g, batch_budget=32, mesh=mesh, cache_capacity=1024,
                         placement=args.placement,
                         sync_interval=args.sync_interval,
-                        cost_seed="auto")
+                        cost_seed="auto", obs=obs)
     for warm in (Reachability(0, 1), PPRTopK(0, k=4)):
         dsvc.query(warm)  # compile before the timed stream
     dsvc.reset_stats()
+    if obs is not None:
+        obs.clear()      # trace the deadline mix, not the warmup compiles
     dstream = []
     for i in range(64):  # a deadline mix: reachability + PPR top-k
         s = int(rng.integers(0, g.n_rows))
@@ -140,6 +163,13 @@ else:
     print(f"\n  distributed serving demo skipped ({len(jax.devices())} "
           "devices < 8; run under "
           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+if obs is not None:
+    tdoc = obs.export_chrome_trace(args.trace)
+    print(f"\n  trace: wrote {args.trace} ({len(tdoc['traceEvents'])} events;"
+          " load at chrome://tracing or ui.perfetto.dev)")
+    for line in format_summary(obs.summary()).splitlines():
+        print("  " + line)
 
 # --- streaming graphs (DESIGN §16): epoch-versioned serving under updates ---
 if args.stream > 0:

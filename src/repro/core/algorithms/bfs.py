@@ -116,12 +116,14 @@ def msbfs_program(n_lanes: int) -> engine.VertexProgram:
 
 
 def msbfs(csr: CSR, sources, *, max_levels: int | None = None,
-          mode: str = "auto", return_stats: bool = False):
+          mode: str = "auto", return_stats: bool = False,
+          trace: bool = False, trace_len: Optional[int] = None):
     """Levels (B, n) int32 for B concurrent BFS traversals; unreachable = -1.
 
     Row b is bit-identical to ``bfs(csr, sources[b])`` — the lanes share
     every edge scan but never interact.  Duplicate sources are allowed (their
-    lanes evolve identically).
+    lanes evolve identically).  ``trace`` (with ``return_stats``) records the
+    per-level engine trace into ``stats['trace']`` (obs.decode_level_trace).
     """
     n = csr.n_rows
     src = jnp.asarray(sources, jnp.int32)
@@ -134,7 +136,8 @@ def msbfs(csr: CSR, sources, *, max_levels: int | None = None,
               "level": jnp.full((B, n), -1, jnp.int32).at[lanes, src].set(0)}
     out = engine.run_batched(csr, msbfs_program(B), state0, f0,
                              max_iters=max_levels, mode=mode,
-                             return_stats=return_stats)
+                             return_stats=return_stats,
+                             trace=trace, trace_len=trace_len)
     if return_stats:
         state, stats = out
         return state["level"], stats
@@ -145,7 +148,8 @@ def msbfs_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh, *,
                       axis=None, max_levels: int = 64,
                       push_edge_capacity: Optional[int] = None,
                       return_stats: bool = False, placement: str = "sync",
-                      sync_interval: Optional[int] = None):
+                      sync_interval: Optional[int] = None,
+                      trace: bool = False, trace_len: Optional[int] = None):
     """Batched-lane BFS on the distributed push pipeline.
 
     Returns levels stacked (S, B, per_shard) under the `att` layout — slice
@@ -176,7 +180,8 @@ def msbfs_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh, *,
             g, att, mesh, bfs_level_program(), {"dist": dist0}, f0,
             axis=axis, max_iters=max_levels * k,
             push_edge_capacity=push_edge_capacity,
-            return_stats=return_stats, placement="async", sync_interval=k)
+            return_stats=return_stats, placement="async", sync_interval=k,
+            trace=trace, trace_len=trace_len)
         if return_stats:
             state, stats = out
             return _levels_from_dist(state["dist"]), stats
@@ -193,7 +198,8 @@ def msbfs_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh, *,
     out = engine.run_batched_distributed(
         g, att, mesh, msbfs_program(B), state0, words0,
         axis=axis, max_iters=max_levels,
-        push_edge_capacity=push_edge_capacity, return_stats=return_stats)
+        push_edge_capacity=push_edge_capacity, return_stats=return_stats,
+        trace=trace, trace_len=trace_len)
     if return_stats:
         state, stats = out
         return state["level"], stats

@@ -35,6 +35,7 @@ from jax.sharding import Mesh
 from .. import engine
 from ..dgas import ATT
 from ..graph import CSR, GraphHandle, UpdateReport
+from ...obs import get_registry
 from .bfs import _levels_from_dist, bfs_level_program
 from .cc import cc_program, symmetrize
 from .distgraph import ShardedGraph
@@ -201,6 +202,7 @@ def repair_or_recompute(kind: str, handle: GraphHandle, prev,
              "weight increases=%s — old fixpoint not feasible)",
              report.epoch, kind, report.n_deleted, not report.monotone_safe
              and report.n_deleted == 0)
+    get_registry().counter("streaming.full_recompute_fallback").inc()
     if kind == "bfs":
         return bfs(csr, source, mode=mode)
     if kind == "cc":

@@ -79,7 +79,8 @@ def ppr(csr: CSR, source: int, *, damping: float = 0.85,
 
 
 def ppr_batched(csr: CSR, sources, *, damping: float = 0.85,
-                iters: int = 20, return_stats: bool = False):
+                iters: int = 20, return_stats: bool = False,
+                trace: bool = False, trace_len=None):
     """Personalized PageRank for B sources in one engine pass; (B, n) f32.
 
     Row b is bit-identical to ``ppr(csr, sources[b])``: the vmapped lanes
@@ -95,7 +96,8 @@ def ppr_batched(csr: CSR, sources, *, damping: float = 0.85,
     frontier0 = jnp.ones((B, n), jnp.int32)
     out = engine.run_batched(csr, ppr_program(csr, damping), state0,
                              frontier0, max_iters=iters, mode="pull",
-                             return_stats=return_stats)
+                             return_stats=return_stats,
+                             trace=trace, trace_len=trace_len)
     if return_stats:
         state, stats = out
         return state["x"], stats
@@ -104,14 +106,16 @@ def ppr_batched(csr: CSR, sources, *, damping: float = 0.85,
 
 def ppr_topk(csr: CSR, sources, k: int, *, damping: float = 0.85,
              iters: int = 20,
-             return_stats: bool = False):
+             return_stats: bool = False,
+             trace: bool = False, trace_len=None):
     """Top-k PPR per source: (scores (B, k), vertex ids (B, k)) — the
     service layer's PPR query shape.  ``return_stats`` appends the
     ExecutionCore's level trace (all pulls: PPR never leaves the dense
     regime), so the serving ledger can price PPR batches from the measured
     run like the traversal kinds."""
     out = ppr_batched(csr, sources, damping=damping, iters=iters,
-                      return_stats=return_stats)
+                      return_stats=return_stats,
+                      trace=trace, trace_len=trace_len)
     x, stats = out if return_stats else (out, None)
     vals, idx = lax.top_k(x, k)
     if return_stats:

@@ -99,11 +99,14 @@ def auto_delta(csr: CSR, *, bins: int = 64, light_edges_per_vertex: float = 4.0
 
 def sssp(csr: CSR, source: int, *, delta: Optional[float] = None,
          max_iters: Optional[int] = None, mode: str = "auto",
-         return_stats: bool = False):
+         return_stats: bool = False, trace: bool = False,
+         trace_len: Optional[int] = None):
     """Returns (n,) float32 distances; unreachable = +inf.
 
     delta: bucket width; None auto-tunes from the weight histogram
       (:func:`auto_delta`).
+    trace: with return_stats, record the per-level engine trace into
+      ``stats['trace']`` (obs.decode_level_trace reads it back).
     """
     n = csr.n_rows
     delta = delta if delta is not None else auto_delta(csr)
@@ -115,7 +118,8 @@ def sssp(csr: CSR, source: int, *, delta: Optional[float] = None,
     }
     frontier0 = jnp.zeros((n,), jnp.int32).at[source].set(1)
     out = engine.run(csr, sssp_program(delta), state0, frontier0,
-                     max_iters=max_iters, mode=mode, return_stats=return_stats)
+                     max_iters=max_iters, mode=mode, return_stats=return_stats,
+                     trace=trace, trace_len=trace_len)
     if return_stats:
         state, stats = out
         return state["dist"], stats
@@ -124,7 +128,8 @@ def sssp(csr: CSR, source: int, *, delta: Optional[float] = None,
 
 def sssp_batched(csr: CSR, sources, *, delta: Optional[float] = None,
                  max_iters: Optional[int] = None, mode: str = "auto",
-                 kernel_bb=None, return_stats: bool = False):
+                 kernel_bb=None, return_stats: bool = False,
+                 trace: bool = False, trace_len: Optional[int] = None):
     """Distances (B, n) float32 for B concurrent single-source runs.
 
     The *same* ``sssp_program`` drives every lane (the engine vmaps it), so
@@ -150,7 +155,8 @@ def sssp_batched(csr: CSR, sources, *, delta: Optional[float] = None,
     frontier0 = jnp.zeros((B, n), jnp.int32).at[lanes, src].set(1)
     out = engine.run_batched(csr, sssp_program(delta), state0, frontier0,
                              max_iters=max_iters, mode=mode,
-                             kernel_bb=kernel_bb, return_stats=return_stats)
+                             kernel_bb=kernel_bb, return_stats=return_stats,
+                             trace=trace, trace_len=trace_len)
     if return_stats:
         state, stats = out
         return state["dist"], stats
@@ -162,7 +168,9 @@ def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
                              max_iters: int = 256,
                              return_stats: bool = False,
                              placement: str = "sync",
-                             sync_interval: Optional[int] = None):
+                             sync_interval: Optional[int] = None,
+                             trace: bool = False,
+                             trace_len: Optional[int] = None):
     """Batched distances stacked (S, B, per_shard) under `att`; slice
     ``[:, b, :]`` matches ``sssp_distributed(g, att, sources[b], mesh,
     delta=delta)`` — all B lanes' remote atomic-min relaxations share each
@@ -196,7 +204,8 @@ def sssp_batched_distributed(g: ShardedGraph, att: ATT, sources, mesh: Mesh,
                                          max_iters=max_iters,
                                          return_stats=return_stats,
                                          placement=placement,
-                                         sync_interval=sync_interval)
+                                         sync_interval=sync_interval,
+                                         trace=trace, trace_len=trace_len)
     if return_stats:
         state, stats = out
         return state["dist"], stats

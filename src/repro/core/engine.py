@@ -456,7 +456,8 @@ def _lane_ops(prog: VertexProgram, lanes: str):
 
 
 def _core_loop(core: ExecutionCore, state0: Any, frontier0: jnp.ndarray, *,
-               max_iters: int, key: Optional[jax.Array] = None):
+               max_iters: int, key: Optional[jax.Array] = None,
+               trace_len: int = 0, trace_flush: bool = False):
     """Run an :class:`ExecutionCore` to frontier exhaustion (or `max_iters`).
 
     This is the engine's only stepping loop (`scripts/check_single_core.py`
@@ -466,30 +467,56 @@ def _core_loop(core: ExecutionCore, state0: Any, frontier0: jnp.ndarray, *,
     iteration.  Returns ``(state, stats)`` with stats =
     {'iters', 'pushes', 'pulls', 'fallbacks'} (int32 scalars; wrappers drop
     the keys their placement cannot produce).
+
+    trace_len > 0 additionally carries a ``(trace_len, 4)`` int32 per-level
+    trace (DESIGN.md §17): one row ``[frontier, was_push, fallback, flush]``
+    per body iteration, written on device with a drop-mode scatter (levels
+    past the buffer are dropped, never clamp-overwritten) and returned as
+    ``stats['trace']``.  ``frontier`` is the carried global active count
+    entering the level — no new reduction — and ``flush`` mirrors
+    ``was_push`` only when ``trace_flush`` is set (the async placement,
+    where the globally-checked step's "push" IS the outbox flush).  The
+    trace rides its own carry slot and never feeds state/frontier, so
+    results are bit-identical with tracing on or off; with ``trace_len=0``
+    the carry (and the compiled loop) is exactly the untraced one.
     """
+    traced = int(trace_len) > 0
 
     def cond(carry):
-        _, _, it, alive, _ = carry
+        it, alive = carry[2], carry[3]
         return jnp.logical_and(alive > 0, it < max_iters)
 
     def body(carry):
-        state, frontier, it, alive, (n_push, n_pull, n_fb) = carry
+        state, frontier, it, alive, (n_push, n_pull, n_fb) = carry[:5]
         if core.pace is not None:  # async: local micro-steps first
             state, frontier, it = core.pace(state, frontier, it)
         msg = core.msg(state, frontier)
         it_key = jax.random.fold_in(key, it) if key is not None else None
         acc, was_push, fb = core.step(msg, frontier, alive, it_key)
         state, frontier = core.update(state, acc, frontier, it)
-        return (state, frontier, it + 1, core.count(frontier),
-                (n_push + was_push, n_pull + (1 - was_push), n_fb + fb))
+        out = (state, frontier, it + 1, core.count(frontier),
+               (n_push + was_push, n_pull + (1 - was_push), n_fb + fb))
+        if traced:
+            tr, row = carry[5]
+            rec = jnp.stack([alive, was_push, fb,
+                             was_push if trace_flush else jnp.int32(0)])
+            # row, not it: async pacing advances `it` by sync_interval per
+            # body call, the trace records one row per global check
+            out += ((tr.at[row].set(rec, mode="drop"), row + 1),)
+        return out
 
     zero = jnp.int32(0)
     carry0 = (state0, frontier0, zero, core.count(frontier0),
               (zero, zero, zero))
-    state, _, it, _, (n_push, n_pull, n_fb) = lax.while_loop(cond, body,
-                                                             carry0)
-    return state, {"iters": it, "pushes": n_push, "pulls": n_pull,
-                   "fallbacks": n_fb}
+    if traced:
+        carry0 += ((jnp.zeros((int(trace_len), 4), jnp.int32), zero),)
+    fin = lax.while_loop(cond, body, carry0)
+    state, it, (n_push, n_pull, n_fb) = fin[0], fin[2], fin[4]
+    stats = {"iters": it, "pushes": n_push, "pulls": n_pull,
+             "fallbacks": n_fb}
+    if traced:
+        stats["trace"] = fin[5][0]
+    return state, stats
 
 
 def _scan_steps(body, carry, xs):
@@ -657,9 +684,28 @@ def _local_core(csr: CSR, prog: VertexProgram, lanes: str, *, mode: str,
         count=lambda f: union(f).astype(jnp.int32).sum())
 
 
+def _trace_len_of(trace: bool, trace_len, max_iters, return_stats: bool) -> int:
+    """Resolve the runners' (trace, trace_len) opt-in to a static buffer
+    length (0 = tracing off).  The trace rides the stats dict, so tracing
+    requires return_stats; the default buffer covers min(max_iters, 512)
+    levels (per-level rows, so even async runs — whose `max_iters` counts
+    micro-steps — rarely drop rows)."""
+    if not trace:
+        if trace_len is not None:
+            raise ValueError("trace_len is only meaningful with trace=True")
+        return 0
+    if not return_stats:
+        raise ValueError("trace=True returns stats['trace']: pass "
+                         "return_stats=True as well")
+    n = int(trace_len) if trace_len is not None else min(int(max_iters), 512)
+    if n < 1:
+        raise ValueError(f"trace_len must be >= 1, got {n}")
+    return n
+
+
 def _run_local(csr: CSR, prog: VertexProgram, lanes: str, state0, frontier0,
                *, max_iters, mode, push_capacity, kernel_bb, interpret, key,
-               return_stats):
+               return_stats, trace_len: int = 0):
     """Shared local wrapper: validate, plan a local ExecutionCore, loop."""
     if mode not in ("auto", "push", "pull"):
         raise ValueError(f"mode must be 'auto', 'push' or 'pull', got {mode!r}")
@@ -673,16 +719,19 @@ def _run_local(csr: CSR, prog: VertexProgram, lanes: str, state0, frontier0,
     core = _local_core(csr, prog, lanes, mode=mode, C=C, k=k,
                        kernel_bb=kernel_bb, interpret=interpret)
     state, stats = _core_loop(core, state0, frontier0, max_iters=max_iters,
-                              key=key)
+                              key=key, trace_len=trace_len)
     if return_stats:
-        return state, {k_: stats[k_] for k_ in ("iters", "pushes", "pulls")}
+        keys = ("iters", "pushes", "pulls") + \
+            (("trace",) if trace_len else ())
+        return state, {k_: stats[k_] for k_ in keys}
     return state
 
 
 def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
         max_iters: int, mode: str = "auto", push_capacity: Optional[int] = None,
         kernel_bb: Optional[BBCSR] = None, interpret: Optional[bool] = None,
-        key: Optional[jax.Array] = None, return_stats: bool = False):
+        key: Optional[jax.Array] = None, return_stats: bool = False,
+        trace: bool = False, trace_len: Optional[int] = None):
     """Run `prog` to frontier exhaustion (or `max_iters`).
 
     The (scalar lanes, local placement) point of the ExecutionCore grid.
@@ -702,6 +751,10 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
       directions through the Pallas SpMV/SpMSpV kernels (combine='add' only).
     key: PRNG key, required for combine='sample' (folded per iteration).
     return_stats: also return {'iters', 'pushes', 'pulls'} taken.
+    trace: with return_stats, also record the fixed-length per-level trace
+      (``stats['trace']``, decoded by `repro.obs.decode_level_trace`) —
+      results are bit-identical trace on or off.  trace_len overrides the
+      default min(max_iters, 512)-row buffer.
     """
     if prog.combine == "or":
         raise ValueError("combine='or' is the batched bitwise combine: run it "
@@ -711,14 +764,17 @@ def run(csr: CSR, prog: VertexProgram, state0: Any, frontier0: jnp.ndarray, *,
     return _run_local(csr, prog, "scalar", state0, frontier0,
                       max_iters=max_iters, mode=mode,
                       push_capacity=push_capacity, kernel_bb=kernel_bb,
-                      interpret=interpret, key=key, return_stats=return_stats)
+                      interpret=interpret, key=key, return_stats=return_stats,
+                      trace_len=_trace_len_of(trace, trace_len, max_iters,
+                                              return_stats))
 
 
 def run_batched(csr: CSR, prog: VertexProgram, state0: Any,
                 frontier0: jnp.ndarray, *, max_iters: int, mode: str = "auto",
                 push_capacity: Optional[int] = None,
                 kernel_bb: Optional[BBCSR] = None,
-                interpret: Optional[bool] = None, return_stats: bool = False):
+                interpret: Optional[bool] = None, return_stats: bool = False,
+                trace: bool = False, trace_len: Optional[int] = None):
     """Run ``prog`` for a *batch* of sources in one pass over the graph.
 
     The (valued | packed lanes, local placement) points of the ExecutionCore
@@ -748,7 +804,8 @@ def run_batched(csr: CSR, prog: VertexProgram, state0: Any,
       tile combine), one lane per kernel launch under ``lax.map`` with the
       union-frontier tile schedule shared across lanes.
     Returns the final state (leaves (B, n)); ``return_stats`` adds
-    {'iters', 'pushes', 'pulls'}.
+    {'iters', 'pushes', 'pulls'}; ``trace``/``trace_len`` as :func:`run`
+    (the per-level rows describe the shared union-frontier scan).
     """
     if prog.structured:
         raise NotImplementedError(
@@ -761,7 +818,9 @@ def run_batched(csr: CSR, prog: VertexProgram, state0: Any,
     return _run_local(csr, prog, "packed" if packed else "valued", state0,
                       frontier0, max_iters=max_iters, mode=mode,
                       push_capacity=push_capacity, kernel_bb=kernel_bb,
-                      interpret=interpret, key=None, return_stats=return_stats)
+                      interpret=interpret, key=None, return_stats=return_stats,
+                      trace_len=_trace_len_of(trace, trace_len, max_iters,
+                                              return_stats))
 
 
 def _kernel_lanes(bb: BBCSR, msg: jnp.ndarray, prog: VertexProgram,
@@ -1191,7 +1250,7 @@ def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                      *, lanes: str, axis, max_iters: int, mode: str,
                      switch_frac: float, push_edge_capacity,
                      g_rev, return_stats: bool, placement: str = "sync",
-                     sync_interval: int = 1):
+                     sync_interval: int = 1, trace_len: int = 0):
     """Shared distributed wrapper: plan a sharded ExecutionCore and run the
     single stepping loop inside one shard_map (cached via `cached_mapped`).
 
@@ -1319,13 +1378,17 @@ def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
 
             core = ExecutionCore(msg=msg_of, step=step, update=update,
                                  count=count)
-        state, stats = _core_loop(core, state, frontier, max_iters=max_iters)
+        state, stats = _core_loop(core, state, frontier, max_iters=max_iters,
+                                  trace_len=trace_len,
+                                  trace_flush=placement == "async")
         if placement == "async":
             state = state[0]  # drop the (drained) outbox
         out = tuple(l[None] for l in jax.tree.leaves(state))
         if return_stats:
             out = out + tuple(stats[k][None] for k in
                               ("iters", "pushes", "pulls", "fallbacks"))
+            if trace_len:   # rows are globally-agreed: every shard identical
+                out = out + (stats["trace"][None],)
         return out
 
     if not use_rev:  # placeholder operands keep the shard_map arity static
@@ -1339,14 +1402,17 @@ def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
     cache_key = ("core", _mesh_key(mesh), _axis_key(axis), _att_key(att),
                  (lanes, mode, int(max_iters), float(switch_frac), edge_cap,
                   compact, use_rev, m_fwd, m_rev, return_stats, state_def,
-                  placement, int(sync_interval)),
+                  placement, int(sync_interval), int(trace_len)),
                  tuple((tuple(x.shape), str(x.dtype)) for x in operands))
     out = _shard_apply(mesh, axis, shard_fn, operands, cache_key=cache_key,
                        ident=prog)
     state = jax.tree.unflatten(state_def, list(out[:n_state]))
     if return_stats:
         keys = ("iters", "pushes", "pulls", "fallbacks")
-        return state, dict(zip(keys, out[n_state:]))
+        stats = dict(zip(keys, out[n_state:n_state + len(keys)]))
+        if trace_len:
+            stats["trace"] = out[n_state + len(keys)]
+        return state, stats
     return state
 
 
@@ -1357,7 +1423,8 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                     switch_frac: float = 1 / 32,
                     push_edge_capacity: Optional[int] = None,
                     return_stats: bool = False, placement: str = "sync",
-                    sync_interval: Optional[int] = None):
+                    sync_interval: Optional[int] = None,
+                    trace: bool = False, trace_len: Optional[int] = None):
     """Distributed loop; `state0`/`frontier0` are stacked (S, per) per `att`.
 
     The (scalar lanes, distributed placement) point of the ExecutionCore
@@ -1386,6 +1453,10 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
       (S,) int32 arrays, identical on every shard (globally reduced);
       'fallbacks' counts the push levels whose active-edge count overflowed
       the compacted capacity (the §7 fallback rate's numerator).
+    trace: with return_stats, record the per-level device trace
+      (``stats['trace']``, stacked (S, trace_len, 4) and identical on every
+      shard — the rows are built from globally-agreed quantities); under
+      'async' each row is one global check and the flush column fires.
     Returns the final state pytree, stacked (S, per).
     """
     if mode not in ("auto", "push", "pull"):
@@ -1403,7 +1474,9 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                             push_edge_capacity=push_edge_capacity,
                             g_rev=g_rev, return_stats=return_stats,
                             placement=placement,
-                            sync_interval=int(sync_interval))
+                            sync_interval=int(sync_interval),
+                            trace_len=_trace_len_of(trace, trace_len,
+                                                    max_iters, return_stats))
 
 
 def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
@@ -1414,7 +1487,9 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                             push_edge_capacity: Optional[int] = None,
                             return_stats: bool = False,
                             placement: str = "sync",
-                            sync_interval: Optional[int] = None):
+                            sync_interval: Optional[int] = None,
+                            trace: bool = False,
+                            trace_len: Optional[int] = None):
     """Distributed batched loop: B concurrent traversals, one push pipeline.
 
     The (valued | packed lanes, distributed placement) points of the
@@ -1446,7 +1521,7 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
     Returns the final state pytree stacked (S, ...); ``return_stats`` adds
     {'iters', 'pushes', 'pulls', 'fallbacks'} ((S,) int32, identical on
     every shard; 'pulls' is always 0 — the batched distributed engine is
-    push-only).
+    push-only).  ``trace``/``trace_len`` as :func:`run_distributed`.
     """
     if prog.structured:
         raise NotImplementedError(
@@ -1462,7 +1537,9 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                             push_edge_capacity=push_edge_capacity,
                             g_rev=None, return_stats=return_stats,
                             placement=placement,
-                            sync_interval=int(sync_interval))
+                            sync_interval=int(sync_interval),
+                            trace_len=_trace_len_of(trace, trace_len,
+                                                    max_iters, return_stats))
 
 
 def spmv_pass(g: ShardedGraph, x_sharded: jnp.ndarray, x_att: ATT,

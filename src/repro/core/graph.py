@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import get_registry
+
 __all__ = ["CSR", "rmat", "uniform_random_graph", "to_padded_ell", "to_bbcsr", "BBCSR",
            "contract", "DeltaLog", "UpdateReport", "GraphHandle"]
 
@@ -415,6 +417,7 @@ class GraphHandle:
             csr = _canonical(CSR.from_coo(
                 *_coo_of(csr), csr.n_rows, csr.n_cols))
             delta = DeltaLog.empty(weighted=weighted)
+            get_registry().counter("graph.compactions").inc()
         handle = GraphHandle(csr, epoch, delta, stamps, self.n_partitions,
                              self.compact_threshold)
         report = UpdateReport(

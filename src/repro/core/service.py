@@ -94,6 +94,7 @@ import numpy as np
 from . import engine, traffic
 from .dgas import block_rule
 from .graph import CSR, GraphHandle, UpdateReport
+from ..obs import Histogram, Observability, get_registry
 from .algorithms.bfs import msbfs, msbfs_distributed
 from .algorithms.distgraph import shard_graph, update_shards
 from .algorithms.pagerank import ppr_topk
@@ -237,8 +238,11 @@ class ServiceStats:
     updates: int = 0            # apply_updates batches ingested
     update_edges: int = 0       # edges changed across those batches
     cache_evicted: int = 0      # entries evicted by partition-scoped purges
-    latencies_s: "collections.deque" = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=65536))
+    # log-bucketed latency sketch (repro.obs): O(buckets) retention no
+    # matter how many queries are served, percentiles within one bucket
+    # width (12%) of exact — replaces the raw 65536-deep sample deque
+    latency_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("service.latency_s"))
 
     @property
     def qps(self) -> float:
@@ -258,12 +262,8 @@ class ServiceStats:
     def route_bytes_per_query(self) -> float:
         return self.route_bytes / self.queries if self.queries else 0.0
 
-    # trace-safe: stats readback over the host-side latency ledger —
-    # repro-lint: disable=host-sync
     def _latency_pct(self, pct: float) -> float:
-        if not self.latencies_s:
-            return 0.0
-        return float(np.percentile(np.asarray(self.latencies_s), pct))
+        return self.latency_hist.percentile(pct)
 
     @property
     def latency_p50_ms(self) -> float:
@@ -350,6 +350,14 @@ class GraphService:
       (:func:`load_cost_priors`) — deadline admission then starts from a
       steady-state estimate instead of learning from the compile-inflated
       first batch.
+    obs: optional :class:`repro.obs.Observability` — attaching one turns on
+      host-side span recording (enqueue / flush-wait / engine / readback,
+      DESIGN.md §17) and per-level engine tracing (the traversal runners
+      compile with ``trace=True`` and each run's decoded level trace lands
+      in ``obs.level_runs``).  ``None`` (default) records nothing and the
+      runners compile exactly as before; degradation counters (push-capacity
+      fallback, cache invalidations, EWMA updates) always land in
+      ``obs.metrics`` when attached, else the process-wide registry.
     """
 
     #: EWMA weight for the per-kind batch-cost estimate the deadline slack
@@ -364,7 +372,7 @@ class GraphService:
                  clock=time.perf_counter, deadline_safety: float = 0.0,
                  placement: str = "sync",
                  sync_interval: Optional[int] = None,
-                 cost_seed=None):
+                 cost_seed=None, obs: Optional[Observability] = None):
         if batch_budget < 1:
             raise ValueError("batch_budget must be >= 1")
         if placement not in ("sync", "async"):
@@ -383,6 +391,9 @@ class GraphService:
         self.sync_interval = int(sync_interval) if sync_interval is not None \
             else (8 if placement == "async" else 1)
         self._clock = clock
+        self.obs = obs
+        self._metrics = obs.metrics if obs is not None else get_registry()
+        self._trace = obs is not None
         self.deadline_safety = float(deadline_safety)
         if mesh is not None:
             n_model_shards = 1
@@ -548,6 +559,9 @@ class GraphService:
                  if ent is None or ent & ps]
         for k in evict:
             del self._cache[k]
+        if evict:
+            self._metrics.counter("service.cache_invalidations").inc(
+                len(evict))
         return len(evict)
 
     def _charge_ingest(self, n_edges: int) -> None:
@@ -618,6 +632,13 @@ class GraphService:
         now = self._clock()
         self._queue.append((t, q, None if deadline is None else now + deadline,
                             now))
+        if self.obs is not None:
+            # enqueue span ends before any armed flush below fires, so the
+            # client lane never swallows a whole batch execution
+            self.obs.spans.record("enqueue", now, self._clock(),
+                                  tid=Observability.TID_CLIENT,
+                                  kind=_KIND[type(q)], ticket=t,
+                                  deadline_s=deadline)
         if deadline is not None:
             self._n_deadlines += 1
         if self._deadline_armed() and (self._deadline_due()
@@ -782,7 +803,7 @@ class GraphService:
 
     def _account_latency(self, dl: Optional[float], ts: float) -> None:
         now = self._clock()
-        self.stats.latencies_s.append(now - ts)
+        self.stats.latency_hist.observe(now - ts)
         if dl is not None:
             self.stats.deadline_queries += 1
             if now > dl:
@@ -793,6 +814,7 @@ class GraphService:
         a = self.COST_EWMA_ALPHA
         self._cost_ewma[kind] = seconds if prev is None \
             else (1 - a) * prev + a * seconds
+        self._metrics.counter("service.cost_ewma_updates").inc()
 
     def _charge(self, n_lanes: int, pushes: int, pulls: int, *,
                 packed: bool, fallbacks: int = 0) -> None:
@@ -828,6 +850,14 @@ class GraphService:
         if not batch:
             return
         t_exec = self._clock()
+        if self.obs is not None:
+            # queue wait + collect, measured from the batch's oldest submit;
+            # the recorder clips the start forward to the previous round's
+            # readback end, so successive rounds tile the service lane
+            self.obs.spans.record(
+                "flush_wait", min(ts for *_, ts in batch), t_exec,
+                tid=Observability.TID_SERVICE, kind=kind,
+                batch_size=len(batch))
         if kind == "sample":
             self._execute_sample(batch)
         else:
@@ -839,10 +869,15 @@ class GraphService:
     # trace-safe: host executor — readbacks AFTER the jitted runner return
     # are the service's product — repro-lint: disable=host-sync
     def _execute_traversal(self, kind: str, batch, lanes: List[int]) -> None:
+        # the engine span opens before the host->device source upload: the
+        # staging transfer is engine dispatch work, not queue wait
+        t_eng0 = self._clock()
+        rb0 = self.stats.route_bytes
         srcs = jnp.asarray(self._pad(lanes))
         lane_of = {s: i for i, s in enumerate(lanes)}
         distributed = self.mesh is not None and kind in ("reach", "dist")
         lane_parts: Dict[int, frozenset] = {}
+        trace = self._trace
 
         def parts_of(ln: int, reached) -> frozenset:
             # reached: (n,) lane mask locally, (S, per) stacked distributed —
@@ -855,18 +890,21 @@ class GraphService:
 
         if kind == "reach":
             if distributed:
-                run = self._runner(("reach", self.budget), lambda: jax.jit(
+                run = self._runner(("reach", self.budget, trace),
+                                   lambda: jax.jit(
                     lambda s: msbfs_distributed(
                         self._gsh, self._att, s, self.mesh,
                         max_levels=self.csr.n_rows, return_stats=True,
                         placement=self.placement,
-                        sync_interval=self.sync_interval)))
+                        sync_interval=self.sync_interval, trace=trace)))
             else:
-                run = self._runner(("reach", self.budget), lambda: jax.jit(
+                run = self._runner(("reach", self.budget, trace),
+                                   lambda: jax.jit(
                     lambda s: msbfs(self.csr, s, mode=self.mode,
-                                    return_stats=True)))
+                                    return_stats=True, trace=trace)))
             levels, stats = run(srcs)
             levels = np.asarray(levels)
+            t_eng1 = self._clock()
             if distributed:
                 own, loc = self._vertex_slots([q.target for _, q, *_ in batch])
                 for (t, q, *_), o, l in zip(batch, own, loc):
@@ -881,19 +919,22 @@ class GraphService:
             self._charge_traversal(stats, packed=True, distributed=distributed)
         elif kind == "dist":
             if distributed:
-                run = self._runner(("dist", self.budget), lambda: jax.jit(
+                run = self._runner(("dist", self.budget, trace),
+                                   lambda: jax.jit(
                     lambda s: sssp_batched_distributed(
                         self._gsh, self._att, s, self.mesh, delta=self.delta,
                         max_iters=4 * self.csr.n_rows, return_stats=True,
                         placement=self.placement,
-                        sync_interval=self.sync_interval)))
+                        sync_interval=self.sync_interval, trace=trace)))
             else:
-                run = self._runner(("dist", self.budget), lambda: jax.jit(
+                run = self._runner(("dist", self.budget, trace),
+                                   lambda: jax.jit(
                     lambda s: sssp_batched(self.csr, s, delta=self.delta,
                                            mode=self.mode,
-                                           return_stats=True)))
+                                           return_stats=True, trace=trace)))
             dist, stats = run(srcs)
             dist = np.asarray(dist)
+            t_eng1 = self._clock()
             if distributed:
                 own, loc = self._vertex_slots([q.target for _, q, *_ in batch])
                 for (t, q, *_), o, l in zip(batch, own, loc):
@@ -912,11 +953,13 @@ class GraphService:
             # every batch computes ppr_k_max candidates and slices per query:
             # compiles stay one per (kind, budget), not per observed k
             k = self._ppr_k
-            run = self._runner(("ppr", self.budget), lambda: jax.jit(
+            run = self._runner(("ppr", self.budget, trace), lambda: jax.jit(
                 lambda s: ppr_topk(self.csr, s, k, damping=self.damping,
-                                   iters=self.ppr_iters, return_stats=True)))
+                                   iters=self.ppr_iters, return_stats=True,
+                                   trace=trace)))
             vals, ids, stats = run(srcs)
             vals, ids = np.asarray(vals), np.asarray(ids)
+            t_eng1 = self._clock()
             for t, q, *_ in batch:
                 ln = lane_of[q.source]
                 # PPR iterates dense over the whole graph: parts=None means
@@ -926,6 +969,29 @@ class GraphService:
             self._charge_traversal(stats, packed=False, distributed=False)
         self.stats.lanes_used += len(lanes)
         self.stats.queries += len(batch)
+        if self.obs is not None:
+            self._record_batch_spans(kind, batch, lanes, stats,
+                                     t_eng0, t_eng1, rb0)
+
+    def _record_batch_spans(self, kind: str, batch, lanes, stats,
+                            t_eng0: float, t_eng1: float, rb0: int) -> None:
+        """Close one executed batch's engine + readback spans and decode its
+        per-level trace into the attached Observability (DESIGN.md §17).
+        The engine span ends at the result readback (`np.asarray` is the
+        device sync point); everything after — per-query extraction,
+        partition attribution, ledger pricing — is the readback span."""
+        obs = self.obs
+        slacks = [dl - t_eng0 for _, _, dl, _ in batch if dl is not None]
+        obs.spans.record(
+            "engine", t_eng0, t_eng1, tid=Observability.TID_SERVICE,
+            kind=kind, lanes=len(lanes), budget=self.budget,
+            epoch=self.epoch,
+            route_bytes=self.stats.route_bytes - rb0,
+            deadline_slack_s=min(slacks) if slacks else None)
+        obs.spans.record("readback", t_eng1, self._clock(),
+                         tid=Observability.TID_SERVICE, kind=kind)
+        if "trace" in stats:
+            obs.add_level_run(f"{kind}@{self.epoch}", t_eng0, t_eng1, stats)
 
     # trace-safe: ledger accounting over concrete returned stats —
     # repro-lint: disable=host-sync
@@ -942,6 +1008,10 @@ class GraphService:
         def first(x):
             a = np.asarray(x)
             return int(a.reshape(-1)[0])
+        fallbacks = first(stats["fallbacks"]) if distributed else 0
+        if fallbacks:
+            self._metrics.counter("service.push_capacity_fallback").inc(
+                fallbacks)
         if distributed and self.placement == "async":
             st = self.stats
             flushes = first(stats["pushes"])
@@ -954,11 +1024,13 @@ class GraphService:
             return
         self._charge(self.budget, first(stats["pushes"]),
                      first(stats["pulls"]), packed=packed,
-                     fallbacks=first(stats["fallbacks"]) if distributed else 0)
+                     fallbacks=fallbacks)
 
     # trace-safe: host executor, readback after the jitted sampler returns —
     # repro-lint: disable=host-sync
     def _execute_sample(self, batch) -> None:
+        t_eng0 = self._clock()
+        rb0 = self.stats.route_bytes
         verts = np.zeros((self.budget,), np.int32)
         salts = np.zeros((self.budget,), np.uint32)
         spans: List[Tuple[int, int]] = []
@@ -989,6 +1061,7 @@ class GraphService:
 
         run = self._runner(("sample", self.budget), build)
         nbrs = np.asarray(run(jnp.asarray(verts), jnp.asarray(salts)))
+        t_eng1 = self._clock()
         for (t, q, *_), (s, take) in zip(batch, spans):
             # a one-hop draw reads only the vertex's own out-edge list,
             # which lives in its source partition
@@ -1002,6 +1075,11 @@ class GraphService:
         self.stats.push_levels += 1
         self.stats.lanes_used += pos
         self.stats.queries += len(batch)
+        if self.obs is not None:
+            # one-hop sampling has no level loop, so no level-trace run —
+            # just the engine/readback pair (stats carries no 'trace')
+            self._record_batch_spans("sample", batch, list(range(pos)), {},
+                                     t_eng0, t_eng1, rb0)
 
     def _store_result(self, ticket: int, value) -> None:
         self._results[ticket] = value

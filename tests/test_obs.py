@@ -1,0 +1,320 @@
+"""Unified telemetry suite (DESIGN.md §17).
+
+Four contracts, each pinned here:
+
+* **bit transparency** — the per-level engine trace is a side buffer: every
+  traced run replays the committed golden grid (``tests/golden/core_grid.npz``)
+  bit-identically, and trace on/off results agree on the local placement and
+  the async placement at every staleness bound;
+* **span structure** — an instrumented ``GraphService`` exports a Chrome
+  ``trace_event`` JSON that is structurally valid (pid/tid/ts/dur/name on
+  every event, per-tid nesting without partial overlap) and attributes ≥90%
+  of a served batch's wall time to the named enqueue / flush-wait / engine /
+  readback spans;
+* **degradation counters** — the ROADMAP guardrail: push-capacity fallback,
+  cache invalidation, compaction and EWMA updates are observable as registry
+  counters, with a test pinning each firing (the streaming deletion fallback
+  fires in tests/test_streaming.py's mixed-stream replay);
+* **sketch accuracy** — the log-bucketed latency histogram's p50/p95 land
+  within one bucket width of the exact percentiles (the fixed example here;
+  the hypothesis property lives in tests/test_property.py).
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dgas, rmat
+from repro.core.algorithms import msbfs, msbfs_distributed, sssp_batched
+from repro.core.algorithms.distgraph import shard_graph
+from repro.core.graph import CSR, GraphHandle
+from repro.core.service import (Distance, GraphService, NeighborSample,
+                                PPRTopK, Reachability)
+from repro.launch.mesh import make_cores_mesh
+from repro.obs import (Histogram, LevelTrace, MetricsRegistry, Observability,
+                       SpanRecorder, build_chrome_trace, decode_level_trace,
+                       format_summary, get_registry, summarize,
+                       validate_chrome_trace)
+from repro.obs.__main__ import main as obs_cli
+
+GOLD = np.load(os.path.join(os.path.dirname(__file__), "golden",
+                            "core_grid.npz"))
+G = rmat(7, 8, seed=11)
+DELTA = float(GOLD["meta_delta_g"])
+SOURCES = np.array([0, 3, 17, 64, 0], dtype=np.int32)
+MODES = ("push", "pull", "auto")
+INTERVALS = (1, 2, 8)
+
+_MESH1 = make_cores_mesh(1)
+_GSH1, _ATT1 = shard_graph(G, 1, row_att=dgas.block_rule(G.n_rows, 1))
+
+
+# ---------------------------------------------------------------------------
+# metrics: histogram sketch accuracy (fixed example), counters, registry
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_within_one_bucket():
+    """The deterministic twin of the hypothesis property: the sketch's
+    nearest-rank percentile is the owning bucket's upper edge, so it may
+    exceed the exact percentile by at most one growth factor."""
+    h = Histogram("lat")
+    rng = np.random.default_rng(7)
+    xs = np.concatenate([rng.uniform(1e-4, 5e-3, 300),
+                         rng.uniform(0.05, 2.0, 60), [40.0, 120.0]])
+    for x in xs:
+        h.observe(float(x))
+    for pct in (50.0, 95.0, 99.0):
+        exact_lo = float(np.percentile(xs, pct, method="lower"))
+        exact_hi = float(np.percentile(xs, pct, method="higher"))
+        got = h.percentile(pct)
+        assert exact_lo <= got <= exact_hi * h.growth, (pct, exact_lo, got)
+    assert h.snapshot()["count"] == len(xs)
+    assert h.mean == pytest.approx(float(xs.mean()), rel=1e-6)
+
+
+def test_histogram_edge_cases():
+    h = Histogram("x")
+    assert h.percentile(50) == 0.0          # empty -> 0.0, not NaN
+    h.observe(float("nan"))                 # skipped, not a bucket
+    assert h.snapshot()["count"] == 0
+    h.observe(0.0)                          # clamps into the lowest bucket
+    h.observe(1e9)                          # clamps into the highest bucket
+    assert h.snapshot()["count"] == 2
+    assert h.percentile(0) <= h.percentile(100)
+
+
+def test_registry_counters_and_gauges():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(4)
+    assert reg.counter("a").value == 5
+    with pytest.raises(ValueError):
+        reg.counter("a").inc(-1)            # counters are monotone
+    reg.gauge("g").set(2.5)
+    assert reg.gauge("g").value == 2.5
+    snap = reg.snapshot()
+    assert snap["a"] == 5 and snap["g"] == 2.5
+    reg.reset()
+    assert reg.counter("a").value == 0
+    assert get_registry() is get_registry()  # the process-wide singleton
+
+
+# ---------------------------------------------------------------------------
+# spans: nesting, retroactive clip, export structure
+# ---------------------------------------------------------------------------
+
+def test_span_recorder_nests_and_clips():
+    t = [0.0]
+    clk = lambda: t[0]
+    rec = SpanRecorder(clock=clk)
+    with rec.span("outer", tid=1) as args:
+        t[0] = 1.0
+        with rec.span("inner", tid=1):
+            t[0] = 2.0
+        args["route_bytes"] = 64
+        t[0] = 3.0
+    # a queue-wait measured from before the previous span must clip forward
+    sp = rec.record("wait", 1.5, 4.0, tid=1)
+    assert sp.ts == pytest.approx(3.0) and sp.dur == pytest.approx(1.0)
+    doc = build_chrome_trace(rec.spans())
+    assert validate_chrome_trace(doc) == []
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert names == ["outer", "inner", "wait"]  # sorted by (tid, ts, -dur)
+    outer = doc["traceEvents"][0]
+    assert outer["args"]["route_bytes"] == 64   # args augmentable in-block
+
+
+def test_validator_rejects_partial_overlap_and_missing_fields():
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 0, "tid": 1, "ts": 0.0, "dur": 10.0},
+        {"ph": "X", "name": "b", "pid": 0, "tid": 1, "ts": 5.0, "dur": 10.0},
+        {"ph": "X", "name": "c", "pid": 0, "tid": 2, "ts": 0.0},  # no dur
+    ]}
+    errs = validate_chrome_trace(bad)
+    assert any("partially overlaps" in e for e in errs)
+    assert any("missing 'dur'" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# engine tracing: bit transparency against the golden grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_msbfs_traced_replays_golden(mode):
+    lv, st = msbfs(G, SOURCES, mode=mode, return_stats=True, trace=True)
+    np.testing.assert_array_equal(np.asarray(lv), GOLD[f"bfs/packed/{mode}"])
+    recs = decode_level_trace(st)
+    assert len(recs) == int(st["pushes"] + st["pulls"])
+    assert sum(r.direction == "push" for r in recs) == int(st["pushes"])
+    assert sum(r.direction == "pull" for r in recs) == int(st["pulls"])
+    assert all(r.frontier > 0 for r in recs)   # a level with no work is done
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_sssp_traced_replays_golden(mode):
+    d, st = sssp_batched(G, SOURCES, delta=DELTA, mode=mode,
+                         return_stats=True, trace=True)
+    np.testing.assert_array_equal(np.asarray(d), GOLD[f"sssp/valued/{mode}"])
+    assert len(decode_level_trace(st)) == int(st["pushes"] + st["pulls"])
+
+
+def test_trace_on_off_identity_sync_and_async():
+    ref = np.asarray(msbfs_distributed(_GSH1, _ATT1, SOURCES, _MESH1))
+    for placement, ks in (("sync", (None,)), ("async", INTERVALS)):
+        for k in ks:
+            lv, st = msbfs_distributed(
+                _GSH1, _ATT1, SOURCES, _MESH1, placement=placement,
+                sync_interval=k, return_stats=True, trace=True)
+            np.testing.assert_array_equal(np.asarray(lv), ref)
+            recs = decode_level_trace(st)
+            assert recs, (placement, k)
+            if placement == "async":
+                # each row is one global check; the outbox flush fired there
+                assert all(r.flush and r.direction == "flush" for r in recs)
+            else:
+                assert not any(r.flush for r in recs)
+
+
+def test_trace_len_truncates_by_dropping():
+    full = decode_level_trace(
+        msbfs(G, SOURCES, return_stats=True, trace=True)[1])
+    assert len(full) >= 3
+    short = decode_level_trace(
+        msbfs(G, SOURCES, return_stats=True, trace=True, trace_len=2)[1])
+    # rows past trace_len drop on device — never clamp-overwrite the last row
+    assert [r.as_dict() for r in short] == [r.as_dict() for r in full[:2]]
+
+
+def test_trace_argument_validation():
+    with pytest.raises(ValueError, match="return_stats"):
+        msbfs(G, SOURCES, trace=True)
+    with pytest.raises(ValueError, match="trace"):
+        msbfs(G, SOURCES, return_stats=True, trace_len=4)
+    with pytest.raises(KeyError):
+        decode_level_trace(msbfs(G, SOURCES, return_stats=True)[1])
+
+
+# ---------------------------------------------------------------------------
+# service spans: structural validity + wall-time attribution
+# ---------------------------------------------------------------------------
+
+def _served_service(budget=8, **kw):
+    obs = Observability(metrics=MetricsRegistry())
+    svc = GraphService(rmat(8, 8, seed=3), batch_budget=budget,
+                       obs=obs, **kw)
+    n = svc.csr.n_rows
+    tickets = [svc.submit(Reachability(source=i, target=(i + 13) % n))
+               for i in range(6)]
+    tickets += [svc.submit(Distance(source=0, target=9)),
+                svc.submit(PPRTopK(source=2, k=4)),
+                svc.submit(NeighborSample(vertex=5, fanout=3))]
+    svc.flush()
+    for t in tickets:
+        svc.result(t)
+    return svc, obs
+
+
+def test_service_chrome_trace_structurally_valid(tmp_path):
+    svc, obs = _served_service()
+    path = os.fspath(tmp_path / "trace.json")
+    doc = obs.export_chrome_trace(path)
+    assert validate_chrome_trace(doc) == []
+    with open(path) as f:
+        assert json.load(f) == doc
+    names = {e["name"] for e in doc["traceEvents"]
+             if e.get("cat") == "service"}
+    assert {"enqueue", "flush_wait", "engine", "readback"} <= names
+    # traversal kinds ran traced: their level lanes are in the export
+    assert any(e.get("cat") == "level" for e in doc["traceEvents"])
+    # the CLI renders and exits 0 on a structurally valid trace
+    assert obs_cli(["summarize", path]) == 0
+    assert obs_cli(["summarize", path, "--json"]) == 0
+
+
+def test_service_span_attribution_covers_wall():
+    """≥90% of the served batch's wall clock lands in named spans: the
+    flush_wait/engine/readback sequence tiles the service lane (record()
+    clips each round's wait to the previous round's end)."""
+    svc, obs = _served_service()
+    spans = obs.spans.spans()
+    wall0 = min(sp.ts for sp in spans)
+    wall1 = max(sp.ts + sp.dur for sp in spans)
+    service_s = sum(sp.dur for sp in spans
+                    if sp.tid == Observability.TID_SERVICE)
+    assert service_s >= 0.9 * (wall1 - wall0)
+    summ = summarize(obs.build_trace())
+    frac = sum(row["wall_frac"] for name, row in summ["phases"].items()
+               if name in ("flush_wait", "engine", "readback"))
+    assert frac >= 0.9
+    assert "wall time" in format_summary(summ)
+
+
+def test_service_trace_off_records_nothing():
+    svc = GraphService(rmat(7, 8, seed=3), batch_budget=4)
+    svc.query(Reachability(source=0, target=5))
+    assert svc.obs is None                  # no spans, no level runs
+
+
+def test_service_engine_span_carries_batch_args():
+    svc, obs = _served_service()
+    eng = [sp for sp in obs.spans.spans() if sp.name == "engine"]
+    assert eng
+    for sp in eng:
+        assert sp.args["kind"] in ("reach", "dist", "ppr", "sample")
+        assert sp.args["budget"] == 8 and sp.args["epoch"] == 0
+        assert sp.args["route_bytes"] > 0
+    assert {r["name"].split("@")[0] for r in obs.level_runs} == \
+        {"reach", "dist", "ppr"}            # sampling has no level loop
+
+
+# ---------------------------------------------------------------------------
+# degradation counters: each firing pinned (the ROADMAP guardrail)
+# ---------------------------------------------------------------------------
+
+def test_push_capacity_fallback_counter_fires():
+    """A star graph overflows the compacted push capacity at the hub level:
+    capacity = m * switch_frac * slack = m/8 < m active edges."""
+    n = 64
+    rows = np.zeros(n - 1, np.int64)
+    cols = np.arange(1, n, dtype=np.int64)
+    star = CSR.from_coo(rows, cols, None, n, n)
+    reg = MetricsRegistry()
+    svc = GraphService(star, batch_budget=4, mesh=_MESH1,
+                       obs=Observability(metrics=reg))
+    assert svc.query(Reachability(source=0, target=n - 1)) is True
+    assert reg.counter("service.push_capacity_fallback").value >= 1
+
+
+def test_cache_invalidation_counter_fires():
+    reg = MetricsRegistry()
+    svc = GraphService(rmat(7, 8, seed=3), batch_budget=4,
+                       obs=Observability(metrics=reg))
+    svc.query(Reachability(source=0, target=5))
+    assert reg.counter("service.cache_invalidations").value == 0
+    svc.apply_updates(inserts=(np.array([0]), np.array([5])))
+    evicted = svc.stats.cache_evicted
+    assert evicted >= 1
+    assert reg.counter("service.cache_invalidations").value == evicted
+
+
+def test_cost_ewma_counter_counts_batches():
+    reg = MetricsRegistry()
+    svc = GraphService(rmat(7, 8, seed=3), batch_budget=4,
+                       obs=Observability(metrics=reg))
+    svc.query(Reachability(source=0, target=5))
+    svc.query(Distance(source=0, target=5))
+    assert reg.counter("service.cost_ewma_updates").value == 2
+    svc.query(Reachability(source=0, target=5))   # cache hit: no batch ran
+    assert reg.counter("service.cost_ewma_updates").value == 2
+
+
+def test_graph_compaction_counter_fires():
+    """Delta-log overflow compaction increments the process-wide counter
+    (graph.py has no per-service context — library events are global)."""
+    h = GraphHandle.wrap(rmat(6, 8, seed=2), compact_threshold=0.001)
+    before = get_registry().counter("graph.compactions").value
+    h2, rep = h.apply((np.array([1, 2, 3]), np.array([4, 5, 6])), None)
+    assert rep.compacted
+    assert get_registry().counter("graph.compactions").value == before + 1

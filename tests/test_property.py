@@ -274,3 +274,29 @@ def test_property_deadline_flush_never_serves_late(deadlines, steps, seed):
         assert t in served_at, f"ticket {t} never served"
         assert served_at[t] <= dl, (served_at[t], dl)
     assert svc.stats.deadline_miss_rate == 0.0
+
+
+# ---------------------------------------------------------------------------
+# log-bucketed latency sketch (PR 9): percentiles within one bucket width
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(1e-6, 1e3, allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=400),
+       pct=st.sampled_from([50.0, 95.0]))
+@settings(**SETTINGS)
+def test_histogram_percentile_within_one_bucket(xs, pct):
+    """The sketch reports the owning bucket's upper edge at the nearest rank,
+    so it can only overshoot the exact percentile — and never by more than
+    one growth factor per bucket-boundary crossing (the deterministic twin
+    lives in tests/test_obs.py for hypothesis-free environments)."""
+    from repro.obs import Histogram
+    h = Histogram("lat")
+    for x in xs:
+        h.observe(x)
+    got = h.percentile(pct)
+    # the sketch's nearest-rank order statistic sits between the 'lower' and
+    # 'higher' exact order statistics; the bucket rounds it up by < growth
+    exact_lo = float(np.percentile(np.asarray(xs), pct, method="lower"))
+    exact_hi = float(np.percentile(np.asarray(xs), pct, method="higher"))
+    assert got >= exact_lo * (1 - 1e-9)
+    assert got <= max(exact_hi, h.lo) * h.growth * (1 + 1e-9)

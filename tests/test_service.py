@@ -242,8 +242,10 @@ def test_deadline_miss_and_latency_accounting():
     st = svc.stats
     assert st.deadline_queries == 1 and st.deadline_misses == 1
     assert st.deadline_miss_rate == 1.0
-    assert st.latency_p50_ms == pytest.approx(20e3)
-    assert st.latency_p95_ms == pytest.approx(20e3)
+    # percentiles come from the log-bucketed sketch (PR 9): the reported
+    # value is the observation's bucket upper edge, within one 12% bucket
+    assert 20e3 <= st.latency_p50_ms <= 20e3 * st.latency_hist.growth
+    assert 20e3 <= st.latency_p95_ms <= 20e3 * st.latency_hist.growth
     d = st.as_dict()
     assert {"latency_p50_ms", "latency_p95_ms",
             "deadline_miss_rate"} <= set(d)

@@ -232,9 +232,13 @@ def test_deletion_falls_back_and_logs(caplog):
     r, c = edges[0]
     handle, rep = handle.apply(deletes=(np.array([r]), np.array([c])))
     assert not rep.monotone_safe
+    from repro.obs import get_registry
+    ctr = get_registry().counter("streaming.full_recompute_fallback")
+    ctr0 = ctr.value
     with caplog.at_level("INFO", logger="repro.streaming"):
         got = repair_or_recompute("bfs", handle, prev, rep, source=0)
     assert any("full recompute fallback" in m for m in caplog.messages)
+    assert ctr.value == ctr0 + 1        # the logged event is also counted
     np.testing.assert_array_equal(np.asarray(got),
                                   np.asarray(bfs(handle.csr, 0)))
 
@@ -244,6 +248,9 @@ def test_deletion_falls_back_and_logs(caplog):
 # ---------------------------------------------------------------------------
 
 def test_golden_streaming_replay():
+    from repro.obs import get_registry
+    fallback_ctr = get_registry().counter("streaming.full_recompute_fallback")
+    ctr0 = fallback_ctr.value
     data = np.load(GOLDEN)
     scale, ef, seed, n_epochs, source = data["meta"].tolist()
     handle = GraphHandle.wrap(rmat(scale, ef, seed=seed), n_partitions=8)
@@ -251,18 +258,25 @@ def test_golden_streaming_replay():
             "sssp": data["epoch0/sssp"]}
     np.testing.assert_array_equal(np.asarray(bfs(handle.csr, source)),
                                   prev["bfs"])
+    unsafe_epochs = 0
     for e in range(1, n_epochs + 1):
         handle, rep = handle.apply(
             (data[f"epoch{e}/ins_r"], data[f"epoch{e}/ins_c"],
              data[f"epoch{e}/ins_v"]),
             (data[f"epoch{e}/del_r"], data[f"epoch{e}/del_c"]))
         assert rep.monotone_safe == bool(data[f"epoch{e}/monotone_safe"][0])
+        unsafe_epochs += not rep.monotone_safe
         for kind in ("bfs", "cc", "sssp"):
             got = np.asarray(repair_or_recompute(
                 kind, handle, prev[kind], rep, source=source))
             np.testing.assert_array_equal(got, data[f"epoch{e}/{kind}"],
                                           err_msg=f"epoch {e} {kind}")
             prev[kind] = got
+    # PR 9 guardrail: every full-recompute fallback is a counted event, and
+    # only those — each unsafe epoch falls back once per kind, safe epochs
+    # never touch the counter (this golden stream is all monotone-safe; the
+    # firing case pins in test_deletion_falls_back_and_logs)
+    assert fallback_ctr.value - ctr0 == 3 * unsafe_epochs
 
 
 # ---------------------------------------------------------------------------
