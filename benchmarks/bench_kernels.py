@@ -1,57 +1,27 @@
-"""Kernel microbenches: jnp reference path timings + kernel traffic notes.
+"""Kernel microbenches — thin shim over ``repro.tune.kernel_rows``.
 
-Pallas kernels run in interpret mode on CPU (Python-level execution), so
-wall-clock here is NOT kernel performance; we report the jnp-oracle timing
-(the XLA-compiled equivalent computation) and the kernels' modeled VMEM
-working sets — the dry-run roofline carries the perf argument.
+The measurement lane moved into the autotuner (DESIGN.md §18) so the bench,
+the roofline report, and the tuning sweep all time the same grid the same
+way: hardware-true compiled kernels on TPU, compiled jnp-oracle timings on
+CPU (Pallas interpret-mode wall clock is Python execution, not kernel
+performance).  This module keeps the CSV-harness row shape.
 """
-import time
+from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import rmat, to_bbcsr
-from repro.kernels import ref
+SCALE = 12
 
 
-def _t(fn, reps=5):
-    jax.block_until_ready(fn())
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
-
-
-def run():
+def run(scale: int = SCALE):
+    from repro.tune import kernel_rows
     rows = []
-    g = rmat(12, 16, seed=0)
-    bb = to_bbcsr(g, block_rows=256, block_cols=512, tile_nnz=512)
-    x = jnp.asarray(np.random.default_rng(0).random(g.n_cols, np.float32))
-    t = _t(jax.jit(lambda: ref.spmv_bbcsr_ref(bb, x)))
-    vmem = (bb.tile_nnz * (bb.block_cols + bb.block_rows) * 4 +
-            bb.block_cols * 4 + bb.block_rows * 4 + 3 * bb.tile_nnz * 4)
-    rows.append({"name": "kernels/spmv_bbcsr_oracle", "us_per_call": round(t, 1),
-                 "derived": f"nnz={g.nnz};kernel_vmem_per_step={vmem}B"})
-
-    q = jnp.asarray(np.random.default_rng(1).standard_normal(
-        (4, 8, 1024, 128)).astype(np.float32))
-    k = q[:, :4]
-    t = _t(jax.jit(lambda: ref.flash_attention_ref(q, k, k)))
-    rows.append({"name": "kernels/flash_attn_oracle_b4h8s1024",
-                 "us_per_call": round(t, 1),
-                 "derived": "kernel_vmem_per_step="
-                            f"{(128 * 128 * 3 + 128 * 128) * 4}B"})
-    table = jnp.asarray(np.random.default_rng(2).standard_normal(
-        (100_000, 16)).astype(np.float32))
-    idx = jnp.asarray(np.random.default_rng(3).integers(0, 100_000, 8192,
-                                                        ).astype(np.int32))
-    bag = jnp.asarray(np.sort(np.random.default_rng(4).integers(0, 512, 8192)
-                              ).astype(np.int32))
-    t = _t(jax.jit(lambda: ref.embedding_bag_ref(table, idx, bag, 512)))
-    rows.append({"name": "kernels/embedding_bag_oracle_8k_lookups",
-                 "us_per_call": round(t, 1),
-                 "derived": "fine_grained_bytes=8192*64B (vs 8192*4096B page-granular)"})
+    for r in kernel_rows(scale):
+        cfg = r.get("config")
+        cfg_s = ("" if not cfg else
+                 ";" + ";".join(f"{k}={v}" for k, v in sorted(cfg.items())))
+        rows.append({
+            "name": r["name"],
+            "us_per_call": r["us"],
+            "derived": (f"measured={r['measured']}"
+                        f";model_bytes={r['bytes_model']}" + cfg_s),
+        })
     return rows

@@ -1,32 +1,37 @@
-"""Roofline report: reads the dry-run sweep JSON and prints per-cell terms.
+"""Roofline report over the measured kernel lane (DESIGN.md §18).
 
-This is the §Roofline deliverable: compute/memory/collective terms (seconds),
-dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and HBM fit.
+Each ``repro.tune.kernel_rows`` row carries a modeled HBM byte count and a
+measured time (hardware-true on TPU, compiled jnp-oracle on CPU); dividing
+gives achieved bytes/s, and the STREAM-triad measurement anchors the
+memory-roof.  The report prints achieved vs peak per kernel row — the
+"fraction of roofline" number the PIUMA paper's bandwidth argument rests
+on.  (The old implementation read a ``results/dryrun.json`` sweep that no
+launcher writes anymore; the kernel lane is the live data source.)
 """
-import json
-import os
+from __future__ import annotations
 
-DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+SCALE = 12  # probe-graph scale for the standalone CSV harness
 
 
-def run(path=DEFAULT):
-    rows = []
-    if not os.path.exists(path):
-        return [{"name": "roofline/missing", "us_per_call": float("nan"),
-                 "derived": f"run launch.dryrun --sweep first ({path})"}]
-    for r in json.load(open(path)):
-        if r.get("status") != "ok":
-            continue
-        roof = r["roofline"]
-        ratio = r.get("useful_flops_ratio")
-        rows.append({
-            "name": f"roofline/{r['arch']}/{r['shape']}/pods{1 + int(r['multi_pod'])}",
-            "us_per_call": round(roof["bound_s"] * 1e6, 1),
-            "derived": (f"dom={roof['dominant']}"
-                        f";cT={roof['compute_s']:.2e};mT={roof['memory_s']:.2e}"
-                        f";nT={roof['collective_s']:.2e}"
-                        f";roofline_frac={roof['roofline_fraction']:.2f}"
-                        f";useful_flops={'%.2f' % ratio if ratio else 'n/a'}"
-                        f";fits={r['per_device']['fits_16gb']}"),
+def rows_to_report(rows, peak):
+    """Roofline rows (CSV-harness shape) from kernel-lane rows + peak B/s."""
+    out = []
+    for r in rows:
+        frac = r["bytes_per_s"] / peak if peak > 0 else float("nan")
+        out.append({
+            "name": "roofline/" + r["name"].split("/", 1)[1],
+            "us_per_call": r["us"],
+            "derived": (f"achieved={r['bytes_per_s']:.3e}B/s"
+                        f";peak={peak:.3e}B/s;frac={frac:.3f}"
+                        f";model_bytes={r['bytes_model']}"
+                        f";measured={r['measured']}"),
         })
-    return rows
+    return out
+
+
+def run(scale: int = SCALE, rows=None):
+    from repro.tune import kernel_rows, stream_peak_bytes_per_s
+    peak = stream_peak_bytes_per_s()
+    if rows is None:
+        rows = kernel_rows(scale)
+    return rows_to_report(rows, peak)

@@ -23,10 +23,12 @@
 #                               query-service smoke — B ∈ {1,32,256} on
 #                               RMAT-12 with the msbfs amortization gate and
 #                               the deadline-miss-rate gate — always runs at
-#                               its own fixed scale), writes
-#                               ${BENCH_OUT:-BENCH_pr9.json} and fails on
-#                               NaN / regression markers / >25% regression
-#                               vs the newest committed BENCH_*.json.
+#                               its own fixed scale; since PR 10 the kernel
+#                               lane gates tuned-vs-default per TUNED.json),
+#                               writes ${BENCH_OUT:-BENCH_pr10.json} and
+#                               fails on NaN / regression markers / >25%
+#                               regression vs the newest committed
+#                               BENCH_*.json.
 #   scripts/ci.sh fast bench  — multiple lanes: each runs even if an earlier
 #                               one failed; a per-lane summary is printed and
 #                               the exit status is nonzero if ANY lane failed.
@@ -50,7 +52,7 @@ run_lane() {
       python scripts/check_single_core.py \
         && XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
           python benchmarks/bench_engine.py --scale 7 --smoke \
-            --json "${BENCH_OUT:-BENCH_pr9.json}" --baseline auto
+            --json "${BENCH_OUT:-BENCH_pr10.json}" --baseline auto
       ;;
     all)
       python -m pytest -x -q

@@ -14,6 +14,7 @@ from .host_sync import HostSyncRule
 from .mutable_handle import MutableHandleRule
 from .shard_safety import ShardSafetyRule
 from .single_core import SingleCoreRule
+from .tuned_constants import TunedConstantsRule
 
 ALL_RULES = [
     SingleCoreRule(),
@@ -22,10 +23,11 @@ ALL_RULES = [
     ShardSafetyRule(),
     CacheKeyRule(),
     MutableHandleRule(),
+    TunedConstantsRule(),
 ]
 
 RULES_BY_ID = {rule.id: rule for rule in ALL_RULES}
 
 __all__ = ["ALL_RULES", "RULES_BY_ID", "SingleCoreRule", "CompatBoundaryRule",
            "HostSyncRule", "ShardSafetyRule", "CacheKeyRule",
-           "MutableHandleRule"]
+           "MutableHandleRule", "TunedConstantsRule"]

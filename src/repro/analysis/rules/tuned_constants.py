@@ -1,0 +1,110 @@
+"""tuned-constants: tunable knobs in the hot paths route through repro.tune.
+
+DESIGN.md §18's config funnel only works if the tunable parameters —
+kernel tile shapes, the push/pull switch fraction, routing capacities,
+the service lane budget — actually reach ``repro.tune.resolve``.  A
+hard-coded literal in ``core/engine.py``, ``core/service.py`` or
+``kernels/ops.py`` silently shadows the committed TUNED.json entry for
+the backend: the knob looks tuned (the sweep ran, the entry exists) but
+the hot path never reads it, and the `tune.autotune_fallback` counter
+can't fire because resolve() is never consulted.
+
+Flagged, in those three modules only:
+
+* a function parameter named like a tunable whose default is a numeric
+  literal (should default to None and resolve inside — explicit kwargs
+  then still win over TUNED.json);
+* a numeric-literal argument for a tunable keyword (or for
+  ``frontier_edge_capacity``'s switch_frac positional) in calls to
+  ``to_bbcsr`` / ``frontier_edge_capacity`` — the construction sites the
+  funnel exists for.
+
+Literals elsewhere (tests, benchmarks, the kernel modules' own internal
+defaults behind the ops.py funnel) are fine and not scanned.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..callgraph import dotted_name
+from ..core import Finding, ParsedModule, Rule
+
+# modules the funnel covers (suffix-matched against the module path)
+_FUNNEL_MODULES = ("core/engine.py", "core/service.py", "kernels/ops.py")
+
+# parameter / keyword names that have TUNED.json entries (space.DEFAULTS)
+_TUNABLE = {
+    "switch_frac", "push_edge_capacity", "slack",
+    "block_rows", "block_cols", "tile_nnz",
+    "block_n", "block_q", "block_k",
+    "batch_budget",
+}
+
+# call targets whose tunable arguments must come through resolve()
+_FUNNEL_CALLS = {"to_bbcsr", "frontier_edge_capacity"}
+
+
+def _numeric_literal(node: ast.AST) -> bool:
+    """True for 512, 1/32, -1.0, 4 * 1024 — constant numeric expressions."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float)) and \
+            not isinstance(node.value, bool)
+    if isinstance(node, ast.UnaryOp):
+        return _numeric_literal(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _numeric_literal(node.left) and _numeric_literal(node.right)
+    return False
+
+
+class TunedConstantsRule(Rule):
+    id = "tuned-constants"
+    doc = ("tunable knobs (tile shapes, switch_frac, capacities, lane "
+           "budget) in engine/service/ops must default to None and go "
+           "through repro.tune.resolve, not hard-coded literals")
+
+    def check(self, module: ParsedModule) -> Iterable[Finding]:
+        if not module.path.endswith(_FUNNEL_MODULES):
+            return
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_signature(module, node)
+            elif isinstance(node, ast.Call):
+                yield from self._check_call(module, node)
+
+    def _check_signature(self, module: ParsedModule, fn) -> Iterable[Finding]:
+        a = fn.args
+        pos = a.posonlyargs + a.args
+        pairs = list(zip(pos[len(pos) - len(a.defaults):], a.defaults)) + \
+            [(arg, d) for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+             if d is not None]
+        for arg, default in pairs:
+            if arg.arg in _TUNABLE and _numeric_literal(default):
+                yield self.finding(
+                    module, default,
+                    f"`{fn.name}` hard-codes tunable `{arg.arg}` default — "
+                    "TUNED.json entries for it are silently ignored",
+                    "default to None and call repro.tune.resolve(...) "
+                    "inside (explicit kwargs still win)")
+
+    def _check_call(self, module: ParsedModule, call: ast.Call) -> Iterable[Finding]:
+        name = dotted_name(call.func)
+        tail = name.split(".")[-1] if name else ""
+        if tail not in _FUNNEL_CALLS:
+            return
+        if tail == "frontier_edge_capacity" and len(call.args) >= 2 and \
+                _numeric_literal(call.args[1]):
+            yield self.finding(
+                module, call.args[1],
+                "literal switch_frac passed to `frontier_edge_capacity` "
+                "bypasses the tuned config",
+                "pass repro.tune.resolve('engine.switch_frac', ...) or a "
+                "caller-supplied value")
+        for kw in call.keywords:
+            if kw.arg in _TUNABLE and _numeric_literal(kw.value):
+                yield self.finding(
+                    module, kw.value,
+                    f"literal `{kw.arg}=` in `{tail}` call bypasses the "
+                    "tuned config",
+                    "route through repro.tune.resolve (explicit kwargs "
+                    "win over TUNED.json)")

@@ -67,8 +67,8 @@ def sssp_program(delta: float, *, global_min=None) -> engine.VertexProgram:
                                 msg_fn=msg_fn, update_fn=update_fn)
 
 
-def auto_delta(csr: CSR, *, bins: int = 64, light_edges_per_vertex: float = 4.0
-               ) -> float:
+def auto_delta(csr: CSR, *, bins: int = 64, light_edges_per_vertex: float = 4.0,
+               scaled: bool = True) -> float:
     """Delta from the weight histogram (DESIGN.md §8).
 
     Pick delta at the weight quantile where the expected number of sub-delta
@@ -83,18 +83,27 @@ def auto_delta(csr: CSR, *, bins: int = 64, light_edges_per_vertex: float = 4.0
     bulk-synchronous engine, iteration count dominates, and the 4-light-edge
     quantile sits within ~10% of the best fixed delta on both graph classes
     while keeping the bucket discipline that bounds re-relaxation work.
+
+    scaled: multiply the histogram quantile by the tuned ``sssp.delta_scale``
+    for this backend and graph scale (``repro.tune``, DESIGN.md §18) — the
+    autotuner sweeps the multiplier by measured iteration count and passes
+    ``scaled=False`` to read the raw quantile it scales.  Unweighted (and
+    empty) graphs always return exactly 1.0: unit-weight distances are
+    integers, one BFS level per bucket, and there is no quantile to scale.
     """
     if csr.values is None:
         return 1.0
     w = np.asarray(csr.values)
     if w.size == 0:
         return 1.0
+    from ... import tune
+    mul = (tune.resolve("sssp.delta_scale", n=csr.n_rows) if scaled else 1.0)
     avg_deg = max(1.0, csr.nnz / max(1, csr.n_rows))
     hist, edges = np.histogram(w, bins=bins)
     cdf = np.cumsum(hist) / max(1, w.size)
     q = min(1.0, light_edges_per_vertex / avg_deg)
-    k = int(np.searchsorted(cdf, q))
-    return float(max(edges[min(k + 1, len(edges) - 1)], 1e-6))
+    return float(max(edges[min(int(np.searchsorted(cdf, q)) + 1,
+                               len(edges) - 1)], 1e-6)) * mul
 
 
 def sssp(csr: CSR, source: int, *, delta: Optional[float] = None,

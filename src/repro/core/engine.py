@@ -86,6 +86,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from ..compat import shard_map
+from .. import tune as _tune
 from . import offload
 from .dgas import ATT
 from .graph import CSR, BBCSR, to_bbcsr
@@ -225,14 +226,25 @@ def _acc_init(n: int, prog: VertexProgram, dtype) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def build_pull_operand(csr: CSR, *, unit_values: bool = False,
-                       **bb_kwargs) -> BBCSR:
+                       combine: str = "add", **bb_kwargs) -> BBCSR:
     """BBCSR of A^T — rows are *destinations*, columns are *sources* — so
     ``spmv_dma(bb, msg)`` computes exactly the engine's dense step for an
-    'add' program (and ``spmspv_dma`` its sparse step)."""
+    'add' program (and ``spmspv_dma`` its sparse step).
+
+    The tile geometry defaults to the tuned config for ``combine``'s kernel
+    family on this backend and graph scale (``repro.tune``, DESIGN.md §18);
+    explicit ``block_rows=`` / ``block_cols=`` / ``tile_nnz=`` kwargs win
+    per key."""
+    family = "bbcsr_min" if combine in ("min", "max") else "bbcsr_add"
+    params = {k: _tune.resolve(f"kernels.{family}.{k}",
+                               explicit=bb_kwargs.get(k), n=csr.n_rows)
+              for k in ("block_rows", "block_cols", "tile_nnz")}
+    params.update({k: v for k, v in bb_kwargs.items()
+                   if k not in ("block_rows", "block_cols", "tile_nnz")})
     t = csr.transpose()
     if unit_values:
         t = CSR(t.indptr, t.indices, None, t.n_rows, t.n_cols)
-    return to_bbcsr(t, **bb_kwargs)
+    return to_bbcsr(t, **params)
 
 
 def tile_active(bb: BBCSR, frontier: jnp.ndarray) -> jnp.ndarray:
@@ -1000,7 +1012,8 @@ def _shard_apply(mesh: Mesh, axis: AxisName, shard_fn, operands, *,
 
 
 def frontier_edge_capacity(m: int, switch_frac: float, *,
-                           slack: float = 4.0) -> int:
+                           slack: Optional[float] = None,
+                           n: Optional[int] = None) -> int:
     """Per-peer routing capacity for the compacted sparse push.
 
     While the engine is in the push regime the frontier holds at most
@@ -1010,7 +1023,12 @@ def frontier_edge_capacity(m: int, switch_frac: float, *,
     runtime, so the rule trades traffic (capacity shrinks with the frontier
     bound) against fallback frequency — see DESIGN.md §7 and
     `traffic.push_level_route_bytes` for the byte model the capacity feeds.
+
+    slack: None takes the tuned ``engine.push_slack`` (``repro.tune``) for
+    this backend and graph scale; ``n`` (global vertex count) keys that
+    lookup when the caller knows it.
     """
+    slack = _tune.resolve("engine.push_slack", explicit=slack, n=n)
     return max(1, min(m, int(m * switch_frac * slack)))
 
 
@@ -1248,7 +1266,7 @@ def reverse_graph(csr: CSR, att: ATT) -> ShardedGraph:
 def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                      prog: VertexProgram, state0: Any, frontier0: jnp.ndarray,
                      *, lanes: str, axis, max_iters: int, mode: str,
-                     switch_frac: float, push_edge_capacity,
+                     switch_frac: Optional[float], push_edge_capacity,
                      g_rev, return_stats: bool, placement: str = "sync",
                      sync_interval: int = 1, trace_len: int = 0):
     """Shared distributed wrapper: plan a sharded ExecutionCore and run the
@@ -1275,6 +1293,11 @@ def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
             raise ValueError(f"sync_interval must be >= 1, got {sync_interval}")
     axis = axis if axis is not None else mesh.axis_names[0]
     axes = _axes_list(axis)
+    # tuned-config funnel (DESIGN.md §18): a caller's explicit switch_frac /
+    # push_edge_capacity wins; None consults TUNED.json for this backend and
+    # graph scale, then the hand-picked default
+    switch_frac = _tune.resolve("engine.switch_frac",
+                                explicit=switch_frac, n=att.n_global)
     switch_count = max(1, int(att.n_global * switch_frac))
     state_leaves, state_def = jax.tree.flatten(state0)
     n_state = len(state_leaves)
@@ -1282,7 +1305,8 @@ def _run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
     m_fwd = g.edges_per_shard
     m_rev = g_rev.edges_per_shard if use_rev else 0
     if push_edge_capacity is None:
-        edge_cap = frontier_edge_capacity(m_fwd, switch_frac)
+        edge_cap = frontier_edge_capacity(m_fwd, switch_frac,
+                                          n=att.n_global)
     else:
         edge_cap = int(push_edge_capacity)
     compact = mode != "pull" and 0 < edge_cap < m_fwd
@@ -1420,7 +1444,7 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                     prog: VertexProgram, state0: Any, frontier0: jnp.ndarray,
                     *, axis: Optional[AxisName] = None, max_iters: int,
                     g_rev: Optional[ShardedGraph] = None, mode: str = "push",
-                    switch_frac: float = 1 / 32,
+                    switch_frac: Optional[float] = None,
                     push_edge_capacity: Optional[int] = None,
                     return_stats: bool = False, placement: str = "sync",
                     sync_interval: Optional[int] = None,
@@ -1434,6 +1458,9 @@ def run_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
       behavior), 'pull' (requires `g_rev`; every level gathers via dgas), or
       'auto' (push while the globally-psum'd frontier is below
       `switch_frac * n`, pull once it saturates — Beamer's heuristic).
+    switch_frac: the 'auto' switch threshold (and the capacity derivation's
+      frontier bound).  None resolves the tuned value for this backend and
+      graph scale, then the hand-picked 1/32 (``repro.tune``, DESIGN.md §18).
     placement: 'sync' (one global reduction per level) or 'async'
       (bounded-staleness pacing: each shard runs `sync_interval` local
       micro-steps per global check, deferring cross-shard messages into a
@@ -1483,7 +1510,7 @@ def run_batched_distributed(g: ShardedGraph, att: ATT, mesh: Mesh,
                             prog: VertexProgram, state0: Any,
                             frontier0: jnp.ndarray, *,
                             axis: Optional[AxisName] = None, max_iters: int,
-                            switch_frac: float = 1 / 32,
+                            switch_frac: Optional[float] = None,
                             push_edge_capacity: Optional[int] = None,
                             return_stats: bool = False,
                             placement: str = "sync",

@@ -92,6 +92,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import engine, traffic
+from .. import tune as _tune
 from .dgas import block_rule
 from .graph import CSR, GraphHandle, UpdateReport
 from ..obs import Histogram, Observability, get_registry
@@ -314,7 +315,8 @@ class ServiceStats:
 class GraphService:
     """Serve typed graph queries from one (mutable-by-epoch) graph.
 
-    batch_budget: lanes per micro-batch — the B the batched engine runs at.
+    batch_budget: lanes per micro-batch — the B the batched engine runs at
+      (None = the tuned lane budget for this backend/scale, repro.tune).
     cache_capacity: LRU entries; 0 disables caching.
     results_capacity: completed-but-unclaimed results kept for
       :meth:`result`; the oldest are dropped beyond this (a fire-and-forget
@@ -364,7 +366,7 @@ class GraphService:
     #: subtracts; ~0.3 tracks warmup -> steady-state within a few batches.
     COST_EWMA_ALPHA = 0.3
 
-    def __init__(self, csr, *, batch_budget: int = 32,
+    def __init__(self, csr, *, batch_budget: Optional[int] = None,
                  cache_capacity: int = 4096, results_capacity: int = 65536,
                  ppr_iters: int = 20, damping: float = 0.85,
                  mode: str = "auto", ppr_k_max: int = 64,
@@ -373,6 +375,11 @@ class GraphService:
                  placement: str = "sync",
                  sync_interval: Optional[int] = None,
                  cost_seed=None, obs: Optional[Observability] = None):
+        # tuned-config funnel (DESIGN.md §18): explicit batch_budget wins,
+        # None takes the tuned lane budget for this backend and graph scale
+        _n_rows = (csr.csr if isinstance(csr, GraphHandle) else csr).n_rows
+        batch_budget = int(_tune.resolve("service.batch_budget",
+                                         explicit=batch_budget, n=_n_rows))
         if batch_budget < 1:
             raise ValueError("batch_budget must be >= 1")
         if placement not in ("sync", "async"):
@@ -467,7 +474,9 @@ class GraphService:
         else:
             self._att = self._gsh = None
             m_per = -(-csr.nnz // self.stats.n_model_shards)
-        self._edge_cap = engine.frontier_edge_capacity(m_per, 1 / 32)
+        self._edge_cap = engine.frontier_edge_capacity(
+            m_per, _tune.resolve("engine.switch_frac", n=csr.n_rows),
+            n=csr.n_rows)
         self._m_per_shard = m_per
 
     # trace-safe: host-side ingest driver — the report's concrete partition

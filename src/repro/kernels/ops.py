@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .. import tune as _tune
 from ..core.graph import BBCSR
 from . import embedding_bag as _eb
 from . import flash_attention as _fa
@@ -50,9 +51,14 @@ def spmspv_dma(bb: BBCSR, x: jnp.ndarray, tile_active: jnp.ndarray, *,
 
 
 def segment_sum_sorted(data: jnp.ndarray, seg: jnp.ndarray, num_segments: int,
-                       *, block_n: int = 512,
+                       *, block_n: Optional[int] = None,
                        interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Sorted segment sum. Falls back to jax.ops.segment_sum above the VMEM cap."""
+    """Sorted segment sum. Falls back to jax.ops.segment_sum above the VMEM cap.
+
+    block_n: stream tile width; None takes the tuned value (repro.tune,
+    explicit kwarg wins)."""
+    block_n = int(_tune.resolve("kernels.segment_sum.block_n",
+                                explicit=block_n, n=num_segments))
     d = data.shape[-1]
     if 4 * num_segments * (d + block_n) > _SEGSUM_VMEM_LIMIT:
         return ref.segment_sum_ref(data, seg, num_segments)
@@ -93,9 +99,18 @@ def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray, bag: jnp.ndarray,
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
-                    scale: Optional[float] = None, block_q: int = 128,
-                    block_k: int = 128, interpret: Optional[bool] = None):
-    """Flash attention with GQA/causal/sliding-window. See flash_attention.py."""
+                    scale: Optional[float] = None, block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    """Flash attention with GQA/causal/sliding-window. See flash_attention.py.
+
+    block_q / block_k: tile shape; None takes the tuned values (repro.tune,
+    explicit kwargs win)."""
+    seq = q.shape[-2]
+    block_q = int(_tune.resolve("kernels.flash_attention.block_q",
+                                explicit=block_q, n=seq))
+    block_k = int(_tune.resolve("kernels.flash_attention.block_k",
+                                explicit=block_k, n=seq))
     return _fa.flash_attention_kernel_call(
         q, k, v, causal=causal, window=window, scale=scale,
         block_q=block_q, block_k=block_k, interpret=_interp(interpret))

@@ -1,0 +1,46 @@
+"""Kernel/engine autotuning: sweep, persist, resolve (DESIGN.md §18).
+
+The package closes ROADMAP open item 5's loop:
+
+* :mod:`repro.tune.space` — the canonical defaults + sweep grids for every
+  tunable constant (BBCSR tile geometry, switch_frac/push_slack, SSSP
+  delta scale, service lane budget);
+* :mod:`repro.tune.sweep` — the sweep harness (compiled best-of-N on a
+  real device; deterministic interpret-mode + jnp-oracle cost models on
+  CPU so CI stays green and reproducible) and the bench measurement lane
+  (:func:`kernel_rows`);
+* :mod:`repro.tune.resolve` — TUNED.json lookup at construction time with
+  the precedence **explicit kwarg > tuned entry (backend, nearest scale) >
+  default**, firing the ``tune.autotune_fallback`` obs counter on a miss;
+* ``python -m repro.tune --scale N`` — regenerate the committed TUNED.json.
+
+Import surface note: ``resolve``/``space`` are jax-free (usable from the
+lint lane and stdlib tooling); the sweep machinery imports jax lazily.
+"""
+from __future__ import annotations
+
+from . import space
+from .resolve import (SCALE_WINDOW, TUNED_PATH, clear_cache, current_backend,
+                      load_tuned, lookup, resolve, scale_of)
+
+__all__ = ["space", "resolve", "lookup", "load_tuned", "clear_cache",
+           "scale_of", "current_backend", "TUNED_PATH", "SCALE_WINDOW",
+           "autotune", "kernel_rows", "stream_peak_bytes_per_s"]
+
+
+def autotune(scale, **kw):
+    """Lazy forwarder to :func:`repro.tune.sweep.autotune` (jax)."""
+    from .sweep import autotune as _autotune
+    return _autotune(scale, **kw)
+
+
+def kernel_rows(scale, **kw):
+    """Lazy forwarder to :func:`repro.tune.sweep.kernel_rows` (jax)."""
+    from .sweep import kernel_rows as _kernel_rows
+    return _kernel_rows(scale, **kw)
+
+
+def stream_peak_bytes_per_s(**kw):
+    """Lazy forwarder to the STREAM-triad roofline anchor (jax)."""
+    from .sweep import stream_peak_bytes_per_s as _peak
+    return _peak(**kw)

@@ -1,0 +1,54 @@
+"""CLI: regenerate the committed TUNED.json.
+
+    PYTHONPATH=src python -m repro.tune --scale 7 --scale 12
+
+Sweeps each requested scale on the running backend and merges the entries
+into the output document: existing entries for *other* (backend, scale)
+pairs are preserved, so a TPU run appends hardware-true entries next to
+the committed CPU-model ones instead of clobbering them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .sweep import autotune
+from .resolve import TUNED_PATH, current_backend
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    ap.add_argument("--scale", type=int, action="append", required=True,
+                    help="graph scale(s) to tune at (repeatable)")
+    ap.add_argument("--out", default=TUNED_PATH, metavar="PATH",
+                    help="TUNED.json to merge into (default: repo root)")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="best-of-N repetitions for device timing")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.out) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        doc = {"version": 1, "tool": "python -m repro.tune", "entries": []}
+
+    backend = current_backend()
+    for scale in args.scale:
+        entry = autotune(scale, backend=backend, reps=args.reps)
+        doc["entries"] = [e for e in doc.get("entries", [])
+                          if (e.get("backend"), e.get("scale"))
+                          != (backend, scale)] + [entry]
+        print(f"tuned ({backend}, scale {scale}): "
+              + ", ".join(f"{k}={v}" for k, v in sorted(entry["params"].items())))
+    doc["entries"].sort(key=lambda e: (e.get("backend", ""),
+                                       e.get("scale", 0)))
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

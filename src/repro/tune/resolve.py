@@ -1,0 +1,136 @@
+"""Tuned-config resolution: TUNED.json lookup with explicit-kwarg precedence.
+
+``resolve(name, explicit=...)`` is the one funnel every tunable constant in
+`core/engine.py`, `core/service.py`, and `kernels/ops.py` goes through
+(machine-enforced by the `tuned-constants` lint rule).  Precedence:
+
+1. an **explicit kwarg** at the call site (``explicit`` is not None) always
+   wins — callers opt out of tuning per call;
+2. the committed **TUNED.json** entry for the running backend whose scale
+   is nearest the queried graph scale (within ``SCALE_WINDOW`` doublings —
+   a scale-7 tuning says nothing about a scale-30 graph);
+3. the hand-picked default from :data:`repro.tune.space.DEFAULTS`, in which
+   case the ``tune.autotune_fallback`` obs counter fires (the standing
+   guardrail: silent degradation to untuned behavior must be countable).
+
+Entries are written by ``python -m repro.tune`` (see autotune.py); the file
+schema is documented in DESIGN.md §18.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Any, Dict, Optional
+
+from .space import DEFAULTS
+
+__all__ = ["TUNED_PATH", "SCALE_WINDOW", "load_tuned", "lookup", "resolve",
+           "scale_of", "current_backend", "clear_cache"]
+
+#: Committed tuned-config document at the repo root (next to BENCH_*.json).
+TUNED_PATH = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "TUNED.json"))
+
+#: Max |graph scale - entry scale| (in log2 vertices) a tuned entry covers.
+SCALE_WINDOW = 3
+
+# (path -> (mtime, parsed doc or None)) — TUNED.json is read once per file
+# version; resolve() runs at every runner dispatch and must stay O(dict).
+_DOC_CACHE: Dict[str, Any] = {}
+
+
+def clear_cache() -> None:
+    """Drop the parsed-document cache (tests that swap TUNED files)."""
+    _DOC_CACHE.clear()
+
+
+def scale_of(n: int) -> int:
+    """Graph scale = round(log2 n): the granularity entries are keyed at."""
+    return int(round(math.log2(max(int(n), 2))))
+
+
+def current_backend() -> str:
+    """The running jax backend ('cpu', 'tpu', ...); 'cpu' without jax so
+    the resolver stays importable from jax-free tooling."""
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "cpu"
+
+
+def load_tuned(path: Optional[str] = None):
+    """Parsed TUNED.json (or None when absent/unreadable — never raises:
+    a missing tuning file degrades to defaults, counted, not a crash)."""
+    path = path or TUNED_PATH
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        return None
+    hit = _DOC_CACHE.get(path)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        doc = None
+    _DOC_CACHE[path] = (mtime, doc)
+    return doc
+
+
+def lookup(backend: Optional[str] = None, scale: Optional[int] = None, *,
+           path: Optional[str] = None) -> Optional[Dict[str, Any]]:
+    """The tuned entry for (backend, scale): same backend, nearest scale
+    within SCALE_WINDOW (ties break toward the smaller scale).  None when
+    nothing matches."""
+    doc = load_tuned(path)
+    if not doc:
+        return None
+    backend = backend if backend is not None else current_backend()
+    best = None
+    for entry in doc.get("entries", ()):
+        if entry.get("backend") != backend:
+            continue
+        if scale is None:
+            dist = 0
+        else:
+            dist = abs(int(entry.get("scale", 0)) - int(scale))
+            if dist > SCALE_WINDOW:
+                continue
+        key = (dist, int(entry.get("scale", 0)))
+        if best is None or key < best[0]:
+            best = (key, entry)
+    return best[1] if best else None
+
+
+def _fallback_counter():
+    # lazy: repro.obs is stdlib but keep import cost off the module path
+    from ..obs.metrics import get_registry
+    return get_registry().counter("tune.autotune_fallback")
+
+
+def resolve(name: str, *, explicit: Any = None, n: Optional[int] = None,
+            scale: Optional[int] = None, backend: Optional[str] = None,
+            path: Optional[str] = None) -> Any:
+    """Resolve tunable ``name`` ("<section>.<param>", see space.DEFAULTS).
+
+    explicit: the call site's kwarg — returned untouched when not None.
+    n / scale: graph size (scale wins when both given) keying the lookup.
+    backend / path: overrides for tests; default running backend + repo file.
+    """
+    if explicit is not None:
+        return explicit
+    if name not in DEFAULTS:
+        raise KeyError(f"unknown tunable {name!r} (add it to "
+                       "repro.tune.space.DEFAULTS)")
+    if scale is None and n is not None:
+        scale = scale_of(n)
+    entry = lookup(backend, scale, path=path)
+    if entry is not None:
+        params = entry.get("params", {})
+        if name in params:
+            return params[name]
+    _fallback_counter().inc()
+    return DEFAULTS[name]

@@ -1,0 +1,102 @@
+"""The tunable-parameter space: canonical defaults + sweep grids.
+
+This module is the single home of every hand-picked performance constant
+the engine/kernels/service historically inlined (ROADMAP open item 5).
+``DEFAULTS`` is the ground truth the resolver falls back to when no tuned
+entry matches (and what the `tuned-constants` lint rule forces the call
+sites to route through); ``GRIDS`` is what `repro.tune.sweep` sweeps.
+
+Stdlib-only on purpose: the resolver must stay importable from the lint
+lane and from jax-free tooling.
+"""
+from __future__ import annotations
+
+# Canonical hand-picked defaults, keyed "<section>.<param>".  These are the
+# exact values the code shipped with before the autotuner existed — the
+# resolver's fallback and the baseline the "tuned never slower than default"
+# bench gate compares against.
+DEFAULTS = {
+    # BBCSR tile geometry per kernel semiring family.  'add' is the MXU
+    # one-hot val*msg path (spmv_dma / spmspv_dma combine='add'); 'min' is
+    # the masked-select (min,+)/(max,+) distance path (bb.tile_cnt users).
+    "kernels.bbcsr_add.block_rows": 256,
+    "kernels.bbcsr_add.block_cols": 512,
+    "kernels.bbcsr_add.tile_nnz": 512,
+    "kernels.bbcsr_min.block_rows": 256,
+    "kernels.bbcsr_min.block_cols": 512,
+    "kernels.bbcsr_min.tile_nnz": 512,
+    # sorted segment-sum tile width (kernels/ops.segment_sum_sorted).
+    "kernels.segment_sum.block_n": 512,
+    # flash-attention tile shape (kernels/ops.flash_attention).
+    "kernels.flash_attention.block_q": 128,
+    "kernels.flash_attention.block_k": 128,
+    # distributed direction switch: push while |frontier| <= switch_frac*n
+    # (Beamer), and the frontier-proportional routing capacity derives from
+    # it (engine.frontier_edge_capacity: m * switch_frac * push_slack).
+    "engine.switch_frac": 1 / 32,
+    "engine.push_slack": 4.0,
+    # delta-stepping bucket width multiplier on the auto_delta histogram
+    # quantile (algorithms/sssp.auto_delta).
+    "sssp.delta_scale": 1.0,
+    # service micro-batch lane budget (GraphService batch_budget).
+    "service.batch_budget": 32,
+}
+
+# Sweep grids.  The incumbent default is always a candidate, and the
+# autotuner keeps it unless a challenger wins by > HYSTERESIS — tuned
+# configs should not churn on modeling noise, and a tie must never move
+# behavior away from the values the golden/bench baselines pinned.
+GRIDS = {
+    "kernels.bbcsr_add": {
+        "block_rows": (128, 256),
+        "block_cols": (256, 512),
+        "tile_nnz": (256, 512),
+    },
+    "kernels.bbcsr_min": {
+        "block_rows": (128, 256),
+        "block_cols": (256, 512),
+        "tile_nnz": (256, 512),
+    },
+    "engine": {"switch_frac": (1 / 64, 1 / 32, 1 / 16),
+               "push_slack": (2.0, 4.0, 8.0)},
+    "sssp": {"delta_scale": (0.5, 1.0, 2.0)},
+    "service": {"batch_budget": (16, 32, 64)},
+}
+
+#: A challenger must beat the incumbent default's modeled/measured cost by
+#: this fraction before it replaces it (anti-churn, see GRIDS note).
+HYSTERESIS = 0.10
+
+#: Per-core VMEM budget a kernel candidate's working set must fit (bytes).
+#: ~16 MiB/core on current TPUs; half is left for double buffering.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def bbcsr_vmem_bytes(block_rows: int, block_cols: int, tile_nnz: int) -> int:
+    """Modeled VMEM working set of one SpMV/SpMSpV grid step: the x block,
+    the accumulating y block, the (rows, cols, vals) tile streams, and the
+    one-hot scatter/gather operands the MXU path materializes."""
+    tile = tile_nnz * (4 + 4 + 4)                      # rows, cols, vals
+    vecs = (block_cols + block_rows) * 4               # x block + y block
+    onehot = tile_nnz * (block_cols + block_rows) * 4  # gather + scatter
+    return tile + vecs + onehot
+
+
+def kernel_grid(section: str):
+    """All candidate dicts for a kernel section, VMEM-filtered, default
+    first (the incumbent the hysteresis rule protects)."""
+    grid = GRIDS[section]
+    names = sorted(grid)
+    default = {n: DEFAULTS[f"{section}.{n}"] for n in names}
+    out = [default]
+    stack = [{}]
+    for name in names:
+        stack = [dict(c, **{name: v}) for c in stack for v in grid[name]]
+    for cand in stack:
+        if cand == default:
+            continue
+        if section.startswith("kernels.bbcsr") and \
+                bbcsr_vmem_bytes(**cand) > VMEM_BUDGET:
+            continue
+        out.append(cand)
+    return out

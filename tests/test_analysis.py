@@ -18,7 +18,8 @@ from repro.analysis import ALL_RULES, RULES_BY_ID, Analyzer, collect_files
 from repro.analysis.core import load_baseline, write_baseline
 from repro.analysis.rules import (CacheKeyRule, CompatBoundaryRule,
                                   HostSyncRule, MutableHandleRule,
-                                  ShardSafetyRule, SingleCoreRule)
+                                  ShardSafetyRule, SingleCoreRule,
+                                  TunedConstantsRule)
 
 ROOT = Path(__file__).resolve().parent.parent
 
@@ -382,6 +383,64 @@ def test_cache_key_true_negatives():
 
 
 # ---------------------------------------------------------------------------
+# tuned-constants
+# ---------------------------------------------------------------------------
+
+def test_tuned_constants_flags_literal_signature_default():
+    src = """
+        def run_distributed(g, att, mesh, prog, *, switch_frac=1 / 32):
+            return switch_frac
+    """
+    findings = run_rule(TunedConstantsRule(), src,
+                        path="src/repro/core/engine.py")
+    assert any("switch_frac" in f.message and "hard-codes" in f.message
+               for f in findings)
+
+
+def test_tuned_constants_flags_literal_funnel_call_args():
+    src = """
+        from .graph import to_bbcsr
+
+        def build(csr):
+            return to_bbcsr(csr, block_rows=256, tile_nnz=512)
+
+        def cap(m):
+            return frontier_edge_capacity(m, 1 / 32)
+    """
+    findings = run_rule(TunedConstantsRule(), src,
+                        path="src/repro/kernels/ops.py")
+    assert sum("to_bbcsr" in f.message for f in findings) == 2
+    assert any("frontier_edge_capacity" in f.message for f in findings)
+
+
+def test_tuned_constants_true_negatives():
+    good = """
+        from .. import tune as _tune
+        from .graph import to_bbcsr
+
+        def build(csr, block_rows=None, combine="add"):
+            block_rows = _tune.resolve("kernels.bbcsr_add.block_rows",
+                                       explicit=block_rows, n=csr.n_rows)
+            return to_bbcsr(csr, block_rows=block_rows)
+
+        def cap(m, switch_frac):
+            return frontier_edge_capacity(m, switch_frac)
+    """
+    assert run_rule(TunedConstantsRule(), good,
+                    path="src/repro/core/service.py") == []
+    # literals outside the three funnel modules are none of this rule's
+    # business (tests, benchmarks, kernel-internal defaults)
+    bad_elsewhere = """
+        def build(csr):
+            return to_bbcsr(csr, block_rows=256)
+    """
+    assert run_rule(TunedConstantsRule(), bad_elsewhere,
+                    path="src/repro/core/graph.py") == []
+    assert run_rule(TunedConstantsRule(), bad_elsewhere,
+                    path="tests/test_x.py") == []
+
+
+# ---------------------------------------------------------------------------
 # mutable-handle
 # ---------------------------------------------------------------------------
 
@@ -528,7 +587,7 @@ def test_cli_exit_codes_and_no_jax_import(tmp_path):
 def test_rule_registry_complete():
     assert set(RULES_BY_ID) == {"single-core", "compat-boundary",
                                 "host-sync", "shard-safety", "cache-key",
-                                "mutable-handle"}
+                                "mutable-handle", "tuned-constants"}
     for rule in ALL_RULES:
         assert rule.doc, rule.id
 

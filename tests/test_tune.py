@@ -1,0 +1,184 @@
+"""Autotuner + tuned-config resolution (DESIGN.md §18).
+
+Pins the four ISSUE-10 contracts: the CPU sweep is deterministic (committed
+TUNED.json is CI-diffable), lookup precedence is explicit kwarg > tuned
+entry > default, the `tune.autotune_fallback` counter fires exactly on a
+miss, and a tuned kernel config's outputs are bit-identical to the default
+config's on the golden core grid.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.core import engine, rmat
+from repro.kernels import ops
+from repro.obs import get_registry
+
+G = rmat(7, 8, seed=11)  # the golden core grid graph
+
+_TILE = ("block_cols", "block_rows", "tile_nnz")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_doc_cache():
+    tune.clear_cache()
+    yield
+    tune.clear_cache()
+
+
+def _write_tuned(path, entries):
+    path.write_text(json.dumps(
+        {"version": 1, "tool": "test", "entries": entries}))
+    return str(path)
+
+
+# ---------------------------------------------------------------------------
+# Determinism of the CPU sweep
+# ---------------------------------------------------------------------------
+
+def test_autotune_cpu_deterministic():
+    e1 = tune.autotune(6, backend="cpu", reps=1)
+    e2 = tune.autotune(6, backend="cpu", reps=2)  # reps must not matter on cpu
+    assert e1 == e2
+    assert e1["backend"] == "cpu" and e1["scale"] == 6
+    # entries are complete: every tunable present, so a matched entry never
+    # has holes (the fallback counter means "no entry", not "missing param")
+    assert set(e1["params"]) == set(tune.space.DEFAULTS)
+
+
+def test_committed_tuned_json_matches_regeneration():
+    """The committed file must be what `python -m repro.tune` would write —
+    a stale TUNED.json silently pins yesterday's winners."""
+    doc = tune.load_tuned()
+    assert doc is not None, "TUNED.json missing at repo root"
+    committed = {(e["backend"], e["scale"]): e["params"]
+                 for e in doc["entries"]}
+    if ("cpu", 7) in committed:
+        fresh = tune.autotune(7, backend="cpu", reps=1)
+        assert committed[("cpu", 7)] == fresh["params"]
+
+
+# ---------------------------------------------------------------------------
+# Lookup precedence: explicit kwarg > TUNED.json > default
+# ---------------------------------------------------------------------------
+
+def test_resolve_precedence(tmp_path):
+    p = _write_tuned(tmp_path / "TUNED.json", [
+        {"backend": "cpu", "scale": 7,
+         "params": {"engine.switch_frac": 0.25}},
+        {"backend": "cpu", "scale": 12,
+         "params": {"engine.switch_frac": 0.125}},
+    ])
+    # explicit kwarg always wins, even over a matching entry
+    assert tune.resolve("engine.switch_frac", explicit=0.5, n=128,
+                        backend="cpu", path=p) == 0.5
+    # tuned entry: nearest scale within the window
+    assert tune.resolve("engine.switch_frac", n=128, backend="cpu",
+                        path=p) == 0.25
+    assert tune.resolve("engine.switch_frac", scale=11, backend="cpu",
+                        path=p) == 0.125
+    # outside SCALE_WINDOW of every entry -> hand-picked default
+    assert tune.resolve("engine.switch_frac", scale=30, backend="cpu",
+                        path=p) == tune.space.DEFAULTS["engine.switch_frac"]
+    # unknown tunables are a programming error, not a silent default
+    with pytest.raises(KeyError):
+        tune.resolve("engine.no_such_knob", path=p)
+
+
+def test_resolve_scale_tie_breaks_small_and_backend_filters(tmp_path):
+    p = _write_tuned(tmp_path / "TUNED.json", [
+        {"backend": "cpu", "scale": 6, "params": {"sssp.delta_scale": 6.0}},
+        {"backend": "cpu", "scale": 10, "params": {"sssp.delta_scale": 10.0}},
+        {"backend": "tpu", "scale": 8, "params": {"sssp.delta_scale": 99.0}},
+    ])
+    # scale 8 is equidistant from 6 and 10: the smaller scale wins the tie
+    assert tune.resolve("sssp.delta_scale", scale=8, backend="cpu",
+                        path=p) == 6.0
+    # entries for another backend never leak across
+    assert tune.resolve("sssp.delta_scale", scale=8, backend="rocm",
+                        path=p) == tune.space.DEFAULTS["sssp.delta_scale"]
+
+
+# ---------------------------------------------------------------------------
+# Fallback counter (standing guardrail: degradation must be countable)
+# ---------------------------------------------------------------------------
+
+def test_autotune_fallback_counter_fires_on_miss(tmp_path):
+    counter = get_registry().counter("tune.autotune_fallback")
+    p = _write_tuned(tmp_path / "TUNED.json", [
+        {"backend": "cpu", "scale": 7,
+         "params": {"engine.switch_frac": 0.25}},
+    ])
+    before = counter.value
+    # hit: no fire
+    assert tune.resolve("engine.switch_frac", n=G.n_rows, backend="cpu",
+                        path=p) == 0.25
+    assert counter.value == before
+    # miss (no entry for this backend): default + exactly one fire
+    assert tune.resolve("engine.switch_frac", n=G.n_rows, backend="tpu",
+                        path=p) == tune.space.DEFAULTS["engine.switch_frac"]
+    assert counter.value == before + 1
+    # miss (file absent): same degradation path
+    tune.resolve("engine.switch_frac", n=G.n_rows, backend="cpu",
+                 path=str(tmp_path / "nope.json"))
+    assert counter.value == before + 2
+    # explicit kwarg is an opt-out, not a degradation: no fire
+    tune.resolve("engine.switch_frac", explicit=0.5,
+                 path=str(tmp_path / "nope.json"))
+    assert counter.value == before + 2
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity of tuned vs default kernel configs on the golden grid
+# ---------------------------------------------------------------------------
+
+def test_tuned_kernel_configs_bit_identical_on_golden_grid():
+    from repro.tune.sweep import _bit_identical
+    for section, combine in (("kernels.bbcsr_add", "add"),
+                             ("kernels.bbcsr_min", "min")):
+        default = {k: tune.space.DEFAULTS[f"{section}.{k}"] for k in _TILE}
+        tuned = {k: tune.resolve(f"{section}.{k}", n=G.n_rows)
+                 for k in _TILE}
+        assert _bit_identical(G, tuned, default, combine), \
+            f"tuned {section} config {tuned} not bit-identical to default"
+
+
+def test_build_pull_operand_routes_through_resolver(tmp_path):
+    p = _write_tuned(tmp_path / "TUNED.json", [])
+    tuned = {k: tune.resolve(f"kernels.bbcsr_add.{k}", n=G.n_rows)
+             for k in _TILE}
+    bb = engine.build_pull_operand(G, combine="add")
+    assert (bb.block_cols, bb.block_rows, bb.tile_nnz) == \
+        (tuned["block_cols"], tuned["block_rows"], tuned["tile_nnz"])
+    # explicit tile kwargs still win over the tuned entry
+    bb_d = engine.build_pull_operand(G, combine="add", block_rows=256,
+                                     block_cols=512, tile_nnz=512)
+    assert (bb_d.block_rows, bb_d.block_cols, bb_d.tile_nnz) == (256, 512, 512)
+    # and the two operands compute the same spmv bit-for-bit (golden grid)
+    x = jnp.asarray(np.random.default_rng(0).random(G.n_rows, np.float32))
+    np.testing.assert_array_equal(np.asarray(ops.spmv_dma(bb, x)),
+                                  np.asarray(ops.spmv_dma(bb_d, x)))
+
+
+# ---------------------------------------------------------------------------
+# The bench measurement lane
+# ---------------------------------------------------------------------------
+
+def test_kernel_rows_shape_and_cpu_gate_metric():
+    rows = tune.kernel_rows(7, reps=1)
+    by = {r["name"]: r for r in rows}
+    assert {"kernels/bbcsr_add/default", "kernels/bbcsr_add/tuned",
+            "kernels/bbcsr_min/default", "kernels/bbcsr_min/tuned",
+            "kernels/flash_attn_oracle_b4h8s1024",
+            "kernels/embedding_bag_oracle_8k_lookups"} <= set(by)
+    for r in rows:
+        assert np.isfinite(r["bytes_per_s"]) and r["bytes_per_s"] > 0
+        assert r["bytes_model"] > 0 and r["us"] > 0
+    # what the bench gates on cpu: the tuned config's modeled traffic is
+    # never worse than the hand-picked default's (hysteresis guarantees it)
+    for kern in ("bbcsr_add", "bbcsr_min"):
+        assert by[f"kernels/{kern}/tuned"]["bytes_model"] <= \
+            by[f"kernels/{kern}/default"]["bytes_model"]
